@@ -1,0 +1,19 @@
+"""Shared helpers for the benchmark suite."""
+
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, reps: int = 3, **kw):
+    """(result, us_per_call) with one warmup."""
+    fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / reps
+    return out, dt * 1e6
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

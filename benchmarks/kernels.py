@@ -1,0 +1,44 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU — correctness-path
+timings for CI regression; real TPU numbers come from the roofline model).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.sample_attr.ops import sample_attr
+
+
+def run(verbose: bool = True) -> list[str]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    ids = jnp.asarray(rng.integers(0, 64, 65536).astype(np.int32))
+    pw = jnp.asarray(rng.random(65536).astype(np.float32))
+    _, us = timed(lambda: sample_attr(ids, pw, 64)[0].block_until_ready())
+    rows.append(("kernels/sample_attr/64k_samples", us,
+                 "interpret=cpu 64 regions"))
+
+    q = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    _, us = timed(lambda: flash_attention(
+        q, q, q, causal=True, block_q=128, block_kv=128,
+        interpret=True).block_until_ready())
+    rows.append(("kernels/flash_attention/512seq", us, "interpret=cpu"))
+
+    x = jnp.asarray(rng.standard_normal((2048, 1024)), jnp.float32)
+    s = jnp.ones((1024,), jnp.float32)
+    _, us = timed(lambda: rmsnorm(x, s, interpret=True).block_until_ready())
+    rows.append(("kernels/rmsnorm/2048x1024", us, "interpret=cpu"))
+
+    if verbose:
+        for n, us, d in rows:
+            print(f"{n:40s} {us:10.1f}us {d}")
+    return [f"{n},{us:.1f},{d}" for n, us, d in rows]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,111 @@
+"""Paper §7.1 / Table 2: hotspot energy optimization of the dominant region.
+
+The paper profiles k-means, finds one basic block (euclidean-distance
+loop) taking 56% of runtime, and tunes {threads × compiler hints} per
+objective. TPU analogue: ALEA profiles a qwen3-1.7b train step, identifies
+the dominant region (attention score compute), and tunes:
+
+  * chips (1/2/4/8 — the thread-count/concurrency-throttling analogue),
+  * impl hints: naive attention vs Pallas flash attention (the unroll/
+    vectorize analogue: ~2× fewer FLOPs via causal block skip, ~S× less
+    HBM traffic via no materialized scores).
+
+Reported exactly like Table 2: time / energy / power / ED / ED² per
+(chips × impl), for the dominant region and the whole program; then the
+whole-program saving of the energy-optimal configuration vs the
+max-performance baseline (paper: 37% at a 20% performance loss).
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config
+from repro.core import (EnergyProfiler, ImplVariant, ground_truth,
+                        synthesize)
+from repro.core.energy_opt import evaluate
+from repro.core.power_model import PowerModel
+from repro.roofline.cost_model import step_region_costs
+
+# TPU-scale concurrency-throttling range: the paper's 1-8 threads saturate
+# one socket's DRAM; a TP/DP submesh saturates ICI at tens of chips, so the
+# energy U-shape lives at 4-64 chips here.
+CHIPS = (4, 8, 16, 32, 64)
+IMPLS = {
+    "naive": ImplVariant("naive", flop_mult=1.0, byte_mult=1.0,
+                         efficiency=0.55),
+    "flash": ImplVariant("flash", flop_mult=0.55, byte_mult=0.10,
+                         efficiency=0.85),
+}
+
+
+def run(verbose: bool = True) -> list[str]:
+    cfg = get_config("qwen3-1.7b")
+    shape = SHAPES["train_4k"]
+    costs = step_region_costs(cfg, shape, chips=8)
+    pm = PowerModel()
+    rows = []
+
+    # 1) ALEA finds the hotspot.
+    tl = synthesize(costs, steps=200, chips=8, seed=0)
+    prof = EnergyProfiler(period=10e-3)
+    est = prof.profile_timeline(tl, sensor="rapl")
+    hot = est.dominant(1)[0]
+    frac = hot.t_hat / est.t_exec
+    if verbose:
+        print(f"hotspot: {hot.name} ({frac*100:.0f}% of step time, "
+              f"{hot.pow_hat:.0f}W)")
+    rows.append(("kmeans_hotspot/hotspot", 0.0,
+                 f"{hot.name} frac={frac*100:.0f}% pow={hot.pow_hat:.0f}W"))
+
+    hot_cost = next(c for c in costs if c.name == hot.name)
+    other_costs = [c for c in costs if c.name != hot.name]
+
+    # 2) Table-2 grid for the dominant region and the whole program.
+    table = {}
+    for impl_name, impl in IMPLS.items():
+        for chips in CHIPS:
+            t_hot, e_hot = evaluate(hot_cost, freq_scale=1.0, chips=chips,
+                                    impl=impl, model=pm)
+            t_rest = e_rest = 0.0
+            for c in other_costs:
+                t, e = evaluate(c, freq_scale=1.0, chips=chips,
+                                impl=ImplVariant("default"), model=pm)
+                t_rest += t
+                e_rest += e
+            prog_t, prog_e = t_hot + t_rest, e_hot + e_rest
+            table[(impl_name, chips)] = (t_hot, e_hot, prog_t, prog_e)
+            d = (f"bb: t={t_hot*1e3:.1f}ms E={e_hot:.1f}J "
+                 f"P={e_hot/t_hot/chips:.0f}W ED={e_hot*t_hot:.2f} "
+                 f"ED2={e_hot*t_hot*t_hot:.3f} | prog: t={prog_t*1e3:.1f}ms "
+                 f"E={prog_e:.1f}J")
+            rows.append((f"kmeans_hotspot/{impl_name}/{chips}chips",
+                         t_hot * 1e6, d))
+            if verbose:
+                print(f"{impl_name:6s} chips={chips}  {d}")
+
+    # 3) Optima per objective (paper: they differ).
+    def best(key):
+        return min(table, key=lambda k: key(*table[k]))
+
+    b_time = best(lambda th, eh, pt, pe: pt)
+    b_ed = best(lambda th, eh, pt, pe: pe * pt)
+    base_t, base_e = table[b_time][2], table[b_time][3]
+    # Energy optimum under a bounded slowdown (the paper's energy-optimal
+    # config costs 20% performance; unbounded throttling is uninteresting).
+    feasible = {k: v for k, v in table.items() if v[2] <= 2.0 * base_t}
+    b_energy = min(feasible, key=lambda k: feasible[k][3])
+    opt_t, opt_e = table[b_energy][2], table[b_energy][3]
+    saving = 1 - opt_e / base_e
+    slowdown = opt_t / base_t - 1
+    summary = (f"time-opt={b_time} energy-opt={b_energy} ED-opt={b_ed}; "
+               f"energy-optimal saves {saving*100:.0f}% energy at "
+               f"{slowdown*100:+.0f}% time vs max-perf baseline "
+               f"(paper: 37% at +20%)")
+    rows.append(("kmeans_hotspot/summary", 0.0, summary))
+    if verbose:
+        print(summary)
+    return [f"{n},{us:.1f},{d}" for n, us, d in rows]
+
+
+if __name__ == "__main__":
+    run()

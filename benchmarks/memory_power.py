@@ -1,0 +1,79 @@
+"""Paper §6 (Table 1, Figures 8/9): power vs memory-access intensity.
+
+TPU-native recreation of the BBA microbenchmark family as fixed-duration
+regions with explicit activity levels (the paper builds each variant from
+BBA's instruction groups; we build each from its resource utilizations):
+
+  Nop       — busy-wait: no MXU, no HBM            u=(0.02, 0.01)
+  NoMem     — MXU-only (VREG/VMEM-resident FLOPs)  u=(0.90, 0.02)
+  Mem(VMEM) — working set resident in VMEM         u=(0.05, 0.20)
+  Mem(HBM)  — streaming from HBM                   u=(0.05, 0.90)
+  BBA       — fused compute+memory, SAME duration as NoMem because the
+              pipeline hides the loads (paper's pipelining effect)
+
+Findings reproduced:
+  (1) memory activity alone raises package power substantially with zero
+      compute — the paper's core §6 effect;
+  (1') TPU delta (DESIGN.md §2): unlike the paper's CPUs, MXU activity
+      also raises power strongly — both terms are first-class here;
+  (2) pipelining: E(BBA) ≪ E(NoMem)+E(Mem) → EPI-additive models
+      overestimate ~1.3–1.5×;
+  (3) §6.2 contention: package power of memory-bound regions grows
+      superlinearly with co-running workers.
+"""
+
+from __future__ import annotations
+
+from repro.core.power_model import PowerModel
+
+DUR = 10e-3     # fixed region duration [s]
+
+VARIANTS = {
+    "Nop":       (0.02, 0.01, DUR),
+    "NoMem":     (0.90, 0.02, DUR),
+    "Mem(VMEM)": (0.05, 0.20, DUR),
+    "Mem(HBM)":  (0.05, 0.90, DUR),
+    "BBA":       (0.90, 0.90, DUR),      # pipelined union, same duration
+}
+
+
+def run(verbose: bool = True) -> list[str]:
+    pm = PowerModel()
+    rows = []
+    results = {}
+    for name, (uf, um, dur) in VARIANTS.items():
+        pw = float(pm.power(uf, um, 0.0))
+        e = pw * dur
+        results[name] = (dur, pw, e)
+        derived = f"power={pw:.1f}W time={dur*1e3:.2f}ms energy={e:.2f}J"
+        rows.append((f"memory_power/{name}", dur * 1e6, derived))
+        if verbose:
+            print(f"{'memory_power/' + name:28s} {derived}")
+
+    p_nop = results["Nop"][1]
+    f1 = (f"memory-only adds {results['Mem(HBM)'][1]-p_nop:.1f}W over idle; "
+          f"compute-only adds {results['NoMem'][1]-p_nop:.1f}W "
+          f"(TPU delta: MXU is also a first-class power term)")
+    rows.append(("memory_power/activity_effect", 0.0, f1))
+
+    e_bba = results["BBA"][2]
+    e_sum = results["NoMem"][2] + results["Mem(HBM)"][2]
+    f2 = f"EPI-additive overestimate: {e_sum/e_bba:.2f}x (paper: 1.29-1.5x)"
+    rows.append(("memory_power/pipelining_effect", 0.0, f2))
+
+    workers_rows = []
+    for w in (1, 2, 4, 8):
+        pw = float(pm.power(0.05, 0.9, 0.0, mem_contention=w - 1.0))
+        workers_rows.append(f"{w}w={pw:.1f}W")
+    f3 = "mem-region package power: " + " ".join(workers_rows)
+    rows.append(("memory_power/contention", 0.0, f3))
+
+    if verbose:
+        print(f1)
+        print(f2)
+        print(f3)
+    return [f"{n},{us:.1f},{d}" for n, us, d in rows]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,78 @@
+"""Paper §7.2 / Table 3: fine-grain per-region energy optimization.
+
+The paper tunes six dominant ocean_cp basic blocks independently over
+{frequency × threads × compiler optimizations} and shows (a) the optimal
+knobs DIFFER per block, (b) whole-program energy drops 33% vs the
+max-performance baseline. TPU analogue: the six dominant regions of a
+zamba2-1.2b train step, tuned over {DVFS scale × chips × impl variants}.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config
+from repro.core import EnergyProfiler, ImplVariant, KnobSpace, synthesize
+from repro.core.energy_opt import baseline_plan, optimize_regions
+from repro.core.power_model import PowerModel
+from repro.roofline.cost_model import step_region_costs
+
+IMPL_SPACE = {
+    # attention regions get the flash variant; ssm scan gets a fused-chunk
+    # variant; everything else chooses remat-off/on (bytes vs flops trade).
+    "attn_score": [ImplVariant("default"),
+                   ImplVariant("flash", flop_mult=0.55, byte_mult=0.10)],
+    "ssm_scan": [ImplVariant("default"),
+                 ImplVariant("fused_chunk", byte_mult=0.5, efficiency=0.9)],
+    "ffn": [ImplVariant("default"),
+            ImplVariant("no_remat", flop_mult=0.67, byte_mult=1.3)],
+}
+
+
+def run(verbose: bool = True) -> list[str]:
+    cfg = get_config("zamba2-1.2b")
+    shape = SHAPES["train_4k"]
+    base_chips = 8
+    costs = step_region_costs(cfg, shape, chips=base_chips)
+    pm = PowerModel()
+    rows = []
+
+    # ALEA surfaces the dominant regions.
+    tl = synthesize(costs, steps=150, chips=base_chips, seed=0)
+    prof = EnergyProfiler(period=10e-3)
+    est = prof.profile_timeline(tl, sensor="rapl")
+    top = [r.name for r in est.dominant(6)]
+    top_costs = [c for c in costs if c.name in top]
+    if verbose:
+        print("dominant regions:", ", ".join(top))
+
+    space = KnobSpace(freq_scales=(1.0, 0.94, 0.88, 0.81),
+                      chip_counts=(1, 2, 4, 8))
+    base = baseline_plan(top_costs, chips=base_chips, model=pm)
+    opt = optimize_regions(top_costs, space, objective="energy", model=pm,
+                           impl_space=IMPL_SPACE, baseline_chips=base_chips,
+                           max_slowdown=2.0)
+
+    for b, o in zip(base.plans, opt.plans):
+        save = 1 - o.energy / b.energy
+        d = (f"base: t={b.time*1e3:.2f}ms E={b.energy:.2f}J → opt: "
+             f"t={o.time*1e3:.2f}ms E={o.energy:.2f}J "
+             f"[freq={o.freq_scale:.2f} chips={o.chips} impl={o.impl}] "
+             f"save={save*100:.0f}%")
+        rows.append((f"ocean_finegrain/{b.region}", b.time * 1e6, d))
+        if verbose:
+            print(f"{b.region:14s} {d}")
+
+    saving = 1 - opt.energy / base.energy
+    distinct = len({(p.freq_scale, p.chips, p.impl) for p in opt.plans})
+    summary = (f"whole-program energy saving {saving*100:.0f}% "
+               f"(paper: 33%); {distinct} distinct per-region knob settings "
+               f"across {len(opt.plans)} regions — fine-grain attribution "
+               f"is what exposes them")
+    rows.append(("ocean_finegrain/summary", 0.0, summary))
+    if verbose:
+        print(summary)
+    return [f"{n},{us:.1f},{d}" for n, us, d in rows]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Roofline rows (§Dry-run
+artifacts) are generated separately by repro.launch.dryrun (device-count
+env must be set before jax init) and aggregated in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (kernels, kmeans_hotspot, memory_power,
+                            ocean_finegrain, sampling_period, validation)
+    mods = [
+        ("sampling_period (Fig 4/5)", sampling_period),
+        ("validation (Fig 6 / §5)", validation),
+        ("memory_power (Table 1, Fig 8/9, §6)", memory_power),
+        ("kmeans_hotspot (Table 2, §7.1)", kmeans_hotspot),
+        ("ocean_finegrain (Table 3, §7.2)", ocean_finegrain),
+        ("kernels (Pallas microbench)", kernels),
+    ]
+    all_rows = ["name,us_per_call,derived"]
+    for title, mod in mods:
+        print(f"\n##### {title}", file=sys.stderr)
+        all_rows += mod.run(verbose=False)
+    print("\n".join(all_rows))
+
+
+if __name__ == "__main__":
+    main()

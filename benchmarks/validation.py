@@ -1,0 +1,89 @@
+"""Paper §5 / Figure 6: ALEA accuracy validation across the benchmark suite.
+
+The paper validates on 14 SPEC/PARSEC/Rodinia benchmarks; our suite is the
+10 assigned architectures (timelines synthesized from the analytic
+per-region cost model at the production chip count). For each arch:
+
+  * sequential run (1 worker): per-region time/energy error vs exact
+    ground truth + whole-program error + 95%-CI coverage;
+  * parallel run (4 workers, §4.4): combination-level attribution error.
+
+Paper targets: coarse-grain mean energy error 1.4–1.9%, fine-grain
+1.6–3.5%, ~99% of measurements within 95% CIs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core import EnergyProfiler, ground_truth, synthesize, validate
+from repro.core.estimator import estimate_regions
+from repro.roofline.cost_model import step_region_costs
+
+
+def run(verbose: bool = True, steps: int | None = None) -> list[str]:
+    period = 10e-3
+    rows = []
+    seq_t, seq_e, par_e, cov, frac = [], [], [], [], []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        # Deploy-realistic chip count: small models train on few chips
+        # (which also keeps region spans resolvable, as in the paper's
+        # single-node benchmarks).
+        chips = int(np.clip(cfg.param_count() / 50e6, 8, 256))
+        costs = step_region_costs(cfg, SHAPES["train_4k"], chips=chips)
+        # Run long enough for ~20k samples (the paper repeats runs until
+        # CIs tighten to 5%); one synthesized step probes the step time.
+        probe = synthesize(costs, steps=1, chips=chips, seed=0)
+        n_steps = steps or int(np.clip(200.0 / probe.t_exec, 50, 20000))
+        tl = synthesize(costs, steps=n_steps, chips=chips,
+                        seed=hash(arch) % 999)
+        gt = ground_truth(tl)
+        # §5 protocol: validate only regions direct measurement resolves —
+        # contiguous span (invocation run per step) ≥ sampling period.
+        spans = {name: v["time"] / n_steps for name, v in gt.items()}
+        prof = EnergyProfiler(period=period, seed=1)
+        est = prof.profile_timeline(tl, sensor="rapl")
+        res = validate(est, gt, spans=spans, min_span=period)
+        seq_t.append(res.mean_time_err)
+        seq_e.append(res.mean_energy_err)
+        cov.append(res.ci_energy_coverage)
+        frac.append(res.measured_time_fraction)
+
+        # Parallel (§4.4): 4 workers with per-worker latency jitter.
+        tls = [synthesize(costs, steps=max(n_steps // 4, 10), chips=chips,
+                          seed=s) for s in range(4)]
+        est_c, combos = prof.profile_multiworker(tls, sensor="instant")
+        # whole-run energy conservation through combinations:
+        gt_total = sum(sum(v["energy"] for v in ground_truth(t).values())
+                       for t in tls) / 4
+        est_total = est_c.total_energy / 4
+        par_err = abs(est_total - gt_total * (est_c.t_exec * 4 / sum(
+            t.t_exec for t in tls))) / max(gt_total, 1e-9)
+        par_e.append(min(par_err, 1.0))
+
+        name = f"validation/{arch}"
+        derived = (f"time_err={res.mean_time_err*100:.2f}%"
+                   f" energy_err={res.mean_energy_err*100:.2f}%"
+                   f" whole={res.whole_energy_err*100:.2f}%"
+                   f" ci_cov={res.ci_energy_coverage*100:.0f}%"
+                   f" measured={res.measured_time_fraction*100:.0f}%"
+                   f" par_energy_err={par_e[-1]*100:.2f}%")
+        rows.append((name, tl.t_exec * 1e6 / n_steps, derived))
+        if verbose:
+            print(f"{name:36s} {derived}")
+
+    summary = (f"MEAN: time {np.mean(seq_t)*100:.2f}% "
+               f"energy {np.mean(seq_e)*100:.2f}% "
+               f"(paper: 1.3-3.5%) ci_cov {np.mean(cov)*100:.0f}% "
+               f"measured {np.mean(frac)*100:.0f}% (paper: 81%)")
+    rows.append(("validation/MEAN", 0.0, summary))
+    if verbose:
+        print(summary)
+    return [f"{n},{us:.1f},{d}" for n, us, d in rows]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""§Perf hillclimb driver: lower variant configs for the three chosen
+cells and print term deltas vs the sweep baselines.
+
+    PYTHONPATH=src python scripts_hillclimb.py <cell> <variant>
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+import sys
+
+from repro.configs.registry import get_config
+from repro.launch.dryrun import lower_cell
+
+CELLS = {
+    "moe-train-bf16g": ("qwen3-moe-30b-a3b", "train_4k",
+                        dict(bf16_gather=True)),
+    "sc2-train-bf16g": ("starcoder2-15b", "train_4k",
+                        dict(bf16_gather=True)),
+    "yi-decode-grouped": ("yi-6b", "decode_32k",
+                          dict(decode_grouped=True)),
+    "yi-decode-grouped-f8": ("yi-6b", "decode_32k",
+                             dict(decode_grouped=True,
+                                  kv_cache_dtype="float8_e4m3fn")),
+    "moe-train-nosp": ("qwen3-moe-30b-a3b", "train_4k", dict()),
+    "xlstm-train-bf16g": ("xlstm-125m", "train_4k", dict(bf16_gather=True)),
+    "stablelm-decode-f8": ("stablelm-3b", "decode_32k",
+                           dict(kv_cache_dtype="float8_e4m3fn")),
+    "yi-decode-f8": ("yi-6b", "decode_32k",
+                     dict(decode_grouped=True,
+                          kv_cache_dtype="float8_e4m3fn")),
+    "xlstm-train-nosp": ("xlstm-125m", "train_4k", dict(disable_sp=True)),
+    "moe-train-bf16g-nosp": ("qwen3-moe-30b-a3b", "train_4k",
+                             dict(bf16_gather=True, disable_sp=True)),
+}
+
+name = sys.argv[1]
+arch, shape, kw = CELLS[name]
+cfg = get_config(arch).replace(**kw)
+row, _ = lower_cell(arch, shape, multi_pod=False, cfg_override=cfg)
+out = f"results/dryrun/VARIANT__{name}.json"
+with open(out, "w") as f:
+    json.dump(row, f, indent=1, default=str)
+print(f"[VARIANT {name}] dominant={row['dominant']} "
+      f"frac={row['roofline_fraction']:.3f}")
+print(f"  compute {row['t_compute_s']*1e3:.2f}ms "
+      f"memory {row['t_memory_s']*1e3:.2f}ms "
+      f"collective {row['t_collective_s']*1e3:.2f}ms")
+print("  collectives:", {k: round(v/2**30, 2)
+                         for k, v in row["collectives"].items() if v})

@@ -1,0 +1,34 @@
+"""ALEA core: fine-grain energy profiling with region (basic-block) sampling.
+
+The paper's primary contribution, adapted TPU-native: systematic sampling of
+(currently-executing region, power sensor reading) pairs + a probabilistic
+model that attributes execution time and energy to regions far finer than
+the sensor's sampling period.
+"""
+
+from repro.core.attribution import AttributionReport, ValidationResult, validate
+from repro.core.energy_opt import (ImplVariant, KnobSpace, ProgramPlan,
+                                   RegionPlan, baseline_plan, optimize_regions)
+from repro.core.estimator import (EstimateSet, RegionEstimate,
+                                  aggregate_samples_np, estimate_combinations,
+                                  estimate_regions, z_quantile)
+from repro.core.power_model import (TPU_V5E, HardwareSpec, PowerModel,
+                                    PowerModelParams)
+from repro.core.profiler import EnergyProfiler, HostSession
+from repro.core.regions import profiling_session, region, registry
+from repro.core.sampler import (HostSampler, RegionMarker, SampleStream,
+                                sample_timeline)
+from repro.core.timeline import RegionCost, Timeline, ground_truth, synthesize
+
+__all__ = [
+    "AttributionReport", "ValidationResult", "validate",
+    "ImplVariant", "KnobSpace", "ProgramPlan", "RegionPlan",
+    "baseline_plan", "optimize_regions",
+    "EstimateSet", "RegionEstimate", "aggregate_samples_np",
+    "estimate_combinations", "estimate_regions", "z_quantile",
+    "TPU_V5E", "HardwareSpec", "PowerModel", "PowerModelParams",
+    "EnergyProfiler", "HostSession",
+    "profiling_session", "region", "registry",
+    "HostSampler", "RegionMarker", "SampleStream", "sample_timeline",
+    "RegionCost", "Timeline", "ground_truth", "synthesize",
+]

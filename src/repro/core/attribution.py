@@ -1,0 +1,118 @@
+"""Attribution reports: per-region energy tables + validation vs ground truth."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import numpy as np
+
+from repro.core.estimator import EstimateSet
+
+__all__ = ["AttributionReport", "ValidationResult", "validate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttributionReport:
+    """Human/CSV rendering of an EstimateSet."""
+
+    estimates: EstimateSet
+
+    def table(self, top: int | None = None) -> str:
+        rows = sorted(self.estimates.regions, key=lambda r: -r.e_hat)
+        if top:
+            rows = rows[:top]
+        hdr = (f"{'region':28s} {'n':>8s} {'t̂ [s]':>10s} {'t CI±':>8s} "
+               f"{'p̂ow [W]':>9s} {'ê [J]':>11s} {'e CI':>21s}")
+        lines = [hdr, "-" * len(hdr)]
+        for r in rows:
+            ci = f"[{r.e_lo:9.2f},{r.e_hi:9.2f}]"
+            lines.append(
+                f"{r.name:28s} {r.n_samples:8d} {r.t_hat:10.4f} "
+                f"{r.t_ci_halfwidth:8.4f} {r.pow_hat:9.2f} {r.e_hat:11.2f} "
+                f"{ci:>21s}")
+        lines.append(f"{'TOTAL':28s} {self.estimates.n_total:8d} "
+                     f"{self.estimates.total_time:10.4f} {'':8s} {'':9s} "
+                     f"{self.estimates.total_energy:11.2f}")
+        return "\n".join(lines)
+
+    def csv(self) -> str:
+        lines = ["region,n,t_hat,t_lo,t_hi,pow_hat,pow_lo,pow_hi,e_hat,e_lo,e_hi"]
+        for r in self.estimates.regions:
+            lines.append(f"{r.name},{r.n_samples},{r.t_hat:.6g},{r.t_lo:.6g},"
+                         f"{r.t_hi:.6g},{r.pow_hat:.6g},{r.pow_lo:.6g},"
+                         f"{r.pow_hi:.6g},{r.e_hat:.6g},{r.e_lo:.6g},{r.e_hi:.6g}")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
+class ValidationResult:
+    """Paper-§5-style accuracy summary vs direct measurements."""
+
+    per_region_time_err: Mapping[str, float]   # |t̂−t|/t
+    per_region_energy_err: Mapping[str, float]
+    mean_time_err: float
+    mean_energy_err: float
+    whole_time_err: float
+    whole_energy_err: float
+    ci_time_coverage: float     # fraction of regions whose CI contains truth
+    ci_energy_coverage: float
+    measured_time_fraction: float = 1.0   # paper's "81% of execution time"
+
+    def summary(self) -> str:
+        return (f"mean err: time {self.mean_time_err*100:.2f}% "
+                f"energy {self.mean_energy_err*100:.2f}% | whole-program: "
+                f"time {self.whole_time_err*100:.2f}% "
+                f"energy {self.whole_energy_err*100:.2f}% | CI coverage: "
+                f"time {self.ci_time_coverage*100:.0f}% "
+                f"energy {self.ci_energy_coverage*100:.0f}% | "
+                f"measured {self.measured_time_fraction*100:.0f}% of time")
+
+
+def validate(est: EstimateSet, truth: Mapping[str, Mapping[str, float]],
+             *, min_time_fraction: float = 0.002,
+             spans: Mapping[str, float] | None = None,
+             min_span: float = 0.0) -> ValidationResult:
+    """Compare estimates to exact ground truth (direct-measurement analogue).
+
+    Following the paper's §5 protocol, per-region errors are computed only
+    over regions that direct measurement could resolve: contiguous
+    execution span (one invocation run of the region — the 'enclosing
+    loop') at least ``min_span`` (the sampling period), and at least
+    ``min_time_fraction`` of total time. Excluded regions still count
+    toward whole-program error. ``measured_time_fraction`` reports how
+    much execution time the validated regions cover (the paper: 81%).
+    """
+    t_errs: dict[str, float] = {}
+    e_errs: dict[str, float] = {}
+    cov_t: list[bool] = []
+    cov_e: list[bool] = []
+    total_t = sum(v["time"] for v in truth.values())
+    total_e = sum(v["energy"] for v in truth.values())
+    by_name = est.by_name()
+    measured_t = 0.0
+    for name, gt in truth.items():
+        r = by_name.get(name)
+        if r is None or gt["time"] < min_time_fraction * total_t:
+            continue
+        if spans is not None and spans.get(name, 0.0) < min_span:
+            continue
+        measured_t += gt["time"]
+        t_errs[name] = abs(r.t_hat - gt["time"]) / gt["time"]
+        e_errs[name] = abs(r.e_hat - gt["energy"]) / max(gt["energy"], 1e-12)
+        if r.ci_valid:
+            cov_t.append(r.t_lo <= gt["time"] <= r.t_hi)
+            cov_e.append(r.e_lo <= gt["energy"] <= r.e_hi)
+    est_total_t = sum(r.t_hat for r in est.regions)
+    est_total_e = sum(r.e_hat for r in est.regions)
+    return ValidationResult(
+        per_region_time_err=t_errs,
+        per_region_energy_err=e_errs,
+        mean_time_err=float(np.mean(list(t_errs.values()))) if t_errs else 0.0,
+        mean_energy_err=float(np.mean(list(e_errs.values()))) if e_errs else 0.0,
+        whole_time_err=abs(est_total_t - total_t) / total_t,
+        whole_energy_err=abs(est_total_e - total_e) / total_e,
+        ci_time_coverage=float(np.mean(cov_t)) if cov_t else 1.0,
+        ci_energy_coverage=float(np.mean(cov_e)) if cov_e else 1.0,
+        measured_time_fraction=measured_t / total_t if total_t else 0.0,
+    )

@@ -1,0 +1,280 @@
+"""ALEA probabilistic estimators (paper §4.1-§4.4, Eqs. 2-16).
+
+The estimator consumes a stream of simultaneous (region_id, power) samples
+taken at a systematic period and produces, per region (paper: basic block):
+
+  - execution-time estimate   t̂ = (n_bb / n) · t_exec          (Eq. 5)
+  - mean-power estimate       p̂ow = mean(power samples of bb)  (Eq. 6)
+  - energy estimate           ê = p̂ow · t̂                      (Eq. 7)
+  - Wald confidence interval on the time proportion (Eqs. 8-10)
+  - normal confidence interval on power (Eqs. 12-15)
+  - product confidence interval on energy (Eq. 16)
+
+Multi-worker profiling (§4.4) attributes time/energy to *combinations* of
+regions sampled simultaneously across workers (threads in the paper; chips
+or hosts here), because shared-resource contention makes per-worker
+apportioning unsound.
+
+Everything is vectorized; the aggregation hot spot (counts / power sums /
+power sums-of-squares per region) is pluggable so the Pallas
+``kernels.sample_attr`` kernel can take over on TPU for fleet-scale sample
+streams.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+__all__ = [
+    "RegionEstimate",
+    "EstimateSet",
+    "aggregate_samples_np",
+    "estimate_regions",
+    "estimate_combinations",
+    "z_quantile",
+]
+
+
+def z_quantile(alpha: float) -> float:
+    """``z_{alpha/2}``: the 1 - alpha/2 percentile of the standard normal.
+
+    Uses the Acklam inverse-CDF approximation (|rel err| < 1.15e-9); avoids a
+    scipy dependency and is exact enough for CI construction.
+    """
+    p = 1.0 - alpha / 2.0
+    if not 0.0 < p < 1.0:
+        raise ValueError(f"alpha must be in (0, 2); got alpha={alpha}")
+    # Acklam's algorithm.
+    a = (-3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+         1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00)
+    b = (-5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+         6.680131188771972e+01, -1.328068155288572e+01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+         -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+         3.754408661907416e+00)
+    plow, phigh = 0.02425, 1 - 0.02425
+    if p < plow:
+        q = math.sqrt(-2 * math.log(p))
+        return (((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / \
+               ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+    if p <= phigh:
+        q = p - 0.5
+        r = q * q
+        return (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * q / \
+               (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
+    q = math.sqrt(-2 * math.log(1 - p))
+    return -(((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / \
+           ((((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionEstimate:
+    """Per-region (or per-combination) ALEA estimates with CIs."""
+
+    region_id: int
+    name: str
+    n_samples: int            # n_bb
+    p_hat: float              # Eq. 4
+    t_hat: float              # Eq. 5  [s]
+    t_lo: float               # Eq. 11 lower
+    t_hi: float               # Eq. 11 upper
+    pow_hat: float            # Eq. 6  [W]
+    pow_lo: float             # Eq. 13
+    pow_hi: float             # Eq. 12
+    e_hat: float              # Eq. 7  [J]
+    e_lo: float               # Eq. 16 lower
+    e_hi: float               # Eq. 16 upper
+    ci_valid: bool            # Wald validity: n·p̂>5 and n·(1-p̂)>5 (§4.3)
+
+    @property
+    def t_ci_halfwidth(self) -> float:
+        return 0.5 * (self.t_hi - self.t_lo)
+
+
+@dataclasses.dataclass(frozen=True)
+class EstimateSet:
+    """All region estimates from one profiling pass."""
+
+    regions: tuple[RegionEstimate, ...]
+    n_total: int
+    t_exec: float
+    alpha: float
+
+    def by_name(self) -> Mapping[str, RegionEstimate]:
+        return {r.name: r for r in self.regions}
+
+    @property
+    def total_energy(self) -> float:
+        return float(sum(r.e_hat for r in self.regions))
+
+    @property
+    def total_time(self) -> float:
+        return float(sum(r.t_hat for r in self.regions))
+
+    def dominant(self, k: int = 1) -> tuple[RegionEstimate, ...]:
+        """Top-k regions by estimated energy (hotspot analysis, §7.1)."""
+        return tuple(sorted(self.regions, key=lambda r: -r.e_hat)[:k])
+
+
+AggregateFn = Callable[[np.ndarray, np.ndarray, int],
+                       tuple[np.ndarray, np.ndarray, np.ndarray]]
+
+
+def aggregate_samples_np(region_ids: np.ndarray, powers: np.ndarray,
+                         num_regions: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Reference aggregation: per-region sample counts, Σpow, Σpow².
+
+    This is the tool's aggregation hot spot (one entry per sample; fleets
+    collect billions). ``kernels/sample_attr`` provides the tiled Pallas
+    equivalent; both must match this exactly.
+    """
+    region_ids = np.asarray(region_ids)
+    powers = np.asarray(powers, dtype=np.float64)
+    counts = np.bincount(region_ids, minlength=num_regions).astype(np.int64)
+    psum = np.bincount(region_ids, weights=powers, minlength=num_regions)
+    psumsq = np.bincount(region_ids, weights=powers * powers, minlength=num_regions)
+    return counts, psum, psumsq
+
+
+def _build_estimates(counts: np.ndarray, psum: np.ndarray, psumsq: np.ndarray,
+                     names: Sequence[str], t_exec: float, alpha: float,
+                     drop_empty: bool) -> EstimateSet:
+    n = int(counts.sum())
+    if n == 0:
+        raise ValueError("no samples collected; cannot estimate")
+    z = z_quantile(alpha)
+    out: list[RegionEstimate] = []
+    for rid in range(len(counts)):
+        n_bb = int(counts[rid])
+        if n_bb == 0 and drop_empty:
+            continue
+        p_hat = n_bb / n
+        # Eq. 8/9: Wald interval on the Bernoulli proportion.
+        se_p = math.sqrt(max(p_hat * (1.0 - p_hat), 0.0) / n)
+        p_lo = max(p_hat - z * se_p, 0.0)
+        p_hi = min(p_hat + z * se_p, 1.0)
+        t_hat = p_hat * t_exec
+        # Eq. 6 and 12-14: mean power and its normal CI.
+        if n_bb > 0:
+            pow_hat = psum[rid] / n_bb
+        else:
+            pow_hat = 0.0
+        if n_bb > 1:
+            var = (psumsq[rid] - n_bb * pow_hat * pow_hat) / (n_bb - 1)
+            s = math.sqrt(max(var, 0.0))
+            se_pow = s / math.sqrt(n_bb)
+        else:
+            se_pow = 0.0
+        pow_lo = pow_hat - z * se_pow
+        pow_hi = pow_hat + z * se_pow
+        e_hat = pow_hat * t_hat  # Eq. 7
+        out.append(RegionEstimate(
+            region_id=rid,
+            name=names[rid] if rid < len(names) else f"region_{rid}",
+            n_samples=n_bb,
+            p_hat=p_hat,
+            t_hat=t_hat,
+            t_lo=p_lo * t_exec,
+            t_hi=p_hi * t_exec,
+            pow_hat=float(pow_hat),
+            pow_lo=float(pow_lo),
+            pow_hi=float(pow_hi),
+            e_hat=float(e_hat),
+            e_lo=float(p_lo * t_exec * pow_lo),   # Eq. 16
+            e_hi=float(p_hi * t_exec * pow_hi),
+            ci_valid=(n * p_hat > 5.0) and (n * (1.0 - p_hat) > 5.0),
+        ))
+    return EstimateSet(regions=tuple(out), n_total=n, t_exec=float(t_exec),
+                       alpha=alpha)
+
+
+def estimate_regions(region_ids: np.ndarray, powers: np.ndarray,
+                     t_exec: float, names: Sequence[str],
+                     *, alpha: float = 0.05, drop_empty: bool = True,
+                     aggregate_fn: AggregateFn | None = None) -> EstimateSet:
+    """One-pass ALEA estimation over a (region_id, power) sample stream.
+
+    Args:
+      region_ids: int array [n] of sampled region ids (PC → basic block map).
+      powers: float array [n] of simultaneous sensor readings [W].
+      t_exec: measured total execution time [s] of the profiled run.
+      names: region id → human name.
+      alpha: 1 - confidence level (paper uses 95% → alpha=0.05).
+      aggregate_fn: optional replacement aggregation (e.g. Pallas kernel op).
+    """
+    num_regions = len(names)
+    agg = aggregate_fn or aggregate_samples_np
+    counts, psum, psumsq = (np.asarray(x) for x in
+                            agg(np.asarray(region_ids), np.asarray(powers),
+                                num_regions))
+    return _build_estimates(counts, psum, psumsq, list(names), t_exec, alpha,
+                            drop_empty)
+
+
+def encode_combinations(region_id_matrix: np.ndarray
+                        ) -> tuple[np.ndarray, list[tuple[int, ...]]]:
+    """Map per-sample region-id vectors (one per worker) to combination ids.
+
+    Paper §4.4 / Eq. 19: ``comb = (bb_thread_1, ..., bb_thread_l)``.
+
+    Args:
+      region_id_matrix: int array [n, workers].
+    Returns:
+      (comb_ids [n], list of combination tuples indexed by comb id).
+    """
+    mat = np.asarray(region_id_matrix)
+    if mat.ndim != 2:
+        raise ValueError(f"expected [n, workers]; got shape {mat.shape}")
+    uniq, inverse = np.unique(mat, axis=0, return_inverse=True)
+    combos = [tuple(int(v) for v in row) for row in uniq]
+    return inverse.astype(np.int64), combos
+
+
+def estimate_combinations(region_id_matrix: np.ndarray, powers: np.ndarray,
+                          t_exec: float, names: Sequence[str],
+                          *, alpha: float = 0.05) -> tuple[EstimateSet, list[tuple[int, ...]]]:
+    """Multi-worker estimation over region combinations (Eqs. 17-19)."""
+    comb_ids, combos = encode_combinations(region_id_matrix)
+    comb_names = ["+".join(names[r] if r < len(names) else f"r{r}" for r in c)
+                  for c in combos]
+    est = estimate_regions(comb_ids, powers, t_exec, comb_names, alpha=alpha)
+    return est, combos
+
+
+def marginalize_worker(est: EstimateSet, combos: list[tuple[int, ...]],
+                       names: Sequence[str]) -> EstimateSet:
+    """Collapse combination estimates back to per-region marginals.
+
+    A region's marginal time is the sum over combinations containing it;
+    its power is the time-weighted mean of combination powers. Useful for
+    hotspot ranking while the combination table retains contention detail.
+    """
+    by_comb = {c: r for c, r in zip(combos, est.regions)}
+    num_regions = len(names)
+    t = np.zeros(num_regions)
+    e = np.zeros(num_regions)
+    ns = np.zeros(num_regions, dtype=np.int64)
+    for c, r in by_comb.items():
+        for rid in set(c):
+            t[rid] += r.t_hat
+            e[rid] += r.e_hat
+            ns[rid] += r.n_samples
+    out = []
+    for rid in range(num_regions):
+        if ns[rid] == 0:
+            continue
+        pw = e[rid] / t[rid] if t[rid] > 0 else 0.0
+        out.append(RegionEstimate(
+            region_id=rid, name=names[rid], n_samples=int(ns[rid]),
+            p_hat=t[rid] / est.t_exec if est.t_exec else 0.0,
+            t_hat=float(t[rid]), t_lo=float("nan"), t_hi=float("nan"),
+            pow_hat=float(pw), pow_lo=float("nan"), pow_hi=float("nan"),
+            e_hat=float(e[rid]), e_lo=float("nan"), e_hi=float("nan"),
+            ci_valid=False))
+    return EstimateSet(regions=tuple(out), n_total=est.n_total,
+                       t_exec=est.t_exec, alpha=est.alpha)

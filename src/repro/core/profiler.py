@@ -1,0 +1,116 @@
+"""EnergyProfiler: one-pass sampling orchestration (paper Fig. 1, §4.8).
+
+Usage, timeline mode (TPU-target; timelines synthesized from dry-run costs):
+
+    prof = EnergyProfiler(period=10e-3)
+    est = prof.profile_timeline(timeline, sensor="rapl")
+    print(AttributionReport(est).table())
+
+Usage, host mode (real control thread on this machine):
+
+    prof = EnergyProfiler(period=2e-3)
+    with prof.host_session() as session:
+        ... run python/jit code using regions.region(...) ...
+    est = session.estimates()
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator
+
+from repro.core import regions as regions_mod
+from repro.core.attribution import AttributionReport
+from repro.core.estimator import (EstimateSet, estimate_combinations,
+                                  estimate_regions)
+from repro.core.sampler import (HostSampler, RegionMarker, SampleStream,
+                                sample_timeline, sample_timeline_multiworker)
+from repro.core.sensors import (Ina231TraceSensor, InstantTraceSensor,
+                                RaplTraceSensor, available_host_sensor)
+from repro.core.timeline import Timeline
+
+__all__ = ["EnergyProfiler", "HostSession"]
+
+_SENSORS = {
+    "rapl": RaplTraceSensor,
+    "ina231": Ina231TraceSensor,
+    "instant": InstantTraceSensor,
+}
+
+
+class HostSession:
+    """A live host-mode profiling pass."""
+
+    def __init__(self, profiler: "EnergyProfiler", jit_marking: bool):
+        self._prof = profiler
+        self.marker = RegionMarker()
+        self.sampler = HostSampler(
+            self.marker, available_host_sensor(),
+            period=profiler.period, jitter=profiler.jitter,
+            seed=profiler.seed)
+        self._ctx = None
+        self._jit_marking = jit_marking
+
+    def __enter__(self) -> "HostSession":
+        self._ctx = contextlib.ExitStack()
+        self._ctx.enter_context(
+            regions_mod.profiling_session(self.marker,
+                                          jit_marking=self._jit_marking))
+        self._ctx.enter_context(self.sampler)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        assert self._ctx is not None
+        self._ctx.close()
+
+    def stream(self) -> SampleStream:
+        return self.sampler.stream()
+
+    def estimates(self, alpha: float = 0.05) -> EstimateSet:
+        s = self.stream()
+        return estimate_regions(s.region_ids, s.powers, s.t_exec,
+                                regions_mod.registry.names, alpha=alpha)
+
+
+class EnergyProfiler:
+    """Fine-grain energy profiler with systematic sampling."""
+
+    def __init__(self, *, period: float = 10e-3, jitter: float = 200e-6,
+                 alpha: float = 0.05, seed: int = 0):
+        if period <= 0:
+            raise ValueError("period must be positive")
+        self.period = period
+        self.jitter = jitter
+        self.alpha = alpha
+        self.seed = seed
+
+    # -- timeline (device) mode ---------------------------------------------
+    def profile_timeline(self, tl: Timeline, *, sensor: str = "rapl",
+                         overhead_per_sample: float = 0.0,
+                         seed: int | None = None) -> EstimateSet:
+        sens = _SENSORS[sensor](tl)
+        stream = sample_timeline(
+            tl, sens, period=self.period, jitter=self.jitter,
+            overhead_per_sample=overhead_per_sample,
+            seed=self.seed if seed is None else seed)
+        return estimate_regions(stream.region_ids, stream.powers,
+                                stream.t_exec, tl.names, alpha=self.alpha)
+
+    def profile_multiworker(self, timelines: list[Timeline], *,
+                            sensor: str = "rapl", seed: int | None = None):
+        """§4.4: combination-level attribution across concurrent workers."""
+        stream = sample_timeline_multiworker(
+            timelines, lambda tl: _SENSORS[sensor](tl),
+            period=self.period, jitter=self.jitter,
+            seed=self.seed if seed is None else seed)
+        names = timelines[0].names
+        return estimate_combinations(stream.region_ids, stream.powers,
+                                     stream.t_exec, names, alpha=self.alpha)
+
+    # -- host (this machine) mode --------------------------------------------
+    def host_session(self, *, jit_marking: bool = False) -> HostSession:
+        return HostSession(self, jit_marking)
+
+    # -- convenience -----------------------------------------------------------
+    def report(self, est: EstimateSet) -> AttributionReport:
+        return AttributionReport(est)

@@ -1,0 +1,131 @@
+"""Region registry and markers — the TPU analogue of basic blocks.
+
+A *region* is a named sub-computation of a step (``attn_qkv``, ``moe_dispatch``,
+``allreduce_grads``...). Regions are declared where the model is built:
+
+    with regions.region("attn_score"):
+        scores = ...
+
+This does three things:
+  1. wraps the computation in ``jax.named_scope`` so the region name survives
+     into HLO metadata (offline sample→region mapping, like PC→block);
+  2. when a profiling session is active, updates the shared
+     :class:`~repro.core.sampler.RegionMarker` so the host control thread can
+     sample the currently-executing region — inside jit this is an
+     ``io_callback`` that stores one int (the §4.8 near-zero instrumentation);
+  3. registers the region (stable id assignment) for reports.
+
+When no session is active the context manager is a plain ``named_scope`` —
+zero runtime cost in production steps.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator
+
+import jax
+import numpy as np
+
+from repro.core.sampler import RegionMarker
+
+__all__ = ["RegionRegistry", "region", "registry", "profiling_session",
+           "mark_in_jit"]
+
+
+class RegionRegistry:
+    """Process-wide region-name ↔ id mapping (thread-safe)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._name_to_id: dict[str, int] = {"<other>": 0}
+        self._names: list[str] = ["<other>"]
+
+    def intern(self, name: str) -> int:
+        with self._lock:
+            rid = self._name_to_id.get(name)
+            if rid is None:
+                rid = len(self._names)
+                self._name_to_id[name] = rid
+                self._names.append(name)
+            return rid
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        with self._lock:
+            return tuple(self._names)
+
+    def name_of(self, rid: int) -> str:
+        return self._names[rid]
+
+    def reset(self) -> None:
+        with self._lock:
+            self._name_to_id = {"<other>": 0}
+            self._names = ["<other>"]
+
+
+registry = RegionRegistry()
+
+# Active profiling marker (None ⇒ markers compile away).
+_active_marker: RegionMarker | None = None
+_in_jit_marking = False
+
+
+@contextlib.contextmanager
+def profiling_session(marker: RegionMarker, *, jit_marking: bool = False
+                      ) -> Iterator[None]:
+    """Activates host-mode marking. ``jit_marking`` also emits io_callback
+    marker stores inside traced code (costs one host callback per region
+    entry; only for host-mode validation runs, never production)."""
+    global _active_marker, _in_jit_marking
+    prev, prev_jit = _active_marker, _in_jit_marking
+    _active_marker, _in_jit_marking = marker, jit_marking
+    try:
+        yield
+    finally:
+        _active_marker, _in_jit_marking = prev, prev_jit
+
+
+def _store_marker(rid_arr) -> None:
+    m = _active_marker
+    if m is not None:
+        m.set(int(rid_arr))
+
+
+def mark_in_jit(name: str, dep=None):
+    """Emit an in-graph marker store (validation runs only). Returns ``dep``
+    unchanged so callers can thread it for ordering."""
+    rid = registry.intern(name)
+    if _active_marker is not None and _in_jit_marking:
+        jax.experimental.io_callback(_store_marker, None,
+                                     np.int32(rid), ordered=True)
+    return dep
+
+
+_region_stack = threading.local()
+
+
+@contextlib.contextmanager
+def region(name: str) -> Iterator[int]:
+    """Declare a region. Cheap always; marker store only inside a session.
+
+    Nested regions restore the *parent* region id on exit (a stack), so
+    host time spent inside an outer region but after an inner one — e.g.
+    XLA compilation following tracing — is attributed to the outer region,
+    like a PC returning to the caller's basic block.
+    """
+    rid = registry.intern(name)
+    m = _active_marker
+    if m is not None and not _in_jit_marking:
+        stack = getattr(_region_stack, "s", None)
+        if stack is None:
+            stack = _region_stack.s = [0]
+        stack.append(rid)
+        m.set(rid)
+    with jax.named_scope(name):
+        yield rid
+    if m is not None and not _in_jit_marking:
+        stack = _region_stack.s
+        stack.pop()
+        m.set(stack[-1])

@@ -1,0 +1,194 @@
+"""Systematic sampling (paper §4.6-§4.8).
+
+Two samplers:
+
+* :func:`sample_timeline` — vectorized systematic sampling of a synthesized
+  :class:`Timeline`: sample times start at U(0, T) and advance by T plus a
+  random timer-jitter term (the paper observes up to hundreds of µs of
+  natural jitter, which is what makes systematic sampling safe against
+  periodic aliasing — §4.6). Optional per-sample *suspension overhead*
+  models ptrace-style stop-the-world reads (§4.7/§4.8): each sample
+  stretches the interval it lands in by ``overhead_per_sample`` seconds of
+  near-idle execution, biasing measured t_exec exactly as in Figures 4/5.
+
+* :class:`HostSampler` — a real control thread (the §4.8 'separate control
+  process'): the profiled program only updates a shared region marker; the
+  thread samples (marker, sensor) pairs at the configured period without
+  suspending the program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sys
+import threading
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.timeline import Timeline
+
+__all__ = ["SampleStream", "sample_timeline", "HostSampler", "RegionMarker"]
+
+
+@dataclasses.dataclass
+class SampleStream:
+    """Output of one profiling pass."""
+
+    region_ids: np.ndarray   # [n] (or [n, workers] for multi-worker runs)
+    powers: np.ndarray       # [n]
+    t_exec: float            # measured wall time of the profiled run
+    n: int
+    overhead_time: float = 0.0   # systematic-error component (for reporting)
+
+
+def _sample_times(t_end: float, period: float, jitter: float,
+                  rng: np.random.Generator) -> np.ndarray:
+    """Systematic sample times with uniform timer jitter, first at U(0,T)."""
+    n_max = int(t_end / period) + 2
+    deltas = period + rng.uniform(0.0, jitter, size=n_max)
+    t = rng.uniform(0.0, period) + np.cumsum(deltas) - deltas[0]
+    return t[t < t_end]
+
+
+def sample_timeline(tl: Timeline, sensor, *, period: float,
+                    jitter: float = 200e-6, overhead_per_sample: float = 0.0,
+                    idle_power: float = 70.0, seed: int = 0,
+                    deliberate_alias: bool = False) -> SampleStream:
+    """One-pass systematic sampling of a synthesized timeline.
+
+    Args:
+      sensor: a trace sensor over ``tl`` (``read_many``/``read``).
+      period: sampling period T [s] (paper default 10 ms).
+      jitter: uniform upper bound of per-sample timer jitter [s]. Set to 0
+        together with ``deliberate_alias`` in tests to *demonstrate* the
+        aliasing pathology of exact systematic sampling.
+      overhead_per_sample: suspension cost per sample [s]; models the
+        ptrace-style control-process read. The profiled run's measured
+        t_exec inflates by n·overhead and sampled power during suspension
+        windows is near idle, producing the systematic error term of §4.7.
+    """
+    rng = np.random.default_rng(seed)
+    if period < getattr(sensor, "min_period", 0.0):
+        raise ValueError(
+            f"sampling period {period} below sensor minimum "
+            f"{sensor.min_period}")
+    if deliberate_alias:
+        jitter = 0.0
+    times = _sample_times(tl.t_exec, period, jitter, rng)
+    n = len(times)
+    if n == 0:
+        raise ValueError("run too short for sampling period")
+    rids = tl.region_at(times)
+    if hasattr(sensor, "read_many"):
+        pows = np.asarray(sensor.read_many(times), dtype=np.float64)
+    else:
+        pows = np.asarray(sensor.read(times), dtype=np.float64)
+
+    overhead_time = n * overhead_per_sample
+    t_exec_measured = tl.t_exec + overhead_time
+    if overhead_per_sample > 0.0:
+        # During suspension the program makes no progress but the package
+        # still burns near-idle power; RAPL-style differencing mixes that
+        # into the sample. Blend proportionally to overhead per period.
+        frac = min(overhead_per_sample / period, 1.0)
+        pows = (1.0 - frac) * pows + frac * idle_power
+    return SampleStream(region_ids=rids, powers=pows,
+                        t_exec=t_exec_measured, n=n,
+                        overhead_time=overhead_time)
+
+
+def sample_timeline_multiworker(timelines: list[Timeline], sensor_fn,
+                                *, period: float, jitter: float = 200e-6,
+                                seed: int = 0) -> SampleStream:
+    """Sample W concurrent worker timelines simultaneously (§4.4).
+
+    Each sample is a vector of region ids — one per worker — plus one shared
+    package power reading (sum of per-worker powers + contention handled by
+    the caller's power model when the timelines were synthesized).
+    """
+    rng = np.random.default_rng(seed)
+    t_end = min(tl.t_exec for tl in timelines)
+    times = _sample_times(t_end, period, jitter, rng)
+    rid_mat = np.stack([tl.region_at(times) for tl in timelines], axis=1)
+    total_power = sum(np.asarray(sensor_fn(tl).read_many(times)
+                                 if hasattr(sensor_fn(tl), "read_many")
+                                 else sensor_fn(tl).read(times))
+                      for tl in timelines)
+    return SampleStream(region_ids=rid_mat, powers=total_power,
+                        t_exec=t_end, n=len(times))
+
+
+# ---------------------------------------------------------------------------
+# Host-mode control thread.
+# ---------------------------------------------------------------------------
+
+
+class RegionMarker:
+    """Shared 'program counter' cell: region code writes, sampler reads.
+
+    Reads/writes of a Python int are atomic under the GIL, so the profiled
+    program's only instrumentation cost is one attribute store per region
+    entry — the §4.8 design point (no sampling code on the critical path).
+    """
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def set(self, region_id: int) -> None:
+        self.value = region_id
+
+
+class HostSampler:
+    """Control thread sampling (marker, sensor) at a jittered period."""
+
+    def __init__(self, marker: RegionMarker, sensor, *, period: float,
+                 jitter: float = 200e-6, seed: int = 0):
+        self.marker = marker
+        self.sensor = sensor
+        self.period = period
+        self.jitter = jitter
+        self._rng = np.random.default_rng(seed)
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._rids: list[int] = []
+        self._pows: list[float] = []
+        self._t0 = 0.0
+        self._t1 = 0.0
+
+    def _loop(self) -> None:
+        read = self.sensor.read
+        while not self._stop.is_set():
+            self._rids.append(self.marker.value)
+            self._pows.append(float(read()))
+            time.sleep(self.period + float(self._rng.uniform(0, self.jitter)))
+
+    def __enter__(self) -> "HostSampler":
+        # CPython's default 5 ms GIL switch interval would let a CPU-bound
+        # profiled region starve the control thread (the ptrace analogue
+        # never has this problem since it runs in another process). Tighten
+        # it for the session; restored on exit.
+        self._old_switch = sys.getswitchinterval()
+        sys.setswitchinterval(min(self._old_switch, self.period / 4.0))
+        self._t0 = time.monotonic()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="alea-control")
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._t1 = time.monotonic()
+        self._stop.set()
+        assert self._thread is not None
+        self._thread.join(timeout=5.0)
+        sys.setswitchinterval(self._old_switch)
+
+    def stream(self) -> SampleStream:
+        if not self._rids:
+            raise RuntimeError("no samples collected")
+        return SampleStream(region_ids=np.asarray(self._rids, dtype=np.int32),
+                            powers=np.asarray(self._pows, dtype=np.float64),
+                            t_exec=self._t1 - self._t0, n=len(self._rids))

@@ -1,0 +1,147 @@
+"""Region timelines: the 'ground truth' substrate ALEA samples.
+
+A :class:`Timeline` is a piecewise-constant execution trace — a sequence of
+(region_id, duration, power) intervals, exactly Figure 2 of the paper: a
+program is a concatenation of basic-block instances whose per-instance
+latency varies between iterations.
+
+Two producers:
+  * :func:`synthesize` — builds a timeline for a compiled TPU step from
+    per-region roofline costs (FLOPs / HBM bytes / ICI bytes, sourced from
+    the dry-run's ``cost_analysis`` + HLO collective parsing) through the
+    activity power model. Per-instance latency gets multiplicative lognormal
+    jitter, reproducing the paper's latency-varies-per-iteration premise.
+  * host profiling (``profiler.HostSession``) — records a real timeline of
+    region enter/exit timestamps for validation on CPU.
+
+Ground truth per region is the exact integral over intervals — the stand-in
+for the paper's direct RAPL measurements (§5 validation protocol).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.power_model import PowerModel
+
+__all__ = ["RegionCost", "Timeline", "synthesize", "ground_truth"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionCost:
+    """Per-invocation cost of one region of a step (per chip unless noted).
+
+    ``flops``/``hbm_bytes`` are whole-program per-invocation totals that will
+    be divided across chips by the caller; ``ici_bytes`` is per-chip link
+    traffic (torus collectives keep it ~chip-count invariant).
+    """
+
+    name: str
+    flops: float
+    hbm_bytes: float
+    ici_bytes: float = 0.0
+    invocations: int = 1    # instances of this region per step (e.g. layers)
+
+
+@dataclasses.dataclass
+class Timeline:
+    """Piecewise-constant trace. Arrays share length m (interval count)."""
+
+    region_ids: np.ndarray   # int32 [m]
+    durations: np.ndarray    # float64 [m] seconds
+    powers: np.ndarray       # float64 [m] watts (per-chip)
+    names: tuple[str, ...]   # region id → name
+
+    def __post_init__(self):
+        self.region_ids = np.asarray(self.region_ids, dtype=np.int32)
+        self.durations = np.asarray(self.durations, dtype=np.float64)
+        self.powers = np.asarray(self.powers, dtype=np.float64)
+        if not (len(self.region_ids) == len(self.durations) == len(self.powers)):
+            raise ValueError("timeline arrays must share length")
+        if np.any(self.durations < 0):
+            raise ValueError("negative durations")
+
+    @property
+    def t_exec(self) -> float:
+        return float(self.durations.sum())
+
+    @property
+    def starts(self) -> np.ndarray:
+        return np.concatenate([[0.0], np.cumsum(self.durations)[:-1]])
+
+    @property
+    def ends(self) -> np.ndarray:
+        return np.cumsum(self.durations)
+
+    def energy_integral(self) -> np.ndarray:
+        """Cumulative energy E(t) at interval ends (for sensor emulation)."""
+        return np.cumsum(self.durations * self.powers)
+
+    def region_at(self, times: np.ndarray) -> np.ndarray:
+        """Region id executing at each time point (vectorized PC sampling)."""
+        idx = np.searchsorted(self.ends, np.asarray(times), side="right")
+        idx = np.clip(idx, 0, len(self.region_ids) - 1)
+        return self.region_ids[idx]
+
+    def power_at(self, times: np.ndarray) -> np.ndarray:
+        idx = np.searchsorted(self.ends, np.asarray(times), side="right")
+        idx = np.clip(idx, 0, len(self.powers) - 1)
+        return self.powers[idx]
+
+    def tile(self, reps: int) -> "Timeline":
+        """Concatenate ``reps`` identical steps (multi-step profiled run)."""
+        return Timeline(np.tile(self.region_ids, reps),
+                        np.tile(self.durations, reps),
+                        np.tile(self.powers, reps), self.names)
+
+
+def ground_truth(tl: Timeline) -> dict[str, dict[str, float]]:
+    """Exact per-region time/energy/power (the 'direct measurement')."""
+    out: dict[str, dict[str, float]] = {}
+    for rid in np.unique(tl.region_ids):
+        mask = tl.region_ids == rid
+        t = float(tl.durations[mask].sum())
+        e = float((tl.durations[mask] * tl.powers[mask]).sum())
+        out[tl.names[rid]] = {
+            "time": t, "energy": e, "power": (e / t if t > 0 else 0.0)}
+    return out
+
+
+def synthesize(costs: Sequence[RegionCost], *, steps: int = 1,
+               chips: int = 1, model: PowerModel | None = None,
+               freq_scale: float = 1.0, latency_noise: float = 0.08,
+               power_noise: float = 0.02, efficiency: float = 0.85,
+               seed: int = 0) -> Timeline:
+    """Synthesize a device timeline from per-region roofline costs.
+
+    Each step emits every region's invocations in order; per-instance
+    duration is the roofline duration × lognormal(σ=latency_noise) jitter
+    (paper Fig. 2: latency varies between iterations, e.g. with the memory
+    level serving each load); per-instance power adds Gaussian sensor-scale
+    noise on top of the activity model.
+    """
+    model = model or PowerModel()
+    rng = np.random.default_rng(seed)
+    names = tuple(c.name for c in costs)
+
+    ids, durs, pows = [], [], []
+    for step in range(steps):
+        for rid, c in enumerate(costs):
+            base = model.region_duration(c.flops, c.hbm_bytes, c.ici_bytes,
+                                         freq_scale=freq_scale, chips=chips,
+                                         efficiency=efficiency)
+            jit = rng.lognormal(mean=0.0, sigma=latency_noise,
+                                size=c.invocations)
+            d = base * jit
+            u = model.utilizations(c.flops / chips, c.hbm_bytes / chips,
+                                   c.ici_bytes, base, freq_scale)
+            p = float(model.power(*u, freq_scale=freq_scale))
+            pn = p * (1.0 + power_noise * rng.standard_normal(c.invocations))
+            ids.append(np.full(c.invocations, rid, dtype=np.int32))
+            durs.append(d)
+            pows.append(np.maximum(pn, 1.0))
+    return Timeline(np.concatenate(ids), np.concatenate(durs),
+                    np.concatenate(pows), names)

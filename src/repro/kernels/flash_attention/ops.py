@@ -1,0 +1,25 @@
+"""jit'd public wrappers for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_kv: int = 512, interpret: bool | None = None):
+    """q: [B,H,S,dh]; k/v: [B,H,S,dh] (KV pre-repeated to H for GQA)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, H, S, dh = q.shape
+    out = flash_attention_fwd(
+        q.reshape(B * H, S, dh), k.reshape(B * H, -1, dh),
+        v.reshape(B * H, -1, dh), causal=causal,
+        block_q=block_q, block_kv=block_kv, interpret=bool(interpret))
+    return out.reshape(B, H, S, dh)

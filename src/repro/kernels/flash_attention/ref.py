@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for flash attention (MHA form, optional causal)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q/k/v: [B, H, S, dh] → [B, H, S, dh]. fp32 softmax."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhtd->bhqt", q, k,
+                        preferred_element_type=jnp.float32) * dh ** -0.5
+    if causal:
+        S, T = q.shape[2], k.shape[2]
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        scores = jnp.where(mask[None, None], scores, -2.0e38)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqt,bhtd->bhqd", probs.astype(v.dtype), v)

@@ -1,0 +1,21 @@
+"""jit'd public wrapper for fused RMSNorm."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-5, interpret: bool | None = None):
+    """x: [..., d]; scale: [d]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = x.shape
+    out = rmsnorm_pallas(x.reshape(-1, shape[-1]), scale, eps=eps,
+                         interpret=bool(interpret))
+    return out.reshape(shape)

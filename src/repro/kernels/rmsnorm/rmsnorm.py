@@ -1,0 +1,44 @@
+"""Pallas TPU kernel: fused RMSNorm.
+
+Eliminates the separate mean-of-squares pass + scale multiply that XLA
+sometimes fails to fuse across the norm→matmul boundary. Grid over row
+blocks; each block [block_rows, d] is normalized entirely in VMEM with
+fp32 accumulation. d padded to the 128-lane boundary by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float, d_orig: int):
+    x = x_ref[...].astype(jnp.float32)          # [br, d_pad]
+    # Padded lanes contribute zeros; divide by the true feature count.
+    var = jnp.sum(x * x, axis=-1, keepdims=True) / d_orig
+    y = x * jax.lax.rsqrt(var + eps) * s_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x, scale, *, eps: float = 1e-5, block_rows: int = 256,
+                   interpret: bool = False):
+    """x: [n, d]; scale: [d] → [n, d]."""
+    n, d = x.shape
+    d_pad = (128 - d % 128) % 128
+    r_pad = (block_rows - n % block_rows) % block_rows
+    xp = jnp.pad(x, ((0, r_pad), (0, d_pad)))
+    sp_ = jnp.pad(scale, (0, d_pad))
+    grid = (xp.shape[0] // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps, d_orig=d),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, d + d_pad), lambda i: (i, 0)),
+                  pl.BlockSpec((d + d_pad,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, d + d_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp, sp_)
+    return out[:n, :d]

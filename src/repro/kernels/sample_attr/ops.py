@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the sample-attribution kernel.
+
+``sample_attr(ids, powers, R)`` dispatches to the Pallas kernel on TPU and
+to interpret mode elsewhere; ``as_aggregate_fn`` adapts it to the
+estimator's pluggable aggregation interface.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.sample_attr.sample_attr import sample_attr_pallas
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def sample_attr(region_ids, powers, num_regions: int,
+                interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return sample_attr_pallas(region_ids.astype(jnp.int32),
+                              powers.astype(jnp.float32), num_regions,
+                              interpret=interpret)
+
+
+def as_aggregate_fn(interpret: bool | None = None):
+    """Adapter matching estimator.AggregateFn (returns numpy)."""
+    def agg(region_ids, powers, num_regions):
+        c, s, sq = sample_attr(jnp.asarray(region_ids), jnp.asarray(powers),
+                               int(num_regions), interpret)
+        return (np.asarray(c).astype(np.int64), np.asarray(s, np.float64),
+                np.asarray(sq, np.float64))
+    return agg

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the ALEA sample-attribution reduction.
+
+Given a stream of (region_id, power) samples, produce per-region:
+counts, Σpower, Σpower² — the sufficient statistics for Eqs. 4/6/14.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sample_attr_ref(region_ids: jnp.ndarray, powers: jnp.ndarray,
+                    num_regions: int):
+    """region_ids: [n] int32; powers: [n] float. → (counts f32 [R],
+    psum f32 [R], psumsq f32 [R]).
+
+    Counts are returned as float32 (the kernel accumulates everything on
+    the MXU in one dtype; exact for n < 2^24).
+    """
+    powers = powers.astype(jnp.float32)
+    onehot = jnp.equal(region_ids[:, None],
+                       jnp.arange(num_regions)[None, :]).astype(jnp.float32)
+    counts = onehot.sum(axis=0)
+    psum = powers @ onehot
+    psumsq = (powers * powers) @ onehot
+    return counts, psum, psumsq

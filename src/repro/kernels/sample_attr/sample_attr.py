@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: ALEA sample-attribution reduction.
+
+TPU adaptation of the tool's aggregation hot spot (billions of samples on
+a fleet): instead of a scatter-add histogram (GPU-style atomics — no TPU
+analogue), each sample block is turned into a one-hot matrix and the three
+statistics become MXU matmuls:
+
+    counts += 1ᵀ · onehot      psum += powᵀ · onehot      psumsq += (pow²)ᵀ · onehot
+
+Grid: one dimension over sample blocks. The [R]-sized accumulators live in
+the output blocks (same block every step → VMEM-resident); sample blocks
+stream HBM→VMEM. Block size 1024 samples × R≤2048 regions keeps the
+one-hot (1024×2048×4B = 8 MB) within VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 1024
+
+
+def _kernel(ids_ref, pow_ref, counts_ref, psum_ref, psumsq_ref, *,
+            num_regions: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        psum_ref[...] = jnp.zeros_like(psum_ref)
+        psumsq_ref[...] = jnp.zeros_like(psumsq_ref)
+
+    ids = ids_ref[...]                                  # [bn] int32
+    pw = pow_ref[...].astype(jnp.float32)               # [bn]
+    # One-hot via broadcasted iota compare (2D iota: TPU-legal).
+    iota = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], num_regions), 1)
+    onehot = (ids[:, None] == iota).astype(jnp.float32)  # [bn, R]
+    # Padded samples carry region_id = -1 → all-zero one-hot rows.
+    counts_ref[...] += jnp.sum(onehot, axis=0)
+    psum_ref[...] += pw @ onehot
+    psumsq_ref[...] += (pw * pw) @ onehot
+
+
+def sample_attr_pallas(region_ids: jnp.ndarray, powers: jnp.ndarray,
+                       num_regions: int, *, block_n: int = DEFAULT_BLOCK_N,
+                       interpret: bool = False):
+    """region_ids: [n] int32 (pad with -1); powers: [n] f32."""
+    n = region_ids.shape[0]
+    n_pad = (block_n - n % block_n) % block_n
+    if n_pad:
+        region_ids = jnp.concatenate(
+            [region_ids, jnp.full((n_pad,), -1, region_ids.dtype)])
+        powers = jnp.concatenate([powers, jnp.zeros((n_pad,), powers.dtype)])
+    grid = (region_ids.shape[0] // block_n,)
+
+    out_shape = [jax.ShapeDtypeStruct((num_regions,), jnp.float32)] * 3
+    out_specs = [pl.BlockSpec((num_regions,), lambda i: (0,))] * 3
+    return pl.pallas_call(
+        functools.partial(_kernel, num_regions=num_regions),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,)),
+                  pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(region_ids, powers.astype(jnp.float32))

@@ -1,0 +1,33 @@
+"""Production mesh construction (assignment MULTI-POD DRY-RUN §1).
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state. The dry-run launcher
+sets XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import; ordinary smoke tests and benches see 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_small_mesh", "dp_axes_for"]
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_small_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests (device count permitting)."""
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+
+
+def dp_axes_for(mesh) -> tuple[str, ...]:
+    """The data-parallel axes present in a mesh (pod spans pods)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

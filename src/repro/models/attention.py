@@ -1,0 +1,235 @@
+"""GQA attention: full / chunked-prefill / cached-decode paths.
+
+TP sharding: head-parallel projections, row-parallel output (Megatron).
+GQA is computed in MHA form — KV heads are repeated to the full head count
+(`jnp.repeat` on the head axis, which XLA fuses into the score matmuls) so
+the *query-head axis stays intact* end-to-end and shards cleanly over the
+``model`` mesh axis even when kv_heads < TP width. A [KV, G] reshape would
+instead break GSPMD propagation and force activation all-gathers (measured
+in the §Perf log).
+
+Decode supports a sequence-sharded KV cache: the softmax reductions over
+the sharded key axis lower to psums (flash-decoding split-K) under GSPMD.
+
+The Pallas flash-attention kernel (``repro.kernels.flash_attention``) is
+selected with ``impl="pallas"`` on TPU; ``impl="chunked"`` is the jnp path
+used by the CPU dry-run and as the oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.regions import region
+from repro.models.layers import Params, apply_rope, dense_init, linear, rmsnorm
+from repro.sharding.rules import constrain
+
+NEG_INF = -2.0e38
+
+
+def attention_init(key, cfg: ModelConfig) -> Params:
+    dh, H, KV, d = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d, H * dh),
+        "wk": dense_init(ks[1], d, KV * dh),
+        "wv": dense_init(ks[2], d, KV * dh),
+        "wo": dense_init(ks[3], H * dh, d, scale=(H * dh) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((dh,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.ones((dh,), jnp.float32)}
+    return p
+
+
+def _project_qkv(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 positions: jnp.ndarray):
+    """x [B,S,d] → q [B,H,S,dh], k/v [B,KV,S,dh] (roped, normed)."""
+    B, S, _ = x.shape
+    dh, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = linear(p["wq"], x).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    k = linear(p["wk"], x).reshape(B, S, KV, dh).transpose(0, 2, 1, 3)
+    v = linear(p["wv"], x).reshape(B, S, KV, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, eps=cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, eps=cfg.norm_eps)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "heads", "seq", "head_dim")
+    k = constrain(k, "batch", "kv_heads", "seq", "head_dim")
+    v = constrain(v, "batch", "kv_heads", "seq", "head_dim")
+    return q, k, v
+
+
+def _repeat_kv(t: jnp.ndarray, cfg: ModelConfig, *, seq_axis: str | None
+               ) -> jnp.ndarray:
+    """[B,KV,S,dh] → [B,H,S,dh]; keeps the head axis TP-shardable.
+
+    When the KV-cache *sequence* is sharded (flash-decoding split-K for
+    GQA groups narrower than the TP axis), the head axis must stay
+    replicated — both can't land on the same mesh axis.
+    """
+    from repro.sharding.rules import current_rules
+    if cfg.q_per_kv != 1:
+        t = jnp.repeat(t, cfg.q_per_kv, axis=1)
+    r = current_rules()
+    head_axis = "heads"
+    if (seq_axis is not None and r is not None
+            and r.mapping.get(seq_axis) is not None):
+        head_axis = None
+    return constrain(t, "batch", head_axis, seq_axis, "head_dim")
+
+
+def _sdpa(q, k, v, mask) -> jnp.ndarray:
+    """MHA scaled-dot-product. q: [B,H,Sq,dh], k/v: [B,H,Skv,dh], mask
+    broadcastable to [B,H,Sq,Skv] (True = attend). fp32 softmax."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhtd->bhqt", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (dh ** -0.5)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqt,bhtd->bhqd", probs.astype(v.dtype), v)
+
+
+def _merge_heads(p: Params, out: jnp.ndarray) -> jnp.ndarray:
+    """[B,H,S,dh] → o-proj → [B,S,d]."""
+    B, H, S, dh = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * dh)
+    y = linear(p["wo"], out)
+    return constrain(y, "batch", "seq", "embed")
+
+
+def _attend(cfg: ModelConfig, q, k, v, positions, *, impl: str,
+            q_chunk: int, unroll_chunks: bool = False):
+    """Core attention. q: [B,H,S,dh]; k/v: [B,KV,S,dh] → [B,H,S,dh]."""
+    B, H, S, dh = q.shape
+
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, _repeat_kv(k, cfg, seq_axis="seq"),
+                                      _repeat_kv(v, cfg, seq_axis="seq"),
+                                      causal=cfg.causal)
+
+    kr = _repeat_kv(k, cfg, seq_axis="seq")
+    vr = _repeat_kv(v, cfg, seq_axis="seq")
+
+    if impl == "full" or S <= q_chunk:
+        with region("attn_score"):
+            pos_q = positions[:, None, :, None]
+            pos_k = positions[:, None, None, :]
+            mask = (pos_k <= pos_q) if cfg.causal else jnp.ones(
+                (B, 1, S, S), bool)
+            return _sdpa(q, kr, vr, mask)
+
+    # chunked: lax.scan over query chunks; keys/values stay whole.
+    assert S % q_chunk == 0, (S, q_chunk)
+    n_chunks = S // q_chunk
+    qc = jnp.moveaxis(q.reshape(B, H, n_chunks, q_chunk, dh), 2, 0)
+    pc = jnp.moveaxis(positions.reshape(B, n_chunks, q_chunk), 1, 0)
+
+    def body(_, inp):
+        qi, pi = inp
+        with region("attn_score"):
+            pos_k = positions[:, None, None, :]
+            mask = (pos_k <= pi[:, None, :, None]) if cfg.causal \
+                else jnp.ones((B, 1, q_chunk, S), bool)
+            oi = _sdpa(qi, kr, vr, mask)
+        return None, oi
+
+    if unroll_chunks:
+        # Cost-compile path: Python loop so XLA cost analysis counts every
+        # chunk (a while body is counted once — see dryrun docstring).
+        outs = [body(None, (qc[i], pc[i]))[1] for i in range(n_chunks)]
+        out = jnp.stack(outs)
+    else:
+        # Nested remat: without it, backward through the chunk scan saves
+        # every chunk's fp32 scores/probs (≈ full S² materialization again,
+        # defeating chunking); with it, each chunk's scores are recomputed
+        # in its own bwd.
+        _, out = jax.lax.scan(jax.checkpoint(body), None, (qc, pc))
+    return jnp.moveaxis(out, 0, 2).reshape(B, H, S, dh)
+
+
+def attention(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+              positions: jnp.ndarray, *, impl: str = "full",
+              q_chunk: int = 1024,
+              unroll_chunks: bool = False) -> jnp.ndarray:
+    """Self-attention over a full sequence (train / prefill).
+
+    impl: "full" materializes [Sq,Skv] scores (small seq);
+          "chunked" scans over query chunks (bounded memory at 32k);
+          "pallas" dispatches to the flash-attention kernel (TPU).
+    """
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = _attend(cfg, q, k, v, positions, impl=impl, q_chunk=q_chunk,
+                  unroll_chunks=unroll_chunks)
+    return _merge_heads(p, out)
+
+
+def attention_prefill(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                      positions: jnp.ndarray, max_len: int, *,
+                      impl: str = "chunked", q_chunk: int = 1024,
+                      cache_dtype=jnp.bfloat16, unroll_chunks: bool = False):
+    """Prefill: forward over the prompt AND populate a [.., max_len, ..]
+    KV cache. Returns (y, cache_k, cache_v)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = _attend(cfg, q, k, v, positions, impl=impl, q_chunk=q_chunk,
+                  unroll_chunks=unroll_chunks)
+    y = _merge_heads(p, out)
+    shape = (B, cfg.n_kv_heads, max_len, cfg.head_dim)
+    pad = [(0, 0), (0, 0), (0, max_len - S), (0, 0)]
+    ck = jnp.pad(k.astype(cache_dtype), pad)
+    cv = jnp.pad(v.astype(cache_dtype), pad)
+    ck = constrain(ck, "batch", "kv_heads", "kv_seq", "head_dim")
+    cv = constrain(cv, "batch", "kv_heads", "kv_seq", "head_dim")
+    return y, ck, cv
+
+
+def attention_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                     cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                     cur_len: jnp.ndarray):
+    """One-token decode. x: [B,1,d]; cache_k/v: [B,KV,T,dh]; cur_len: [] int32
+    = number of valid positions already in the cache.
+
+    Returns (y [B,1,d], new_cache_k, new_cache_v).
+    """
+    B, _, _ = x.shape
+    T = cache_k.shape[2]
+    positions = jnp.broadcast_to(cur_len[None, None], (B, 1)).astype(jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+
+    # Write the new K/V at cur_len.
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, 0, cur_len, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, 0, cur_len, 0))
+    cache_k = constrain(cache_k, "batch", "kv_heads", "kv_seq", "head_dim")
+    cache_v = constrain(cache_v, "batch", "kv_heads", "kv_seq", "head_dim")
+
+    with region("attn_decode"):
+        valid = (jnp.arange(T)[None, None, None, :] <= cur_len)
+        if cfg.decode_grouped and cfg.q_per_kv > 1:
+            # Grouped form: contract q-groups directly against the raw
+            # [B,KV,T,dh] cache — no head-repetition, so the cache is read
+            # once instead of q_per_kv times (§Perf: memory-bound decode).
+            # Only safe when heads aren't TP-sharded (kv_seq decode mode).
+            KV, G, dh = cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim
+            qg = q.reshape(B, KV, G, 1, dh).astype(jnp.float32)
+            kc = cache_k.astype(jnp.float32)
+            scores = jnp.einsum("bkgqd,bktd->bkgqt", qg, kc) * dh ** -0.5
+            scores = jnp.where(valid[:, :, None], scores, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum("bkgqt,bktd->bkgqd", probs,
+                             cache_v.astype(jnp.float32))
+            out = out.reshape(B, KV * G, 1, dh).astype(q.dtype)
+        else:
+            kr = _repeat_kv(cache_k.astype(q.dtype), cfg, seq_axis="kv_seq")
+            vr = _repeat_kv(cache_v.astype(q.dtype), cfg, seq_axis="kv_seq")
+            out = _sdpa(q, kr, vr, valid)
+    y = _merge_heads(p, out)
+    return y, cache_k, cache_v

@@ -1,0 +1,131 @@
+"""Foundational layers (pure JAX, no flax): norms, linears, rope, embeddings.
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Initializers take
+an explicit PRNG key. Compute dtype is configurable (bf16 default on TPU);
+parameters are kept in fp32 (master weights) and cast at use sites.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict[str, Any]
+
+
+# -- init ---------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, scale: float | None = None
+               ) -> jnp.ndarray:
+    """Truncated-normal fan-in init (LLM-standard)."""
+    std = scale if scale is not None else d_in ** -0.5
+    return (jax.random.truncated_normal(key, -3, 3, (d_in, d_out), jnp.float32)
+            * std)
+
+
+def embed_init(key, vocab: int, d: int, *, scale: float = 0.02) -> jnp.ndarray:
+    return (jax.random.truncated_normal(key, -3, 3, (vocab, d), jnp.float32)
+            * scale)
+
+
+# -- norms --------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, *, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm in fp32 accumulation, output in input dtype."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(dtype)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, *, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(dtype)
+
+
+def norm(p: Params, x: jnp.ndarray, *, kind: str = "rms",
+         eps: float = 1e-5) -> jnp.ndarray:
+    if kind == "rms":
+        return rmsnorm(p, x, eps=eps)
+    return layernorm(p, x, eps=eps)
+
+
+def norm_init(d: int, kind: str = "rms") -> Params:
+    return rmsnorm_init(d) if kind == "rms" else layernorm_init(d)
+
+
+# -- linear -------------------------------------------------------------------
+
+def linear(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """x @ w with weight cast to activation dtype."""
+    return x @ w.astype(x.dtype)
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, *, gated: bool = True) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {"up": dense_init(ks[0], d, d_ff),
+                 "down": dense_init(ks[1], d_ff, d)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d, d_ff)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray, *, gated: bool = True,
+        act: str = "silu") -> jnp.ndarray:
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    up = linear(p["up"], x)
+    h = a(linear(p["gate"], x)) * up if gated else a(up)
+    return linear(p["down"], h)
+
+
+# -- rotary embeddings ----------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float = 1e4) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e4) -> jnp.ndarray:
+    """Rotate pairs. x: [B, H, S, d_head] or [B, S, d_head]; positions: [B, S]."""
+    d_head = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d_head, theta))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [B, S, d/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    if x.ndim == 4:  # insert head axis
+        cos, sin = cos[:, None], sin[:, None]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = xf1 * cos - xf2 * sin
+    r2 = xf1 * sin + xf2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> np.ndarray:
+    """Absolute sinusoidal table (encoder models without RoPE)."""
+    pos = np.arange(seq, dtype=np.float32)[:, None]
+    i = np.arange(d // 2, dtype=np.float32)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    out = np.zeros((seq, d), dtype=np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out

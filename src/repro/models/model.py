@@ -1,0 +1,431 @@
+"""Top-level model assembly: init / forward / loss / cache / decode for all
+ten architecture families, with scan-over-layers and selectable remat.
+
+Vocab-parallel cross-entropy: logits stay sharded over the ``model`` mesh
+axis on the vocab dim; max/logsumexp/label-pick reductions over the sharded
+axis lower to psums (Megatron-style) instead of gathering [B,S,V].
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.regions import region
+from repro.models import transformer as tb
+from repro.models.layers import (Params, embed_init, norm, norm_init,
+                                 sinusoidal_positions)
+from repro.sharding.rules import constrain
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step"]
+
+
+def _compute_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _scan(body, carry, xs, unroll: bool):
+    """lax.scan or a Python-unrolled loop.
+
+    Unrolling exists for the dry-run/roofline path: XLA's cost analysis
+    counts a while-loop body ONCE, so scanned-layer FLOPs/collectives would
+    be undercounted by n_layers. Production runs keep scan (compact HLO).
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x_i = jax.tree.map(lambda t: t[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    p: Params = {}
+    if not cfg.embed_inputs:
+        p["embed"] = embed_init(keys[0], cfg.vocab_size, cfg.d_model)
+    p["final_norm"] = norm_init(cfg.d_model, cfg.norm_kind)
+    from repro.models.layers import dense_init
+    p["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        lk = jax.random.split(keys[2], cfg.n_layers)
+        p["blocks"] = jax.vmap(lambda k: tb.tblock_init(k, cfg))(lk)
+    elif cfg.family == "ssm" and cfg.slstm_every:          # xLSTM
+        n_pairs = cfg.n_layers // 2
+        lk = jax.random.split(keys[2], n_pairs)
+        p["pairs"] = jax.vmap(lambda k: tb.xlstm_pair_init(k, cfg))(lk)
+    elif cfg.family == "hybrid":                           # zamba2
+        gs = cfg.attn_every
+        n_groups = cfg.n_layers // gs
+        tail = cfg.n_layers - n_groups * gs
+        gk = jax.random.split(keys[2], n_groups)
+        p["groups"] = jax.vmap(
+            lambda k: tb.zamba_group_init(k, cfg, gs))(gk)
+        if tail:
+            p["tail"] = tb.zamba_group_init(keys[3], cfg, tail)
+        p["shared_attn"] = tb.shared_attn_init(keys[4], cfg)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(p: Params, cfg: ModelConfig, batch: dict[str, jax.Array]):
+    """Token/frontend embedding → x [B,S,d] (compute dtype), positions [B,S]."""
+    dt = _compute_dtype(cfg)
+    if cfg.embed_inputs:                     # audio: precomputed frame embeds
+        x = batch["embeds"].astype(dt)
+        B, S = x.shape[:2]
+        x = x + jnp.asarray(sinusoidal_positions(S, cfg.d_model), dt)[None]
+    else:
+        tokens = batch["tokens"]
+        with region("embed"):
+            x = jnp.take(p["embed"].astype(dt), tokens, axis=0)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            x = jnp.concatenate([batch["patch_embeds"].astype(dt), x], axis=1)
+        B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = constrain(x, "batch", "seq", "embed")
+    return x, positions
+
+
+def _backbone(p: Params, cfg: ModelConfig, x: jax.Array,
+              positions: jax.Array, *, attn_impl: str = "full",
+              ssd_chunk: int = 128, unroll: bool = False,
+              q_chunk: int = 1024):
+    """All blocks (no embed / final norm / head). Returns (x, aux)."""
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def body(carry, pl):
+            h, aux = carry
+            h = constrain(h, "batch", "seq_act", "embed")   # Megatron SP
+            h, a = tb.tblock_forward(pl, cfg, h, positions,
+                                     attn_impl=attn_impl, q_chunk=q_chunk,
+                                     unroll_chunks=unroll)
+            return (h, aux + a), None
+        (x, aux), _ = _scan(_remat(body, cfg), (x, aux0), p["blocks"], unroll)
+    elif cfg.family == "ssm":
+        def body(carry, pl):
+            h, aux = carry
+            h = constrain(h, "batch", "seq_act", "embed")
+            h, a = tb.xlstm_pair_forward(pl, cfg, h, positions,
+                                         chunk=ssd_chunk,
+                                         unroll_chunks=unroll)
+            return (h, aux + a), None
+        (x, aux), _ = _scan(_remat(body, cfg), (x, aux0), p["pairs"], unroll)
+    else:                                                   # hybrid (zamba2)
+        shared = p["shared_attn"]
+
+        def body(h, pg):
+            h = constrain(h, "batch", "seq_act", "embed")
+            h = tb.zamba_group_forward(pg, cfg, h, chunk=ssd_chunk,
+                                       unroll_chunks=unroll)
+            h = tb.shared_attn_forward(shared, cfg, h, positions,
+                                       attn_impl=attn_impl, q_chunk=q_chunk,
+                                       unroll_chunks=unroll)
+            return h, None
+        x, _ = _scan(_remat(body, cfg), x, p["groups"], unroll)
+        if "tail" in p:
+            x = tb.zamba_group_forward(p["tail"], cfg, x, chunk=ssd_chunk,
+                                       unroll_chunks=unroll)
+        aux = aux0
+    return x, aux
+
+
+def forward(p: Params, cfg: ModelConfig, batch: dict[str, jax.Array], *,
+            attn_impl: str = "full", ssd_chunk: int = 128,
+            unroll: bool = False, q_chunk: int = 1024):
+    """Full-sequence forward → logits [B, S, V] (vocab-sharded), aux loss."""
+    x, positions = _embed(p, cfg, batch)
+    x, aux = _backbone(p, cfg, x, positions, attn_impl=attn_impl,
+                       ssd_chunk=ssd_chunk, unroll=unroll, q_chunk=q_chunk)
+    x = constrain(x, "batch", None, "embed")
+    x = norm(p["final_norm"], x, kind=cfg.norm_kind, eps=cfg.norm_eps)
+    with region("lm_head"):
+        logits = x @ p["lm_head"].astype(x.dtype)
+        logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Vocab-parallel stable CE. logits [B,S,V] sharded on V; labels [B,S].
+
+    Every [B,S,V]-shaped intermediate is explicitly constrained to the
+    logits sharding: without this, the label one-hot (built from an
+    unsharded iota) makes GSPMD all-gather the fp32 logits — a
+    B·S·V·4-byte replication that single-handedly OOMs the step (seen as
+    268 GB/device in the yi-6b dry-run; §Perf log).
+    """
+    lf = logits.astype(jnp.float32)
+    lf = constrain(lf, "batch", "seq", "vocab")
+    m = jax.lax.stop_gradient(lf.max(axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, len(lf.shape) - 1)
+    iota = constrain(iota, "batch", "seq", "vocab")
+    onehot = labels[..., None] == iota
+    ll = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    nll = constrain(lse - ll, "batch", "seq")
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def _ce_sum(logits, labels):
+    """Vocab-parallel CE, summed (not meaned) over positions."""
+    lf = logits.astype(jnp.float32)
+    lf = constrain(lf, "batch", "seq", "vocab")
+    m = jax.lax.stop_gradient(lf.max(axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, len(lf.shape) - 1)
+    iota = constrain(iota, "batch", "seq", "vocab")
+    ll = jnp.sum(jnp.where(labels[..., None] == iota, lf, 0.0), axis=-1)
+    return jnp.sum(lse - ll)
+
+
+def fused_lm_head_ce(p: Params, cfg: ModelConfig, x: jax.Array,
+                     labels: jax.Array, *, seq_chunk: int = 512):
+    """lm_head matmul + CE fused over sequence chunks.
+
+    Never materializes the full [B,S,V] logits: each chunk's logits are
+    produced, consumed, and (via checkpoint) recomputed in backward —
+    the dominant memory saving for large-vocab training steps (§Perf).
+    """
+    B, S, _ = x.shape
+    W = p["lm_head"]
+    if S % seq_chunk != 0:
+        # largest divisor of S not exceeding the requested chunk (falling
+        # back to one chunk would resurrect the full-logits buffer — seen
+        # as 115 GB/dev on the VLM cell whose text length isn't 2^k)
+        seq_chunk = next((c for c in range(seq_chunk, 0, -1)
+                          if S % c == 0), S)
+    n_chunks = S // seq_chunk
+    xc = jnp.moveaxis(x.reshape(B, n_chunks, seq_chunk, -1), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n_chunks, seq_chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        xi, li = inp
+        logits = xi @ W.astype(xi.dtype)
+        logits = constrain(logits, "batch", "seq", "vocab")
+        return acc + _ce_sum(logits, li), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (B * S)
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch: dict[str, jax.Array], *,
+            attn_impl: str = "full", ssd_chunk: int = 128,
+            unroll: bool = False, fuse_ce: bool | None = None,
+            q_chunk: int = 1024, ce_chunk: int = 512):
+    labels = batch["labels"]
+    if fuse_ce is None:
+        fuse_ce = (batch.get("loss_mask") is None
+                   and labels.shape[-1] >= 2048)
+    if fuse_ce:
+        # Run the backbone, then the fused chunked lm_head+CE. For VLM,
+        # loss covers text positions only: slice the backbone output (the
+        # patch prefix carries no labels) before the head.
+        x, positions = _embed(p, cfg, batch)
+        x, aux = _backbone(p, cfg, x, positions, attn_impl=attn_impl,
+                           ssd_chunk=ssd_chunk, unroll=unroll,
+                           q_chunk=q_chunk)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            n_patch = batch["patch_embeds"].shape[1]
+            x = constrain(x, "batch", None, "embed")[:, n_patch:, :]
+        x = constrain(x, "batch", "seq_act", "embed")
+        x = norm(p["final_norm"], x, kind=cfg.norm_kind, eps=cfg.norm_eps)
+        with region("loss"):
+            ce = fused_lm_head_ce(p, cfg, x, labels, seq_chunk=ce_chunk)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    logits, aux = forward(p, cfg, batch, attn_impl=attn_impl,
+                          ssd_chunk=ssd_chunk, unroll=unroll,
+                          q_chunk=q_chunk)
+    with region("loss"):
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            n_patch = batch["patch_embeds"].shape[1]
+            logits = logits[:, n_patch:, :]
+        ce = cross_entropy(logits, labels, batch.get("loss_mask"))
+    metrics = {"ce": ce, "aux": aux}
+    return ce + aux, metrics
+
+
+def prefill(p: Params, cfg: ModelConfig, batch: dict[str, jax.Array],
+            max_len: int, *, attn_impl: str = "chunked",
+            ssd_chunk: int = 128, cache_dtype=jnp.bfloat16,
+            unroll: bool = False, q_chunk: int = 1024):
+    """Inference prefill: forward over the prompt, returning (logits of the
+    last position [B,1,V], populated cache, cur_len)."""
+    x, positions = _embed(p, cfg, batch)
+    S = x.shape[1]
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def body(h, pl):
+            h = constrain(h, "batch", "seq_act", "embed")   # Megatron SP
+            h, cache = tb.tblock_prefill(pl, cfg, h, positions, max_len,
+                                         attn_impl=attn_impl,
+                                         cache_dtype=cache_dtype,
+                                         q_chunk=q_chunk,
+                                         unroll_chunks=unroll)
+            return h, cache
+        x, caches = _scan(body, x, p["blocks"], unroll)
+        cache = {"blocks": caches}
+    elif cfg.family == "ssm":
+        def body(h, pl):
+            h = constrain(h, "batch", "seq_act", "embed")
+            h, cache = tb.xlstm_pair_prefill(pl, cfg, h, positions,
+                                             chunk=ssd_chunk,
+                                             unroll_chunks=unroll)
+            return h, cache
+        x, caches = _scan(body, x, p["pairs"], unroll)
+        cache = {"pairs": caches}
+    else:
+        shared = p["shared_attn"]
+
+        def body(h, pg):
+            h = constrain(h, "batch", "seq_act", "embed")
+            h, cg = tb.zamba_group_prefill(pg, cfg, h, chunk=ssd_chunk,
+                                           unroll_chunks=unroll)
+            h, ca = tb.shared_attn_prefill(shared, cfg, h, positions,
+                                           max_len, attn_impl=attn_impl,
+                                           cache_dtype=cache_dtype,
+                                           q_chunk=q_chunk,
+                                           unroll_chunks=unroll)
+            return h, (cg, ca)
+        x, (cgs, cas) = _scan(body, x, p["groups"], unroll)
+        cache = {"groups": cgs, "shared_attn": cas}
+        if "tail" in p:
+            x, ct = tb.zamba_group_prefill(p["tail"], cfg, x,
+                                           chunk=ssd_chunk,
+                                           unroll_chunks=unroll)
+            cache["tail"] = ct
+
+    x = norm(p["final_norm"], x, kind=cfg.norm_kind, eps=cfg.norm_eps)
+    with region("lm_head"):
+        logits = x[:, -1:, :] @ p["lm_head"].astype(x.dtype)
+        logits = constrain(logits, "batch", None, "vocab")
+    return logits, cache, jnp.asarray(S, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Cache + decode
+# ---------------------------------------------------------------------------
+
+def _kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    KV, dh = cfg.n_kv_heads, cfg.head_dim
+    shape = (batch, KV, max_len, dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    from repro.models.ssm import ssm_cache_init
+    from repro.models.xlstm import mlstm_cache_init, slstm_cache_init
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def one(_):
+            return _kv_cache(cfg, batch, max_len, dtype)
+        return {"blocks": jax.vmap(one)(jnp.arange(cfg.n_layers))}
+    if cfg.family == "ssm":
+        n_pairs = cfg.n_layers // 2
+        def one(_):
+            return {"m": mlstm_cache_init(cfg, batch),
+                    "s": slstm_cache_init(cfg, batch)}
+        return {"pairs": jax.vmap(one)(jnp.arange(n_pairs))}
+    # hybrid
+    gs = cfg.attn_every
+    n_groups = cfg.n_layers // gs
+    tail = cfg.n_layers - n_groups * gs
+    def ssm_g(n):
+        return jax.vmap(lambda _: ssm_cache_init(cfg, batch, dtype))(
+            jnp.arange(n))
+    cache: Params = {
+        "groups": jax.vmap(lambda _: ssm_g(gs))(jnp.arange(n_groups)),
+        "shared_attn": jax.vmap(
+            lambda _: _kv_cache(cfg, batch, max_len, dtype))(
+                jnp.arange(n_groups)),
+    }
+    if tail:
+        cache["tail"] = ssm_g(tail)
+    return cache
+
+
+def decode_step(p: Params, cfg: ModelConfig, tokens: jax.Array,
+                cache: Params, cur_len: jax.Array, *, unroll: bool = False):
+    """One decode step. tokens: [B,1] int32 (or embeds [B,1,d] for audio).
+
+    Returns (logits [B,1,V], new_cache).
+    """
+    dt = _compute_dtype(cfg)
+    if cfg.embed_inputs:
+        x = tokens.astype(dt)
+    else:
+        with region("embed"):
+            x = jnp.take(p["embed"].astype(dt), tokens, axis=0)
+    x = constrain(x, "batch", None, "embed")
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def body(h, inp):
+            pl, cl = inp
+            h, ncl = tb.tblock_decode(pl, cfg, h, cl, cur_len)
+            return h, ncl
+        x, nc = _scan(body, x, (p["blocks"], cache["blocks"]), unroll)
+        new_cache = {"blocks": nc}
+    elif cfg.family == "ssm":
+        def body(h, inp):
+            pl, cl = inp
+            h, ncl = tb.xlstm_pair_decode(pl, cfg, h, cl, cur_len)
+            return h, ncl
+        x, nc = _scan(body, x, (p["pairs"], cache["pairs"]), unroll)
+        new_cache = {"pairs": nc}
+    else:                                                   # hybrid
+        shared = p["shared_attn"]
+
+        def body(h, inp):
+            pg, cg, ca = inp
+            h, ncg = tb.zamba_group_decode(pg, cfg, h, cg)
+            h, nca = tb.shared_attn_decode(shared, cfg, h, ca, cur_len)
+            return h, (ncg, nca)
+        x, (ncg, nca) = _scan(
+            body, x, (p["groups"], cache["groups"], cache["shared_attn"]),
+            unroll)
+        new_cache = {"groups": ncg, "shared_attn": nca}
+        if "tail" in cache:
+            x, nct = tb.zamba_group_decode(p["tail"], cfg, x, cache["tail"])
+            new_cache["tail"] = nct
+
+    x = norm(p["final_norm"], x, kind=cfg.norm_kind, eps=cfg.norm_eps)
+    with region("lm_head"):
+        logits = x @ p["lm_head"].astype(x.dtype)
+        logits = constrain(logits, "batch", None, "vocab")
+    return logits, new_cache

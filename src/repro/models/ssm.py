@@ -1,0 +1,202 @@
+"""Mamba2 (SSD, state-space duality) blocks: chunked train/prefill scan +
+O(1) recurrent decode.
+
+TPU adaptation notes (DESIGN.md §2): the CUDA Mamba2 kernel fuses the
+chunked scan in shared memory; here the chunk loop is a ``lax.scan`` whose
+body is MXU-shaped einsums (chunk=128/256 keeps the [Q,Q] intra-chunk
+attention matrix VMEM-resident after XLA fusion). The depthwise conv is
+split: x-channels (TP-sharded over SSM heads) and B/C channels
+(replicated) get separate convolutions — equivalent expressiveness,
+shard-friendly layout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.regions import region
+from repro.models.layers import Params, dense_init, rmsnorm
+from repro.sharding.rules import constrain
+
+__all__ = ["ssm_init", "ssm_forward", "ssm_decode", "ssm_cache_init"]
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_head_dim
+    return d_in, heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def ssm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_in, H, hd, N = _dims(cfg)
+    k = jax.random.split(key, 8)
+    return {
+        "in_x": dense_init(k[0], d, d_in),
+        "in_z": dense_init(k[1], d, d_in),
+        "in_bc": dense_init(k[2], d, 2 * N),
+        "in_dt": dense_init(k[3], d, H),
+        "conv_x": 0.1 * jax.random.normal(k[4], (cfg.ssm_conv, d_in),
+                                          jnp.float32),
+        "conv_bc": 0.1 * jax.random.normal(k[5], (cfg.ssm_conv, 2 * N),
+                                           jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(k[6], (H,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm": {"scale": jnp.ones((d_in,), jnp.float32)},
+        "out": dense_init(k[7], d_in, d),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv. x: [B,S,C], w: [K,C]. state: [B,K-1,C] tail of
+    the previous tokens (decode). Returns (y [B,S,C], new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # [B, S+K-1, C]
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+            for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else pad
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_inputs(p: Params, cfg: ModelConfig, u: jnp.ndarray,
+                conv_x_state=None, conv_bc_state=None):
+    """Project u [B,S,d] → (x [B,S,H,hd], Bmat/Cmat [B,S,N], dt [B,S,H],
+    z [B,S,d_in], conv states)."""
+    d_in, H, hd, N = _dims(cfg)
+    z = u @ p["in_z"].astype(u.dtype)
+    x = u @ p["in_x"].astype(u.dtype)
+    bc = u @ p["in_bc"].astype(u.dtype)
+    x = constrain(x, "batch", "seq", "conv_dim")
+    x, cxs = _causal_conv(x, p["conv_x"], conv_x_state)
+    bc, cbs = _causal_conv(bc, p["conv_bc"], conv_bc_state)
+    Bmat, Cmat = bc[..., :N], bc[..., N:]
+    dt = jax.nn.softplus((u @ p["in_dt"].astype(u.dtype)).astype(jnp.float32)
+                         + p["dt_bias"])                      # [B,S,H]
+    x = x.reshape(*x.shape[:2], H, hd)
+    return x, Bmat, Cmat, dt, z, cxs, cbs
+
+
+def _ssd_chunked(x, Bmat, Cmat, dt, A, *, chunk: int, h0=None,
+                 unroll: bool = False):
+    """Chunked SSD scan.
+
+    x: [B,S,H,hd]; Bmat/Cmat: [B,S,N]; dt: [B,S,H] (fp32); A: [H] (fp32, <0).
+    Returns (y [B,S,H,hd], h_final [B,H,hd,N]).
+    """
+    Bsz, S, H, hd = x.shape
+    N = Bmat.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    dA = dt * A                                            # [B,S,H]  (<= 0)
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(Bsz, n_chunks, chunk, *t.shape[2:]),
+                            1, 0)
+
+    xc, Bc, Cc, dAc, dtc = map(to_chunks, (x, Bmat, Cmat, dA, dt))
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, hd, N), jnp.float32)
+
+    def body(h, inp):
+        xq, Bq, Cq, dAq, dtq = inp        # [B,Q,...]
+        cs = jnp.cumsum(dAq, axis=1)      # [B,Q,H]
+        total = cs[:, -1]                 # [B,H]
+        # Intra-chunk (masked) attention: L[i,j] = exp(cs_i - cs_j), i >= j.
+        diff = cs[:, :, None, :] - cs[:, None, :, :]        # [B,Q,Q,H]
+        mask = jnp.tril(jnp.ones((xq.shape[1], xq.shape[1]), bool))
+        L = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", Cq.astype(jnp.float32),
+                            Bq.astype(jnp.float32))         # [B,Q,Q]
+        att = scores[..., None] * L * dtq[:, None, :, :]     # [B,Q,Q,H]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att,
+                             xq.astype(jnp.float32))
+        # Inter-chunk: contribution of the carried state.
+        y_inter = jnp.exp(cs)[..., None] * jnp.einsum(
+            "bin,bhpn->bihp", Cq.astype(jnp.float32), h)
+        # State update: h' = exp(total)·h + Σ_j exp(total - cs_j)·dt_j·B_j x_j.
+        w = jnp.exp(total[:, None] - cs) * dtq               # [B,Q,H]
+        h_new = (jnp.exp(total)[:, :, None, None] * h
+                 + jnp.einsum("bjh,bjn,bjhp->bhpn", w,
+                              Bq.astype(jnp.float32), xq.astype(jnp.float32)))
+        return h_new, y_intra + y_inter
+
+    if unroll:
+        h, ys = h0, []
+        for i in range(n_chunks):
+            h, yi = body(h, (xc[i], Bc[i], Cc[i], dAc[i], dtc[i]))
+            ys.append(yi)
+        h_final, yc = h, jnp.stack(ys)
+    else:
+        h_final, yc = jax.lax.scan(body, h0, (xc, Bc, Cc, dAc, dtc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, S, H, hd)
+    return y, h_final
+
+
+def ssm_forward(p: Params, cfg: ModelConfig, u: jnp.ndarray, *,
+                chunk: int = 128, return_cache: bool = False,
+                unroll_chunks: bool = False):
+    """Full-sequence Mamba2 block (train / prefill). u: [B,S,d] → [B,S,d].
+
+    With ``return_cache`` also returns the recurrent cache (final SSM state
+    + conv tails), i.e. the prefill path."""
+    d_in, H, hd, N = _dims(cfg)
+    with region("ssm_proj"):
+        x, Bmat, Cmat, dt, z, cxs, cbs = _ssd_inputs(p, cfg, u)
+    A = -jnp.exp(p["A_log"])
+    with region("ssm_scan"):
+        y, h_final = _ssd_chunked(x, Bmat, Cmat, dt, A,
+                                  chunk=min(chunk, u.shape[1]),
+                                  unroll=unroll_chunks)
+        y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(*u.shape[:2], d_in).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, eps=cfg.norm_eps)
+    with region("ssm_out"):
+        out = y @ p["out"].astype(u.dtype)
+    out = constrain(out, "batch", "seq", "embed")
+    if return_cache:
+        return out, {"h": h_final, "conv_x": cxs, "conv_bc": cbs}
+    return out
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    d_in, H, hd, N = _dims(cfg)
+    K = cfg.ssm_conv
+    return {
+        "h": jnp.zeros((batch, H, hd, N), jnp.float32),
+        "conv_x": jnp.zeros((batch, K - 1, d_in), dtype),
+        "conv_bc": jnp.zeros((batch, K - 1, 2 * N), dtype),
+    }
+
+
+def ssm_decode(p: Params, cfg: ModelConfig, u: jnp.ndarray, cache: Params):
+    """Single-token recurrent update. u: [B,1,d]. Returns (y, new_cache)."""
+    d_in, H, hd, N = _dims(cfg)
+    x, Bmat, Cmat, dt, z, cxs, cbs = _ssd_inputs(
+        p, cfg, u, cache["conv_x"], cache["conv_bc"])
+    A = -jnp.exp(p["A_log"])
+    xq = x[:, 0].astype(jnp.float32)              # [B,H,hd]
+    Bq = Bmat[:, 0].astype(jnp.float32)           # [B,N]
+    Cq = Cmat[:, 0].astype(jnp.float32)
+    dtq = dt[:, 0]                                # [B,H]
+    with region("ssm_decode"):
+        decay = jnp.exp(dtq * A)                  # [B,H]
+        h = cache["h"] * decay[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtq, Bq, xq)
+        y = jnp.einsum("bn,bhpn->bhp", Cq, h) + p["D"][None, :, None] * xq
+    y = y.reshape(u.shape[0], 1, d_in).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, eps=cfg.norm_eps)
+    out = y @ p["out"].astype(u.dtype)
+    new_cache = {"h": h, "conv_x": cxs, "conv_bc": cbs}
+    return out, new_cache

@@ -1,0 +1,268 @@
+"""Block composition: dense/MoE transformer blocks, xLSTM pairs, zamba2
+hybrid groups — each with init / forward / decode triplets.
+
+All block forwards return ``(x, aux)`` where aux is the accumulated
+auxiliary loss (MoE load balancing; 0 elsewhere) so scans can carry it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.regions import region
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import Params, mlp, mlp_init, norm, norm_init
+
+__all__ = ["tblock_init", "tblock_forward", "tblock_decode",
+           "xlstm_pair_init", "xlstm_pair_forward", "xlstm_pair_decode",
+           "zamba_group_init", "zamba_group_forward", "zamba_group_decode",
+           "shared_attn_init", "shared_attn_forward", "shared_attn_decode"]
+
+
+# -- standard transformer block (dense / moe / audio / vlm) -------------------
+
+def tblock_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    p: Params = {
+        "ln1": norm_init(cfg.d_model, cfg.norm_kind),
+        "ln2": norm_init(cfg.d_model, cfg.norm_kind),
+        "attn": attn_mod.attention_init(ks[0], cfg),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp)
+    return p
+
+
+def tblock_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                   positions: jnp.ndarray, *, attn_impl: str = "full",
+                   q_chunk: int = 1024, unroll_chunks: bool = False):
+    with region("attn"):
+        h = attn_mod.attention(
+            p["attn"], cfg, norm(p["ln1"], x, kind=cfg.norm_kind,
+                                 eps=cfg.norm_eps),
+            positions, impl=attn_impl, q_chunk=q_chunk,
+            unroll_chunks=unroll_chunks)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        y, aux = moe_mod.moe_ffn(p["moe"], cfg,
+                                 norm(p["ln2"], x, kind=cfg.norm_kind,
+                                      eps=cfg.norm_eps))
+    else:
+        with region("ffn"):
+            y = mlp(p["mlp"], norm(p["ln2"], x, kind=cfg.norm_kind,
+                                   eps=cfg.norm_eps),
+                    gated=cfg.gated_mlp, act=cfg.act)
+    return x + y, aux
+
+
+def tblock_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray, cache: Params,
+                  cur_len: jnp.ndarray):
+    h, ck, cv = attn_mod.attention_decode(
+        p["attn"], cfg, norm(p["ln1"], x, kind=cfg.norm_kind,
+                             eps=cfg.norm_eps),
+        cache["k"], cache["v"], cur_len)
+    x = x + h
+    if cfg.family == "moe":
+        y, _ = moe_mod.moe_ffn(p["moe"], cfg,
+                               norm(p["ln2"], x, kind=cfg.norm_kind,
+                                    eps=cfg.norm_eps))
+    else:
+        y = mlp(p["mlp"], norm(p["ln2"], x, kind=cfg.norm_kind,
+                               eps=cfg.norm_eps),
+                gated=cfg.gated_mlp, act=cfg.act)
+    return x + y, {"k": ck, "v": cv}
+
+
+def tblock_prefill(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                   positions: jnp.ndarray, max_len: int, *,
+                   attn_impl: str = "chunked", cache_dtype=jnp.bfloat16,
+                   q_chunk: int = 1024, unroll_chunks: bool = False):
+    with region("attn"):
+        h, ck, cv = attn_mod.attention_prefill(
+            p["attn"], cfg, norm(p["ln1"], x, kind=cfg.norm_kind,
+                                 eps=cfg.norm_eps),
+            positions, max_len, impl=attn_impl, cache_dtype=cache_dtype,
+            q_chunk=q_chunk, unroll_chunks=unroll_chunks)
+    x = x + h
+    if cfg.family == "moe":
+        y, _ = moe_mod.moe_ffn(p["moe"], cfg,
+                               norm(p["ln2"], x, kind=cfg.norm_kind,
+                                    eps=cfg.norm_eps))
+    else:
+        with region("ffn"):
+            y = mlp(p["mlp"], norm(p["ln2"], x, kind=cfg.norm_kind,
+                                   eps=cfg.norm_eps),
+                    gated=cfg.gated_mlp, act=cfg.act)
+    return x + y, {"k": ck, "v": cv}
+
+
+# -- xLSTM pair (mLSTM block + sLSTM block) -----------------------------------
+
+def xlstm_pair_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln_m": norm_init(cfg.d_model, cfg.norm_kind),
+        "ln_s": norm_init(cfg.d_model, cfg.norm_kind),
+        "m": xlstm_mod.mlstm_init(ks[0], cfg),
+        "s": xlstm_mod.slstm_init(ks[1], cfg),
+    }
+
+
+def xlstm_pair_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                       positions, *, attn_impl: str = "full",
+                       chunk: int = 128, unroll_chunks: bool = False):
+    del positions, attn_impl
+    x = x + xlstm_mod.mlstm_forward(
+        p["m"], cfg, norm(p["ln_m"], x, kind=cfg.norm_kind, eps=cfg.norm_eps),
+        chunk=chunk, unroll_chunks=unroll_chunks)
+    x = x + xlstm_mod.slstm_forward(
+        p["s"], cfg, norm(p["ln_s"], x, kind=cfg.norm_kind, eps=cfg.norm_eps))
+    return x, jnp.zeros((), jnp.float32)
+
+
+def xlstm_pair_decode(p: Params, cfg: ModelConfig, x, cache, cur_len):
+    del cur_len
+    h, cm = xlstm_mod.mlstm_decode(
+        p["m"], cfg, norm(p["ln_m"], x, kind=cfg.norm_kind, eps=cfg.norm_eps),
+        cache["m"])
+    x = x + h
+    h, cs = xlstm_mod.slstm_decode(
+        p["s"], cfg, norm(p["ln_s"], x, kind=cfg.norm_kind, eps=cfg.norm_eps),
+        cache["s"])
+    return x + h, {"m": cm, "s": cs}
+
+
+def xlstm_pair_prefill(p: Params, cfg: ModelConfig, x, positions, *,
+                       chunk: int = 128, unroll_chunks: bool = False):
+    del positions
+    h, cm = xlstm_mod.mlstm_forward(
+        p["m"], cfg, norm(p["ln_m"], x, kind=cfg.norm_kind, eps=cfg.norm_eps),
+        return_cache=True, chunk=chunk, unroll_chunks=unroll_chunks)
+    x = x + h
+    h, cs = xlstm_mod.slstm_forward(
+        p["s"], cfg, norm(p["ln_s"], x, kind=cfg.norm_kind, eps=cfg.norm_eps),
+        return_cache=True)
+    return x + h, {"m": cm, "s": cs}
+
+
+# -- zamba2 hybrid: groups of mamba2 layers + a weight-shared attn block ------
+
+def shared_attn_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": norm_init(cfg.d_model, cfg.norm_kind),
+        "ln2": norm_init(cfg.d_model, cfg.norm_kind),
+        "attn": attn_mod.attention_init(ks[0], cfg),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp),
+    }
+
+
+def shared_attn_forward(p: Params, cfg: ModelConfig, x, positions, *,
+                        attn_impl: str = "full", q_chunk: int = 1024,
+                        unroll_chunks: bool = False):
+    with region("shared_attn"):
+        x = x + attn_mod.attention(
+            p["attn"], cfg, norm(p["ln1"], x, kind=cfg.norm_kind,
+                                 eps=cfg.norm_eps), positions,
+            impl=attn_impl, q_chunk=q_chunk, unroll_chunks=unroll_chunks)
+        x = x + mlp(p["mlp"], norm(p["ln2"], x, kind=cfg.norm_kind,
+                                   eps=cfg.norm_eps),
+                    gated=cfg.gated_mlp, act=cfg.act)
+    return x
+
+
+def shared_attn_decode(p: Params, cfg: ModelConfig, x, cache, cur_len):
+    h, ck, cv = attn_mod.attention_decode(
+        p["attn"], cfg, norm(p["ln1"], x, kind=cfg.norm_kind,
+                             eps=cfg.norm_eps),
+        cache["k"], cache["v"], cur_len)
+    x = x + h
+    x = x + mlp(p["mlp"], norm(p["ln2"], x, kind=cfg.norm_kind,
+                               eps=cfg.norm_eps),
+                gated=cfg.gated_mlp, act=cfg.act)
+    return x, {"k": ck, "v": cv}
+
+
+def zamba_group_init(key, cfg: ModelConfig, group_size: int) -> Params:
+    """``group_size`` mamba2 layers (stacked for inner scan)."""
+    ks = jax.random.split(key, group_size)
+    layer = jax.vmap(lambda k: {"ln": norm_init(cfg.d_model, cfg.norm_kind),
+                                "ssm": ssm_mod.ssm_init(k, cfg)})
+    return layer(ks)
+
+
+def zamba_group_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                        chunk: int = 128, unroll_chunks: bool = False):
+    """Inner scan over the group's mamba2 layers."""
+
+    def body(h, pl):
+        h = h + ssm_mod.ssm_forward(
+            pl["ssm"], cfg, norm(pl["ln"], h, kind=cfg.norm_kind,
+                                 eps=cfg.norm_eps), chunk=chunk,
+            unroll_chunks=unroll_chunks)
+        return h, None
+
+    if unroll_chunks:   # cost-compile: unroll the group's layer scan too
+        L = jax.tree.leaves(p)[0].shape[0]
+        for i in range(L):
+            x, _ = body(x, jax.tree.map(lambda t: t[i], p))
+        return x
+    x, _ = jax.lax.scan(body, x, p)
+    return x
+
+
+def shared_attn_prefill(p: Params, cfg: ModelConfig, x, positions,
+                        max_len: int, *, attn_impl: str = "chunked",
+                        cache_dtype=jnp.bfloat16, q_chunk: int = 1024,
+                        unroll_chunks: bool = False):
+    with region("shared_attn"):
+        h, ck, cv = attn_mod.attention_prefill(
+            p["attn"], cfg, norm(p["ln1"], x, kind=cfg.norm_kind,
+                                 eps=cfg.norm_eps),
+            positions, max_len, impl=attn_impl, cache_dtype=cache_dtype,
+            q_chunk=q_chunk, unroll_chunks=unroll_chunks)
+        x = x + h
+        x = x + mlp(p["mlp"], norm(p["ln2"], x, kind=cfg.norm_kind,
+                                   eps=cfg.norm_eps),
+                    gated=cfg.gated_mlp, act=cfg.act)
+    return x, {"k": ck, "v": cv}
+
+
+def zamba_group_prefill(p: Params, cfg: ModelConfig, x, *, chunk: int = 128,
+                        unroll_chunks: bool = False):
+    def body(h, pl):
+        y, cache = ssm_mod.ssm_forward(
+            pl["ssm"], cfg, norm(pl["ln"], h, kind=cfg.norm_kind,
+                                 eps=cfg.norm_eps), chunk=chunk,
+            return_cache=True, unroll_chunks=unroll_chunks)
+        return h + y, cache
+
+    if unroll_chunks:
+        L = jax.tree.leaves(p)[0].shape[0]
+        caches = []
+        for i in range(L):
+            x, c = body(x, jax.tree.map(lambda t: t[i], p))
+            caches.append(c)
+        return x, jax.tree.map(lambda *a: jnp.stack(a), *caches)
+    x, caches = jax.lax.scan(body, x, p)
+    return x, caches
+
+
+def zamba_group_decode(p: Params, cfg: ModelConfig, x, caches):
+    def body(h, inp):
+        pl, cache = inp
+        y, new_cache = ssm_mod.ssm_decode(
+            pl["ssm"], cfg, norm(pl["ln"], h, kind=cfg.norm_kind,
+                                 eps=cfg.norm_eps), cache)
+        return h + y, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (p, caches))
+    return x, new_caches

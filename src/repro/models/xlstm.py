@@ -1,0 +1,240 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) + sLSTM (scalar
+memory, strictly recurrent scan — the architecture's stated property).
+
+mLSTM math follows the paper's stabilized exponential gating: running
+stabilizer m, stabilized state (C̃, ñ) with true state C = C̃·exp(m).
+The chunkwise form processes Q-token chunks with an intra-chunk masked
+(gated) attention and an inter-chunk recurrent carry, validated against the
+step-by-step recurrent reference in tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.regions import region
+from repro.models.layers import Params, dense_init, rmsnorm
+from repro.sharding.rules import constrain
+
+__all__ = ["mlstm_init", "mlstm_forward", "mlstm_decode", "mlstm_cache_init",
+           "slstm_init", "slstm_forward", "slstm_decode", "slstm_cache_init"]
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig) -> Params:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    k = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(k[0], d, H * hd),
+        "wk": dense_init(k[1], d, H * hd),
+        "wv": dense_init(k[2], d, H * hd),
+        "wif": dense_init(k[3], d, 2 * H),   # input & forget gate pre-acts
+        "wo": dense_init(k[4], H * hd, d, scale=(H * hd) ** -0.5),
+        "ogate": dense_init(k[5], d, H * hd),
+        "norm": {"scale": jnp.ones((H * hd,), jnp.float32)},
+        "f_bias": 3.0 * jnp.ones((H,), jnp.float32),   # open forget gates
+    }
+
+
+def _mlstm_qkv(p: Params, cfg: ModelConfig, x: jnp.ndarray):
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    def heads(w):
+        return (x @ w.astype(x.dtype)).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    q, k, v = heads(p["wq"]), heads(p["wk"]), heads(p["wv"])
+    q = constrain(q, "batch", "heads", "seq", "head_dim")
+    k = constrain(k, "batch", "heads", "seq", "head_dim")
+    v = constrain(v, "batch", "heads", "seq", "head_dim")
+    gif = (x @ p["wif"].astype(x.dtype)).astype(jnp.float32)
+    gi = gif[..., :H].transpose(0, 2, 1)                    # [B,H,S]
+    gf = gif[..., H:].transpose(0, 2, 1) + p["f_bias"][None, :, None]
+    return q, k, v * 1.0, gi, gf
+
+
+def _mlstm_chunk_body(carry, inp, *, scale):
+    """One chunk. carry: (C̃ [B,H,dk,dv], ñ [B,H,dk], m [B,H])."""
+    Ct, nt, m = carry
+    q, k, v, gi, lf = inp       # q/k/v: [B,H,Q,hd]; gi/lf: [B,H,Q]
+    Q = q.shape[2]
+    Fcs = jnp.cumsum(lf, axis=2)                            # [B,H,Q]
+    # Intra-chunk log weights W[i,j] = Fcs_i − Fcs_j + gi_j  (i ≥ j).
+    W = Fcs[..., :, None] - Fcs[..., None, :] + gi[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    W = jnp.where(mask, W, NEG)
+    inter = Fcs + m[..., None]                              # [B,H,Q]
+    m_i = jnp.maximum(W.max(-1), inter)                     # row stabilizer
+    w = jnp.exp(W - m_i[..., None])                         # [B,H,Q,Q]
+    s_inter = jnp.exp(inter - m_i)                          # [B,H,Q]
+    qk = jnp.einsum("bhid,bhjd->bhij", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    num = (jnp.einsum("bhij,bhjd->bhid", w * qk, v.astype(jnp.float32))
+           + s_inter[..., None] * jnp.einsum(
+               "bhid,bhdv->bhiv", q.astype(jnp.float32) * scale, Ct))
+    # ñ_i = Σ_j w_ij k_j + s_inter_i · ñ   (denominator vector)
+    nvec = (jnp.einsum("bhij,bhjd->bhid", w, k.astype(jnp.float32))
+            + s_inter[..., None] * nt[:, :, None, :])
+    denom = jnp.abs(jnp.einsum("bhid,bhid->bhi",
+                               q.astype(jnp.float32) * scale, nvec))
+    denom = jnp.maximum(denom, jnp.exp(-m_i))
+    y = num / denom[..., None]                              # [B,H,Q,hd]
+    # Chunk-end state update.
+    Ftot = Fcs[..., -1]                                     # [B,H]
+    wj = Ftot[..., None] - Fcs + gi                         # [B,H,Q]
+    m_new = jnp.maximum(Ftot + m, wj.max(-1))
+    sC = jnp.exp(Ftot + m - m_new)
+    wj = jnp.exp(wj - m_new[..., None])
+    C_new = (sC[..., None, None] * Ct
+             + jnp.einsum("bhj,bhjd,bhjv->bhdv", wj, k.astype(jnp.float32),
+                          v.astype(jnp.float32)))
+    n_new = sC[..., None] * nt + jnp.einsum("bhj,bhjd->bhd", wj,
+                                            k.astype(jnp.float32))
+    return (C_new, n_new, m_new), y
+
+
+def mlstm_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                  chunk: int = 128, return_cache: bool = False,
+                  unroll_chunks: bool = False):
+    """Full-sequence mLSTM. x: [B,S,d] → [B,S,d]."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q, k, v, gi, gf = _mlstm_qkv(p, cfg, x)
+    lf = jax.nn.log_sigmoid(gf)
+    Q = min(chunk, S)
+    assert S % Q == 0
+    n_chunks = S // Q
+
+    def to_chunks(t, axis=2):
+        return jnp.moveaxis(
+            t.reshape(*t.shape[:axis], n_chunks, Q, *t.shape[axis + 1:]),
+            axis, 0)
+
+    inputs = (to_chunks(q), to_chunks(k), to_chunks(v),
+              to_chunks(gi), to_chunks(lf))
+    carry = (jnp.zeros((B, H, hd, hd), jnp.float32),
+             jnp.zeros((B, H, hd), jnp.float32),
+             jnp.full((B, H), 0.0, jnp.float32))
+    with region("mlstm_scan"):
+        body = lambda c, i: _mlstm_chunk_body(c, i, scale=hd ** -0.5)
+        if unroll_chunks:
+            ys = []
+            for i in range(n_chunks):
+                carry, yi = body(carry, jax.tree.map(lambda t: t[i], inputs))
+                ys.append(yi)
+            (Cf, nf, mf), yc = carry, jnp.stack(ys)
+        else:
+            (Cf, nf, mf), yc = jax.lax.scan(body, carry, inputs)
+    y = jnp.moveaxis(yc, 0, 2).reshape(B, H, S, hd)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    og = jax.nn.sigmoid(x @ p["ogate"].astype(x.dtype))
+    y = rmsnorm(p["norm"], y.astype(x.dtype), eps=cfg.norm_eps) * og
+    out = constrain(y @ p["wo"].astype(x.dtype), "batch", "seq", "embed")
+    if return_cache:
+        return out, {"C": Cf, "n": nf, "m": mf}
+    return out
+
+
+def mlstm_cache_init(cfg: ModelConfig, batch: int):
+    H, hd = cfg.n_heads, cfg.head_dim
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.zeros((batch, H), jnp.float32)}
+
+
+def mlstm_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray, cache):
+    """Single-token recurrent mLSTM. x: [B,1,d]."""
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim
+    q, k, v, gi, gf = _mlstm_qkv(p, cfg, x)
+    lf = jax.nn.log_sigmoid(gf)[..., 0]                     # [B,H]
+    gi = gi[..., 0]
+    qs = q[:, :, 0].astype(jnp.float32) * hd ** -0.5
+    ks = k[:, :, 0].astype(jnp.float32)
+    vs = v[:, :, 0].astype(jnp.float32)
+    with region("mlstm_decode"):
+        m_new = jnp.maximum(lf + cache["m"], gi)
+        f_ = jnp.exp(lf + cache["m"] - m_new)
+        i_ = jnp.exp(gi - m_new)
+        C = f_[..., None, None] * cache["C"] + i_[..., None, None] * (
+            ks[..., :, None] * vs[..., None, :])
+        n = f_[..., None] * cache["n"] + i_[..., None] * ks
+        num = jnp.einsum("bhd,bhdv->bhv", qs, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n)),
+                          jnp.exp(-m_new))
+        y = (num / den[..., None]).reshape(B, 1, H * hd)
+    og = jax.nn.sigmoid(x @ p["ogate"].astype(x.dtype))
+    y = rmsnorm(p["norm"], y.astype(x.dtype), eps=cfg.norm_eps) * og
+    out = y @ p["wo"].astype(x.dtype)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig) -> Params:
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    k = jax.random.split(key, 3)
+    return {
+        "w": dense_init(k[0], d, 4 * d),
+        "r": 0.1 * jax.random.normal(k[1], (H, hd, 4 * hd), jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)),
+                              jnp.zeros((d,))]).astype(jnp.float32),
+        "wo": dense_init(k[2], d, d),
+    }
+
+
+def _slstm_step(p, cfg, carry, xw_t):
+    """carry: (c, n, h, m) each [B,d]; xw_t: [B,4d] (x-projection at t)."""
+    c, n, h, m = carry
+    B, d = h.shape
+    H = cfg.n_heads
+    hd = d // H
+    hh = h.reshape(B, H, hd)
+    rec = jnp.einsum("bhi,hij->bhj", hh, p["r"]).reshape(B, 4 * d)
+    zifo = (xw_t + rec + p["b"]).astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(zifo, 4, axis=-1)
+    m_new = jnp.maximum(ft + m, it)                # log-space stabilizer
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + m - m_new)
+    c_new = f_ * c + i_ * jnp.tanh(zt)
+    n_new = f_ * n + i_
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_cache_init(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                  return_cache: bool = False):
+    """Strictly-recurrent sLSTM over the sequence. x: [B,S,d]."""
+    B, S, d = x.shape
+    xw = (x @ p["w"].astype(x.dtype))                       # [B,S,4d]
+    carry = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+    with region("slstm_scan"):
+        step = lambda c, t: _slstm_step(p, cfg, c, t)
+        (c, n, h, m), hs = jax.lax.scan(step, carry, jnp.moveaxis(xw, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)              # [B,S,d]
+    out = constrain(y @ p["wo"].astype(x.dtype), "batch", "seq", "embed")
+    if return_cache:
+        return out, {"c": c, "n": n, "h": h, "m": m}
+    return out
+
+
+def slstm_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray, cache):
+    xw = (x @ p["w"].astype(x.dtype))[:, 0]
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, h, m), h_out = _slstm_step(p, cfg, carry, xw)
+    y = (h_out[:, None, :].astype(x.dtype)) @ p["wo"].astype(x.dtype)
+    return y, {"c": c, "n": n, "h": h, "m": m}

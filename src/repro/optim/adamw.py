@@ -1,0 +1,115 @@
+"""AdamW + LR schedules + global-norm clipping, from scratch (no optax).
+
+States are plain pytrees; update is fully jit/pjit-compatible. Master
+weights stay fp32; gradients may arrive bf16 (cast up inside).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "clip_by_global_norm", "cosine_schedule", "linear_warmup"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def adamw_init(params: Params) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    import copy
+    return {"mu": zeros,
+            "nu": jax.tree.map(jnp.zeros_like, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(cfg.warmup_steps, 1)
+        decay_frac = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * decay_frac))
+        mult = jnp.where(step < cfg.warmup_steps, warm,
+                         cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+        return cfg.lr * mult
+    return sched
+
+
+def linear_warmup(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        return cfg.lr * jnp.minimum(step.astype(jnp.float32)
+                                    / max(cfg.warmup_steps, 1), 1.0)
+    return sched
+
+
+def _is_matrix(path: tuple, leaf: jax.Array) -> bool:
+    """Weight decay applies to matrices, not norms/biases/1-d params."""
+    return leaf.ndim >= 2
+
+
+def adamw_update(cfg: AdamWConfig, params: Params, grads: Params,
+                 state: dict, *, schedule=None):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    sched = schedule or cosine_schedule(cfg)
+    step = state["step"] + 1
+    lr = sched(step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / bc1
+        vhat = nu / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        a, b, c = upd(p, g, mu, nu)
+        new_p.append(a); new_mu.append(b); new_nu.append(c)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return (jax.tree.unflatten(tdef, new_p),
+            {"mu": jax.tree.unflatten(tdef, new_mu),
+             "nu": jax.tree.unflatten(tdef, new_nu),
+             "step": step},
+            metrics)

@@ -1,0 +1,149 @@
+"""Logical-axis sharding rules (DP/TP/EP/SP) for pjit'd model code.
+
+Model code never names mesh axes; it constrains activations by *logical*
+axes (``constrain(x, "batch", "seq", "embed")``) and parameters get specs
+from :func:`param_specs` by pytree path. A per-run :class:`AxisRules` maps
+logical axes → mesh axes, chosen by the launcher from (arch, shape, mesh):
+
+  batch    → ("pod", "data")     data parallelism (both DP axes)
+  embed    → None                activations replicated on features (Megatron)
+  heads    → "model"             TP over attention heads / SSM heads
+  kv_heads → "model" if divisible else None (GQA groups < model shards)
+  q_ff     → "model"             column-parallel FFN
+  experts  → "model"             expert parallelism
+  vocab    → "model"             vocab-parallel logits + loss
+  kv_seq   → decode: "model" (flash-decoding split-K) or DP axes for batch=1
+  seq      → None (training); "model"-sharded variants are a §Perf knob
+
+Unmappable axes (size not divisible by the mesh axis) degrade to None
+(replicated) with a warning collected for the dry-run report.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AxisRules", "axis_rules", "constrain", "current_rules",
+           "logical_spec"]
+
+
+class AxisRules:
+    """Mapping from logical axis names to mesh axis names (or tuples)."""
+
+    def __init__(self, mesh: Mesh | None, mapping: dict[str, object]):
+        self.mesh = mesh
+        self.mapping = dict(mapping)
+        self.warnings: list[str] = []
+
+    def spec(self, *logical: str | None) -> P:
+        """PartitionSpec for logical axes; a mesh axis may appear once, so
+        later duplicates degrade to replicated (e.g. context-parallel
+        ``seq``→model colliding with ``vocab``→model on logits)."""
+        used: set[str] = set()
+        dims: list = []
+        for ax in logical:
+            mesh_axes = self.mapping.get(ax) if ax else None
+            if mesh_axes is not None:
+                flat = ((mesh_axes,) if isinstance(mesh_axes, str)
+                        else tuple(mesh_axes))
+                if any(a in used for a in flat):
+                    mesh_axes = None
+                else:
+                    used.update(flat)
+            dims.append(mesh_axes)
+        return P(*dims)
+
+    def sharding(self, *logical: str | None) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def resolve_divisibility(self, sizes: dict[str, int]) -> "AxisRules":
+        """Drop mappings whose dim size isn't divisible by the mesh extent."""
+        if self.mesh is None:
+            return self
+        new = dict(self.mapping)
+        for ax, size in sizes.items():
+            mesh_axes = new.get(ax)
+            if mesh_axes is None:
+                continue
+            axes = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+            extent = 1
+            for a in axes:
+                extent *= self.mesh.shape[a]
+            if size % extent != 0:
+                self.warnings.append(
+                    f"logical axis {ax!r} (size {size}) not divisible by mesh "
+                    f"extent {extent}; replicating")
+                new[ax] = None
+        r = AxisRules(self.mesh, new)
+        r.warnings = self.warnings
+        return r
+
+
+_tls = threading.local()
+
+
+def current_rules() -> AxisRules | None:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: AxisRules | None) -> Iterator[None]:
+    prev = current_rules()
+    _tls.rules = rules
+    try:
+        yield
+    finally:
+        _tls.rules = prev
+
+
+def logical_spec(*logical: str | None) -> P:
+    r = current_rules()
+    if r is None:
+        return P(*[None] * len(logical))
+    return r.spec(*logical)
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside axis_rules."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, r.spec(*logical)))
+
+
+# -- default rule sets ---------------------------------------------------------
+
+def make_rules(mesh: Mesh | None, *, dp_axes: Sequence[str] = ("data",),
+               tp_axis: str | None = "model",
+               kv_seq_axis: object = None) -> AxisRules:
+    """Standard mapping. ``kv_seq_axis`` set for decode cache sharding."""
+    dp: object = tuple(a for a in dp_axes if mesh is None or a in mesh.shape)
+    if isinstance(dp, tuple) and len(dp) == 1:
+        dp = dp[0]
+    mapping: dict[str, object] = {
+        "batch": dp,
+        "seq": None,
+        "seq_act": None,   # residual-stream sequence sharding (Megatron SP)
+        "embed": None,
+        "heads": tp_axis,
+        "kv_heads": tp_axis,
+        "head_dim": None,
+        "q_ff": tp_axis,
+        "ff": tp_axis,
+        "experts": tp_axis,
+        "vocab": tp_axis,
+        "embed_shard": tp_axis,
+        "kv_seq": kv_seq_axis,
+        "ssm_heads": tp_axis,
+        "ssm_state": None,
+        "conv_dim": tp_axis,
+    }
+    return AxisRules(mesh, mapping)

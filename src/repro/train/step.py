@@ -1,0 +1,102 @@
+"""The pjit'd train step: loss → grad → (compress) → AdamW, with optional
+gradient-accumulation microbatching.
+
+Everything is a pure function of (params, opt_state, batch[, residuals]) so
+pjit can donate and shard freely; data parallelism comes from batch sharding,
+TP/EP from the param specs, and XLA inserts gradient all-reduces where the
+loss contracts over DP axes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.regions import region
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compression import compress_decompress, compress_init
+
+__all__ = ["TrainState", "init_state", "make_train_step"]
+
+TrainState = dict[str, Any]
+
+
+def init_state(key, cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+               compression: bool = False) -> TrainState:
+    params = M.init_params(key, cfg)
+    state: TrainState = {"params": params, "opt": adamw_init(params)}
+    if compression:
+        state["residuals"] = compress_init(params)
+    return state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    attn_impl: str = "full", ssd_chunk: int = 128,
+                    accum_steps: int = 1, compression: bool = False,
+                    unroll: bool = False, q_chunk: int = 1024,
+                    ce_chunk: int = 512):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss(params, batch):
+        if cfg.bf16_gather:
+            # Mixed-precision layout: matrices cast to bf16 up front so
+            # FSDP weight all-gathers move half the bytes (fp32 masters
+            # stay sharded; the cast is elementwise → stays sharded too).
+            params = jax.tree.map(
+                lambda w: w.astype(jnp.bfloat16) if w.ndim >= 2 else w,
+                params)
+        return M.loss_fn(params, cfg, batch, attn_impl=attn_impl,
+                         ssd_chunk=ssd_chunk, unroll=unroll,
+                         q_chunk=q_chunk, ce_chunk=ce_chunk)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def compute_grads(params, batch):
+        if accum_steps == 1:
+            (l, metrics), grads = grad_fn(params, batch)
+            return l, metrics, grads
+        # Microbatch accumulation: static slices along the batch dim
+        # (a Python loop partitions robustly under GSPMD; XLA CSEs the
+        # repeated structure).
+        B = jax.tree.leaves(batch)[0].shape[0]
+        mb_size = B // accum_steps
+        grads = None
+        lsum = 0.0
+        for i in range(accum_steps):
+            mb = jax.tree.map(
+                lambda x: jax.lax.slice_in_dim(x, i * mb_size,
+                                               (i + 1) * mb_size, axis=0),
+                batch)
+            (l, _), g = grad_fn(params, mb)
+            lsum = lsum + l
+            if grads is None:
+                grads = jax.tree.map(lambda a: a.astype(jnp.float32), g)
+            else:
+                grads = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), grads, g)
+        grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        l = lsum / accum_steps
+        return l, {"ce": l, "aux": jnp.zeros(())}, grads
+
+    def train_step(state: TrainState, batch):
+        with region("fwd_bwd"):
+            l, metrics, grads = compute_grads(state["params"], batch)
+        new_state = dict(state)
+        if compression:
+            with region("grad_compress"):
+                grads, new_state["residuals"] = compress_decompress(
+                    grads, state["residuals"])
+        with region("optimizer"):
+            params, opt, opt_metrics = adamw_update(
+                opt_cfg, state["params"], grads, state["opt"])
+        new_state["params"] = params
+        new_state["opt"] = opt
+        metrics = dict(metrics, loss=l, **opt_metrics)
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,134 @@
+"""Fault-tolerant training loop: checkpoint/restart, preemption hook,
+step watchdog (straggler mitigation), optional ALEA online profiling.
+
+The loop is host-side orchestration around the pure pjit'd step — at pod
+scale this file is what runs on every host (each host feeds its data shard;
+collectives live inside the step). Fault-tolerance posture:
+
+  * atomic checkpoints every ``ckpt_every`` steps (async write-behind);
+  * resume-from-LATEST on startup (elastic: any mesh shape can restore);
+  * SIGTERM handler saves a final checkpoint (preemption-safe);
+  * a watchdog thread flags steps exceeding ``watchdog_factor`` × EMA step
+    time — at scale this triggers abort-and-restore; here it records the
+    event and (configurably) raises ``StragglerAbort``;
+  * ALEA host-mode profiling can run continuously (the paper's capped ~1%
+    overhead makes it deployable online).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt as ckpt_mod
+from repro.core.regions import region
+
+__all__ = ["TrainerConfig", "Trainer", "StragglerAbort"]
+
+
+class StragglerAbort(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    log_every: int = 10
+    watchdog_factor: float = 10.0
+    watchdog_min_s: float = 30.0
+    raise_on_straggler: bool = False
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, train_step: Callable,
+                 state: Any, data_source, *, put_batch=None):
+        self.cfg = cfg
+        self.train_step = train_step
+        self.state = state
+        self.data = data_source
+        self.put_batch = put_batch or (lambda b: b)
+        self.step = 0
+        self.straggler_events: list[int] = []
+        self.ckpt = ckpt_mod.AsyncCheckpointer(cfg.ckpt_dir)
+        self._ema_step_time: float | None = None
+        self._watch_deadline: float | None = None
+        self._stop_watch = threading.Event()
+        self._install_sigterm()
+
+    # -- fault tolerance ------------------------------------------------------
+    def _install_sigterm(self):
+        def handler(signum, frame):
+            self.ckpt.wait()
+            ckpt_mod.save(self.cfg.ckpt_dir, self.step,
+                          jax.tree.map(np.asarray, self.state))
+            raise SystemExit(143)
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass    # non-main thread (tests)
+
+    def try_resume(self) -> bool:
+        latest = ckpt_mod.latest_step(self.cfg.ckpt_dir)
+        if latest is None:
+            return False
+        self.state, self.step = ckpt_mod.restore(self.cfg.ckpt_dir,
+                                                 self.state, latest)
+        return True
+
+    # -- watchdog ---------------------------------------------------------------
+    def _watchdog(self):
+        while not self._stop_watch.wait(0.05):
+            d = self._watch_deadline
+            if d is not None and time.monotonic() > d:
+                self.straggler_events.append(self.step)
+                self._watch_deadline = None
+                if self.cfg.raise_on_straggler:
+                    # At scale: abort slow step, restore from checkpoint,
+                    # exclude the slow host. Surfaced here as an exception.
+                    raise StragglerAbort(f"step {self.step} exceeded deadline")
+
+    # -- main loop ----------------------------------------------------------------
+    def run(self, *, profiler_session=None) -> dict[str, Any]:
+        watch = threading.Thread(target=self._watchdog, daemon=True)
+        self._stop_watch.clear()
+        watch.start()
+        metrics_log = []
+        try:
+            while self.step < self.cfg.total_steps:
+                with region("data_load"):
+                    batch = self.put_batch(self.data.batch(self.step))
+                ema = self._ema_step_time
+                budget = max(self.cfg.watchdog_min_s,
+                             self.cfg.watchdog_factor * (ema or 1e9))
+                self._watch_deadline = time.monotonic() + budget
+                t0 = time.monotonic()
+                with region("train_step"):
+                    self.state, metrics = self.train_step(self.state, batch)
+                    jax.block_until_ready(
+                        jax.tree.leaves(self.state)[0])
+                dt = time.monotonic() - t0
+                self._watch_deadline = None
+                self._ema_step_time = (dt if ema is None
+                                       else 0.9 * ema + 0.1 * dt)
+                self.step += 1
+                if self.step % self.cfg.log_every == 0:
+                    metrics_log.append(
+                        {k: float(v) for k, v in metrics.items()}
+                        | {"step": self.step, "step_time_s": dt})
+                if self.step % self.cfg.ckpt_every == 0:
+                    with region("checkpoint"):
+                        self.ckpt.save_async(self.step, self.state)
+        finally:
+            self._stop_watch.set()
+            self.ckpt.wait()
+        return {"metrics": metrics_log,
+                "straggler_events": self.straggler_events,
+                "final_step": self.step}

@@ -1,0 +1,137 @@
+"""Unit + property tests for the ALEA probabilistic estimator (Eqs. 2-16)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.estimator import (aggregate_samples_np, encode_combinations,
+                                  estimate_combinations, estimate_regions,
+                                  marginalize_worker, z_quantile)
+
+
+def test_z_quantile_known_values():
+    assert z_quantile(0.05) == pytest.approx(1.959964, abs=1e-4)
+    assert z_quantile(0.01) == pytest.approx(2.575829, abs=1e-4)
+    assert z_quantile(0.32) == pytest.approx(0.994458, abs=1e-4)
+
+
+def test_point_estimates_match_equations():
+    # 3 regions; hand-checkable counts.
+    rids = np.array([0, 1, 1, 2, 2, 2, 1, 1])
+    pows = np.array([10.0, 20.0, 22.0, 30.0, 32.0, 28.0, 18.0, 20.0])
+    est = estimate_regions(rids, pows, t_exec=8.0, names=["a", "b", "c"])
+    by = est.by_name()
+    assert by["a"].t_hat == pytest.approx(1.0)          # 1/8 · 8
+    assert by["b"].t_hat == pytest.approx(4.0)          # 4/8 · 8
+    assert by["c"].t_hat == pytest.approx(3.0)
+    assert by["b"].pow_hat == pytest.approx(20.0)       # mean(20,22,18,20)
+    assert by["c"].e_hat == pytest.approx(30.0 * 3.0)   # Eq. 7
+    assert sum(r.t_hat for r in est.regions) == pytest.approx(8.0)
+
+
+def test_ci_validity_rule():
+    rids = np.array([0] * 3 + [1] * 97)
+    pows = np.ones(100)
+    est = estimate_regions(rids, pows, 1.0, ["rare", "hot"])
+    assert not est.by_name()["rare"].ci_valid      # n·p = 3 < 5
+    assert est.by_name()["hot"].ci_valid is False  # n·(1-p) = 3 < 5
+    rids = np.array([0] * 30 + [1] * 70)
+    est = estimate_regions(rids, np.ones(100), 1.0, ["a", "b"])
+    assert est.by_name()["a"].ci_valid and est.by_name()["b"].ci_valid
+
+
+def test_energy_ci_is_product_interval():
+    rng = np.random.default_rng(0)
+    rids = rng.integers(0, 2, size=5000)
+    pows = np.where(rids == 0, 10.0, 20.0) + rng.normal(0, 0.5, 5000)
+    est = estimate_regions(rids, pows, 10.0, ["x", "y"])
+    for r in est.regions:
+        assert r.e_lo == pytest.approx(r.t_lo * r.pow_lo)
+        assert r.e_hi == pytest.approx(r.t_hi * r.pow_hi)
+        assert r.e_lo <= r.e_hat <= r.e_hi
+
+
+@given(n=st.integers(200, 5000), p=st.floats(0.1, 0.9),
+       seed=st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_property_bernoulli_mle_converges(n, p, seed):
+    """p̂ = n_bb/n is unbiased; error shrinks like 1/sqrt(n) (§4.3)."""
+    rng = np.random.default_rng(seed)
+    rids = (rng.random(n) < p).astype(np.int32)
+    est = estimate_regions(rids, np.ones(n), 1.0, ["zero", "one"])
+    r = est.by_name().get("one")
+    if r is None:
+        return
+    # 6-sigma bound on the MLE deviation.
+    assert abs(r.p_hat - p) < 6 * math.sqrt(p * (1 - p) / n) + 1e-9
+
+
+@given(seed=st.integers(0, 2**31))
+@settings(max_examples=20, deadline=None)
+def test_property_ci_shrinks_with_n(seed):
+    rng = np.random.default_rng(seed)
+    widths = []
+    for n in (500, 5000, 50000):
+        rids = (rng.random(n) < 0.4).astype(np.int32)
+        est = estimate_regions(rids, np.ones(n), 1.0, ["a", "b"])
+        widths.append(est.by_name()["b"].t_ci_halfwidth)
+    assert widths[0] > widths[1] > widths[2]
+    # ~ 1/sqrt(n): 100x samples → ~10x narrower (allow 2x slack).
+    assert widths[0] / widths[2] > 5.0
+
+
+def test_ci_coverage_monte_carlo():
+    """~95% of 95%-CIs contain the true proportion (Eq. 10)."""
+    rng = np.random.default_rng(42)
+    p_true, n, trials, hits = 0.3, 2000, 300, 0
+    for _ in range(trials):
+        rids = (rng.random(n) < p_true).astype(np.int32)
+        est = estimate_regions(rids, np.ones(n), 1.0, ["a", "b"])
+        r = est.by_name()["b"]
+        hits += (r.t_lo <= p_true * 1.0 <= r.t_hi)
+    assert 0.90 <= hits / trials <= 0.99
+
+
+def test_aggregate_matches_manual():
+    rids = np.array([2, 0, 2, 1, 2])
+    pows = np.array([1.0, 2.0, 3.0, 4.0, 5.0])
+    counts, psum, psumsq = aggregate_samples_np(rids, pows, 4)
+    np.testing.assert_array_equal(counts, [1, 1, 3, 0])
+    np.testing.assert_allclose(psum, [2.0, 4.0, 9.0, 0.0])
+    np.testing.assert_allclose(psumsq, [4.0, 16.0, 35.0, 0.0])
+
+
+def test_combinations_roundtrip():
+    mat = np.array([[0, 1], [0, 1], [1, 1], [0, 2]])
+    ids, combos = encode_combinations(mat)
+    assert len(combos) == 3
+    for i, cid in enumerate(ids):
+        assert combos[cid] == tuple(mat[i])
+
+
+def test_combination_estimation_and_marginals():
+    rng = np.random.default_rng(1)
+    n = 20000
+    # Worker 0 alternates regions 1/2; worker 1 mostly region 1.
+    w0 = rng.choice([1, 2], size=n, p=[0.6, 0.4])
+    w1 = rng.choice([1, 2], size=n, p=[0.9, 0.1])
+    pows = 50.0 + 10.0 * (w0 == 1) + 10.0 * (w1 == 1)
+    est, combos = estimate_combinations(np.stack([w0, w1], 1), pows, 100.0,
+                                        ["<other>", "hot", "cold"])
+    assert sum(r.t_hat for r in est.regions) == pytest.approx(100.0)
+    # (hot,hot) combination should be the dominant one: p≈0.54.
+    top = max(est.regions, key=lambda r: r.t_hat)
+    assert top.name == "hot+hot"
+    assert top.t_hat == pytest.approx(54.0, rel=0.05)
+    marg = marginalize_worker(est, combos, ["<other>", "hot", "cold"])
+    t_hot = marg.by_name()["hot"].t_hat
+    # hot appears in any combination containing region 1 ≈ 96% of time.
+    assert t_hot == pytest.approx(100 * (1 - 0.4 * 0.1), rel=0.05)
+
+
+def test_no_samples_raises():
+    with pytest.raises(ValueError):
+        estimate_regions(np.array([], dtype=int), np.array([]), 1.0, ["a"])

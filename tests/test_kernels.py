@@ -1,0 +1,150 @@
+"""Per-kernel allclose validation vs pure-jnp oracles (interpret mode),
+with shape/dtype sweeps (explicit grids + hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.sample_attr.ops import as_aggregate_fn, sample_attr
+from repro.kernels.sample_attr.ref import sample_attr_ref
+from repro.core.estimator import aggregate_samples_np, estimate_regions
+
+
+# ---------------------------------------------------------------------------
+# sample_attr
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,R", [(16, 3), (1000, 7), (4096, 128),
+                                 (5000, 37), (100, 1)])
+def test_sample_attr_shapes(n, R):
+    rng = np.random.default_rng(n + R)
+    ids = rng.integers(0, R, n).astype(np.int32)
+    pw = (rng.random(n) * 200).astype(np.float32)
+    c, s, sq = sample_attr(jnp.asarray(ids), jnp.asarray(pw), R)
+    cr, sr, sqr = sample_attr_ref(jnp.asarray(ids), jnp.asarray(pw), R)
+    np.testing.assert_allclose(c, cr, rtol=1e-6)
+    np.testing.assert_allclose(s, sr, rtol=1e-5)
+    np.testing.assert_allclose(sq, sqr, rtol=1e-5)
+
+
+@given(n=st.integers(1, 3000), r=st.integers(1, 64),
+       seed=st.integers(0, 999))
+@settings(max_examples=12, deadline=None)
+def test_sample_attr_property(n, r, seed):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, r, n).astype(np.int32)
+    pw = (rng.random(n) * 100).astype(np.float32)
+    c, s, _ = sample_attr(jnp.asarray(ids), jnp.asarray(pw), r)
+    counts, psum, _ = aggregate_samples_np(ids, pw, r)
+    np.testing.assert_allclose(np.asarray(c), counts, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s), psum, rtol=2e-5)
+
+
+def test_sample_attr_plugs_into_estimator():
+    """The kernel is a drop-in aggregate_fn for the ALEA estimator."""
+    rng = np.random.default_rng(3)
+    ids = rng.integers(0, 4, 20000).astype(np.int32)
+    pw = 100 + 10 * rng.random(20000)
+    est_np = estimate_regions(ids, pw, 10.0, ["a", "b", "c", "d"])
+    est_k = estimate_regions(ids, pw, 10.0, ["a", "b", "c", "d"],
+                             aggregate_fn=as_aggregate_fn(interpret=True))
+    for r1, r2 in zip(est_np.regions, est_k.regions):
+        assert r1.n_samples == r2.n_samples
+        # kernel accumulates fp32 (vs numpy fp64) → ~1e-6 relative drift
+        assert r1.e_hat == pytest.approx(r2.e_hat, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,S,dh,causal", [
+    (2, 4, 256, 64, True),
+    (1, 2, 512, 128, True),
+    (2, 2, 128, 64, False),
+    (1, 1, 384, 128, True),     # non-pow2 block count
+])
+def test_flash_attention_shapes(B, H, S, dh, causal):
+    rng = np.random.default_rng(S)
+    q = jnp.asarray(rng.standard_normal((B, H, S, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, S, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, H, S, dh)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=128, block_kv=128,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), dtype)
+    k = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), dtype)
+    v = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=128, block_kv=128,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - ref.astype(jnp.float32))))
+    assert err < tol
+
+
+def test_flash_attention_matches_model_attention():
+    """Kernel agrees with the model's chunked-jnp attention path."""
+    from repro.configs.registry import get_config
+    from repro.models import attention as A
+    from repro.models import model as M
+    cfg = get_config("yi-6b").reduced().replace(compute_dtype="float32")
+    key = jax.random.PRNGKey(0)
+    p = A.attention_init(key, cfg)
+    x = 0.1 * jax.random.normal(key, (2, 256, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(256)[None], (2, 256))
+    y_full = A.attention(p, cfg, x, pos, impl="full")
+    y_pallas = A.attention(p, cfg, x, pos, impl="pallas")
+    np.testing.assert_allclose(y_full, y_pallas, atol=2e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d", [(64, 128), (100, 100), (513, 768),
+                                 (7, 4096), (1, 33)])
+def test_rmsnorm_shapes(n, d):
+    rng = np.random.default_rng(n * d)
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    s = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+    out = rmsnorm(x, s, interpret=True)
+    ref = rmsnorm_ref(x, s)
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+@given(n=st.integers(1, 300), d=st.integers(1, 512),
+       seed=st.integers(0, 99))
+@settings(max_examples=10, deadline=None)
+def test_rmsnorm_property(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    s = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+    np.testing.assert_allclose(rmsnorm(x, s, interpret=True),
+                               rmsnorm_ref(x, s), atol=1e-5, rtol=1e-5)
+
+
+def test_rmsnorm_bf16():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((128, 256)), jnp.bfloat16)
+    s = jnp.ones((256,), jnp.float32)
+    out = rmsnorm(x, s, interpret=True)
+    ref = rmsnorm_ref(x, s)
+    assert out.dtype == jnp.bfloat16
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - ref.astype(jnp.float32))))
+    assert err < 2e-2

@@ -1,0 +1,83 @@
+"""Loss-path equivalences: fused chunked lm_head+CE vs plain CE (incl. the
+VLM sliced-prefix path and non-divisor chunk fallback), and the perf-knob
+variants (bf16_gather, decode_grouped) staying numerically faithful."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import init_state, make_train_step
+
+
+def test_fused_ce_matches_plain_dense():
+    cfg = get_config("yi-6b").reduced().replace(compute_dtype="float32")
+    key = jax.random.PRNGKey(0)
+    p = M.init_params(key, cfg)
+    batch = {"tokens": jax.random.randint(key, (2, 64), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (2, 64), 0, cfg.vocab_size)}
+    l1, _ = M.loss_fn(p, cfg, batch, fuse_ce=False)
+    l2, _ = M.loss_fn(p, cfg, batch, fuse_ce=True, ce_chunk=16)
+    assert float(l1) == pytest.approx(float(l2), abs=1e-5)
+    g1 = jax.grad(lambda p: M.loss_fn(p, cfg, batch, fuse_ce=False)[0])(p)
+    g2 = jax.grad(lambda p: M.loss_fn(p, cfg, batch, fuse_ce=True,
+                                      ce_chunk=16)[0])(p)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_fused_ce_vlm_and_nondivisor_chunk():
+    cfg = get_config("internvl2-1b").reduced().replace(
+        compute_dtype="float32")
+    key = jax.random.PRNGKey(1)
+    p = M.init_params(key, cfg)
+    B, S, NP = 2, 64, 8
+    batch = {"patch_embeds": 0.1 * jax.random.normal(
+                 key, (B, NP, cfg.d_model), jnp.float32),
+             "tokens": jax.random.randint(key, (B, S - NP), 0,
+                                          cfg.vocab_size),
+             "labels": jax.random.randint(key, (B, S - NP), 0,
+                                          cfg.vocab_size)}
+    l1, _ = M.loss_fn(p, cfg, batch, fuse_ce=False)
+    l2, _ = M.loss_fn(p, cfg, batch, fuse_ce=True, ce_chunk=16)
+    l3, _ = M.loss_fn(p, cfg, batch, fuse_ce=True, ce_chunk=13)
+    assert float(l1) == pytest.approx(float(l2), abs=1e-5)
+    assert float(l1) == pytest.approx(float(l3), abs=1e-5)
+
+
+def test_bf16_gather_close_to_fp32():
+    """bf16 weight gathering changes numerics within bf16 rounding only."""
+    cfg = get_config("qwen3-1.7b").reduced()
+    key = jax.random.PRNGKey(2)
+    opt_cfg = AdamWConfig(grad_clip=1e9)
+    state = init_state(key, cfg, opt_cfg)
+    batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (2, 32), 0, cfg.vocab_size)}
+    _, m1 = jax.jit(make_train_step(cfg, opt_cfg))(state, batch)
+    cfg2 = cfg.replace(bf16_gather=True)
+    _, m2 = jax.jit(make_train_step(cfg2, opt_cfg))(state, batch)
+    # compute is bf16 either way; only the cast point moves
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=2e-2)
+
+
+def test_decode_grouped_matches_repeat():
+    cfg = get_config("yi-6b").reduced().replace(compute_dtype="float32")
+    p = M.init_params(jax.random.PRNGKey(1), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0,
+                              cfg.vocab_size)
+
+    def roll(cfgx):
+        cache = M.init_cache(cfgx, 2, 12, dtype=jnp.float32)
+        outs = []
+        for t in range(12):
+            lg, cache = M.decode_step(p, cfgx, toks[:, t:t + 1], cache,
+                                      jnp.int32(t))
+            outs.append(lg)
+        return jnp.concatenate(outs, 1)
+
+    a = roll(cfg)
+    b = roll(cfg.replace(decode_grouped=True))
+    np.testing.assert_allclose(a, b, atol=1e-5)

@@ -1,0 +1,247 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, compression,
+trainer fault tolerance, serving engine."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt as ckpt_mod
+from repro.configs.registry import get_config
+from repro.data.pipeline import MemmapTokens, Prefetcher, SyntheticTokens
+from repro.models import model as M
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, cosine_schedule,
+                               global_norm)
+from repro.optim.compression import (compress_decompress, compress_init,
+                                     dequantize_int8, quantize_int8)
+from repro.train.step import init_state, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+# -- optimizer ----------------------------------------------------------------
+
+def test_adamw_matches_reference_math():
+    """One step against a hand-rolled numpy AdamW."""
+    cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.1,
+                      grad_clip=1e9, warmup_steps=0, total_steps=10,
+                      min_lr_ratio=1.0)
+    p = {"w": jnp.array([[1.0, -2.0], [0.5, 3.0]]), "b": jnp.array([0.1])}
+    g = {"w": jnp.array([[0.1, 0.2], [-0.3, 0.4]]), "b": jnp.array([0.05])}
+    state = adamw_init(p)
+    new_p, new_state, _ = adamw_update(cfg, p, g, state)
+
+    for k, decay in (("w", 0.1), ("b", 0.0)):   # decay only on matrices
+        gk = np.asarray(g[k])
+        mu = 0.1 * gk
+        nu = 0.01 * gk * gk
+        mhat = mu / (1 - 0.9)
+        vhat = nu / (1 - 0.99)
+        expect = (np.asarray(p[k])
+                  - 1e-2 * (mhat / (np.sqrt(vhat) + 1e-8)
+                            + decay * np.asarray(p[k])))
+        np.testing.assert_allclose(np.asarray(new_p[k]), expect, rtol=1e-5)
+    assert int(new_state["step"]) == 1
+
+
+def test_clip_and_schedule():
+    g = {"a": jnp.full((10,), 3.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(90.0))
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                      min_lr_ratio=0.1)
+    sched = cosine_schedule(cfg)
+    assert float(sched(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(sched(jnp.asarray(110))) == pytest.approx(0.1, abs=1e-6)
+
+
+def test_training_reduces_loss():
+    """Tiny model, 30 steps: loss must drop (integration)."""
+    cfg = get_config("qwen3-1.7b").reduced()
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=30)
+    state = init_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=64,
+                           global_batch=4)
+    losses = []
+    for i in range(30):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i % 2).items()}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses[::6]
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = get_config("qwen3-1.7b").reduced().replace(
+        compute_dtype="float32")
+    opt_cfg = AdamWConfig(grad_clip=1e9)
+    state = init_state(jax.random.PRNGKey(1), cfg, opt_cfg)
+    data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=32,
+                           global_batch=8)
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    s1, m1 = jax.jit(make_train_step(cfg, opt_cfg, accum_steps=1))(
+        state, batch)
+    s2, m2 = jax.jit(make_train_step(cfg, opt_cfg, accum_steps=4))(
+        state, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(s1["params"]),
+                    jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(a, b, atol=2e-6)
+
+
+# -- compression ----------------------------------------------------------------
+
+def test_int8_quant_roundtrip_bounds():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000) * 5)
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) / 2 + 1e-6
+
+
+def test_error_feedback_preserves_sum():
+    """Σ compressed grads + final residual == Σ raw grads (EF property)."""
+    rng = np.random.default_rng(1)
+    grads_seq = [{"w": jnp.asarray(rng.standard_normal((64, 64)) * 0.01)}
+                 for _ in range(20)]
+    residual = compress_init(grads_seq[0])
+    total_sent = jnp.zeros((64, 64))
+    for g in grads_seq:
+        sent, residual = compress_decompress(g, residual)
+        total_sent = total_sent + sent["w"]
+    total_raw = sum(np.asarray(g["w"]) for g in grads_seq)
+    drift = np.abs(np.asarray(total_sent + residual["w"]) - total_raw)
+    assert drift.max() < 1e-5
+
+
+# -- data pipeline ----------------------------------------------------------------
+
+def test_synthetic_deterministic_and_shifted():
+    src = SyntheticTokens(vocab_size=1000, seq_len=16, global_batch=4,
+                          seed=7)
+    b1, b2 = src.batch(3), src.batch(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    assert not np.array_equal(src.batch(4)["tokens"], b1["tokens"])
+
+
+def test_memmap_pipeline(tmp_path):
+    toks = np.arange(4 * 3 * 17, dtype=np.uint16)
+    fp = tmp_path / "tokens.bin"
+    toks.tofile(fp)
+    src = MemmapTokens(str(fp), seq_len=16, global_batch=4)
+    b0 = src.batch(0)
+    assert b0["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b0["tokens"][0], np.arange(16))
+    np.testing.assert_array_equal(b0["labels"][0], np.arange(1, 17))
+    # wraps around
+    assert src.batch(src.n_batches)["tokens"][0, 0] == 0
+
+
+def test_prefetcher():
+    src = SyntheticTokens(vocab_size=100, seq_len=8, global_batch=2)
+    pf = Prefetcher(src, depth=2)
+    a, b = pf.get(), pf.get()
+    pf.close()
+    np.testing.assert_array_equal(a["tokens"], src.batch(0)["tokens"])
+    np.testing.assert_array_equal(b["tokens"], src.batch(1)["tokens"])
+
+
+# -- checkpointing ----------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_latest(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16)}}
+    ckpt_mod.save(str(tmp_path), 5, tree)
+    ckpt_mod.save(str(tmp_path), 9, jax.tree.map(lambda x: x + 1, tree))
+    assert ckpt_mod.latest_step(str(tmp_path)) == 9
+    restored, step = ckpt_mod.restore(str(tmp_path), tree)
+    assert step == 9
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.arange(10) + 1)
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    tree = {"a": jnp.arange(100, dtype=jnp.float32)}
+    path = ckpt_mod.save(str(tmp_path), 1, tree)
+    # Corrupt a leaf file.
+    victim = os.path.join(path, "arr_00000.npy")
+    with open(victim, "r+b") as f:
+        f.seek(200)
+        f.write(b"\xff\xff\xff\xff")
+    with pytest.raises(IOError):
+        ckpt_mod.restore(str(tmp_path), tree)
+
+
+def test_checkpoint_structure_mismatch(tmp_path):
+    ckpt_mod.save(str(tmp_path), 1, {"a": jnp.zeros(3)})
+    with pytest.raises(ValueError):
+        ckpt_mod.restore(str(tmp_path), {"a": jnp.zeros(3),
+                                         "b": jnp.zeros(2)})
+
+
+def test_async_checkpointer_gc(tmp_path):
+    ck = ckpt_mod.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save_async(s, {"x": jnp.full((4,), s)})
+    ck.wait()
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path)
+                   if n.startswith("step_"))
+    assert steps == [3, 4]
+
+
+# -- trainer fault tolerance ----------------------------------------------------------------
+
+def _tiny_trainer(tmp_path, total_steps=6):
+    cfg = get_config("qwen3-1.7b").reduced()
+    opt_cfg = AdamWConfig(total_steps=total_steps)
+    state = init_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    data = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=32,
+                           global_batch=2)
+    tcfg = TrainerConfig(total_steps=total_steps, ckpt_dir=str(tmp_path),
+                         ckpt_every=2, log_every=1)
+    return Trainer(tcfg, step, state, data,
+                   put_batch=lambda b: {k: jnp.asarray(v)
+                                        for k, v in b.items()})
+
+
+def test_trainer_checkpoint_restart(tmp_path):
+    t1 = _tiny_trainer(tmp_path, total_steps=4)
+    r1 = t1.run()
+    assert r1["final_step"] == 4
+    # "Crash" and restart: a fresh trainer resumes from step 4.
+    t2 = _tiny_trainer(tmp_path, total_steps=6)
+    assert t2.try_resume()
+    assert t2.step == 4
+    r2 = t2.run()
+    assert r2["final_step"] == 6
+    assert int(t2.state["opt"]["step"]) == 6
+
+
+def test_trainer_records_metrics(tmp_path):
+    t = _tiny_trainer(tmp_path, total_steps=3)
+    r = t.run()
+    assert len(r["metrics"]) == 3
+    assert all(np.isfinite(m["loss"]) for m in r["metrics"])
+
+
+# -- serving engine ----------------------------------------------------------------
+
+def test_engine_serves_requests():
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    from repro.serve.engine import Engine, Request, ServeConfig
+    eng = Engine(cfg, params, ServeConfig(max_batch=2, max_len=64,
+                                          eos_token=-1))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(1, cfg.vocab_size, 5)
+                    .astype(np.int32), max_new_tokens=4) for i in range(3)]
+    done = eng.run_until_drained(reqs)
+    assert len(done) == 3
+    assert all(len(r.out_tokens) == 4 for r in done)
