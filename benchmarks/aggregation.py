@@ -1,0 +1,149 @@
+"""Aggregation + estimator pipeline benchmarks (streaming tentpole).
+
+Tracks the ALEA hot path end to end:
+
+* samples/sec of the one-shot numpy aggregation vs the constant-memory
+  ``StreamingAggregator`` at several chunk sizes vs the Pallas chunked
+  kernel (interpret mode on CPU — correctness-path timing only), at
+  R ∈ {64, 2048, 8192} (8192 exercises the region-tiled kernel grid);
+* the vectorized ``_build_estimates`` vs the seed's per-region Python
+  loop at 10⁴ regions (multi-worker combination-table scale).
+
+Emits the usual CSV rows plus ``BENCH_aggregation.json`` next to this
+file so the perf trajectory is tracked across PRs. ``ALEA_BENCH_N``
+scales the sample count (default 10⁶; acceptance runs use 10⁷).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, timed
+from repro.core.estimator import (RegionEstimate, aggregate_samples_np,
+                                  estimates_from_statistics, z_quantile)
+from repro.core.streaming import StreamingAggregator
+
+_JSON_PATH = pathlib.Path(__file__).with_name("BENCH_aggregation.json")
+
+
+def _build_estimates_loop(counts, psum, psumsq, names, t_exec, alpha):
+    """The seed's per-region Python loop, kept verbatim as the baseline
+    the vectorized ``_build_estimates`` is measured against."""
+    n = int(counts.sum())
+    z = z_quantile(alpha)
+    out = []
+    for rid in range(len(counts)):
+        n_bb = int(counts[rid])
+        if n_bb == 0:
+            continue
+        p_hat = n_bb / n
+        se_p = math.sqrt(max(p_hat * (1.0 - p_hat), 0.0) / n)
+        p_lo = max(p_hat - z * se_p, 0.0)
+        p_hi = min(p_hat + z * se_p, 1.0)
+        t_hat = p_hat * t_exec
+        pow_hat = psum[rid] / n_bb if n_bb > 0 else 0.0
+        if n_bb > 1:
+            var = (psumsq[rid] - n_bb * pow_hat * pow_hat) / (n_bb - 1)
+            se_pow = math.sqrt(max(var, 0.0)) / math.sqrt(n_bb)
+        else:
+            se_pow = 0.0
+        pow_lo, pow_hi = pow_hat - z * se_pow, pow_hat + z * se_pow
+        out.append(RegionEstimate(
+            region_id=rid, name=names[rid], n_samples=n_bb, p_hat=p_hat,
+            t_hat=t_hat, t_lo=p_lo * t_exec, t_hi=p_hi * t_exec,
+            pow_hat=float(pow_hat), pow_lo=float(pow_lo),
+            pow_hi=float(pow_hi), e_hat=float(pow_hat * t_hat),
+            e_lo=float(p_lo * t_exec * pow_lo),
+            e_hi=float(p_hi * t_exec * pow_hi),
+            ci_valid=(n * p_hat > 5.0) and (n * (1.0 - p_hat) > 5.0)))
+    return tuple(out)
+
+
+def _time_once(fn):
+    fn()                       # warmup
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(verbose: bool = True) -> list[str]:
+    n = int(os.environ.get("ALEA_BENCH_N", 1_000_000))
+    rng = np.random.default_rng(0)
+    rows: list[tuple[str, float, str]] = []
+    record: dict = {"n_samples": n, "aggregation": {}, "estimator": {}}
+
+    for R in (64, 2048, 8192):
+        ids = rng.integers(0, R, n).astype(np.int32)
+        pows = (50.0 + 150.0 * rng.random(n))
+        entry: dict = {}
+
+        dt = _time_once(lambda: aggregate_samples_np(ids, pows, R))
+        oneshot_dt = dt
+        entry["oneshot_numpy"] = {"sec": dt, "samples_per_sec": n / dt}
+        rows.append((f"aggregation/oneshot/R{R}", dt * 1e6,
+                     f"{n / dt / 1e6:.1f} Msamples/s"))
+
+        for chunk in (4096, 65536, 262144):
+            def go(chunk=chunk):
+                agg = StreamingAggregator(R)
+                for lo in range(0, n, chunk):
+                    agg.update(ids[lo:lo + chunk], pows[lo:lo + chunk])
+                return agg
+            dt = _time_once(go)
+            entry[f"streaming_chunk{chunk}"] = {
+                "sec": dt, "samples_per_sec": n / dt,
+                "vs_oneshot": dt / oneshot_dt}
+            rows.append((f"aggregation/stream_c{chunk}/R{R}", dt * 1e6,
+                         f"{n / dt / 1e6:.1f} Msamples/s "
+                         f"{dt / oneshot_dt:.2f}x oneshot"))
+
+        # Pallas chunked kernel, interpret mode: correctness-path timing on
+        # a reduced stream (interpret is orders slower than compiled TPU).
+        from repro.kernels.sample_attr.ops import chunked_aggregate_fn
+        n_p = min(n, 65536)
+        agg_fn = chunked_aggregate_fn(16384, interpret=True)
+        def go_pallas():
+            agg = StreamingAggregator(R, aggregate_fn=agg_fn)
+            agg.update(ids[:n_p], pows[:n_p])
+            return agg
+        dt = _time_once(go_pallas)
+        entry["pallas_interpret"] = {"sec": dt, "n": n_p,
+                                     "samples_per_sec": n_p / dt}
+        rows.append((f"aggregation/pallas_interp/R{R}", dt * 1e6,
+                     f"{n_p / dt / 1e6:.2f} Msamples/s n={n_p}"))
+        record["aggregation"][f"R{R}"] = entry
+
+    # Estimator build: vectorized table vs seed per-region loop at 10^4
+    # regions (the multi-worker combination-count regime).
+    R_est = 10_000
+    counts = rng.integers(1, 50, R_est).astype(np.int64)
+    psum = counts * (60.0 + 10.0 * rng.random(R_est))
+    psumsq = psum * psum / counts * 1.01
+    names = [f"comb_{i}" for i in range(R_est)]
+    dt_loop = _time_once(lambda: _build_estimates_loop(
+        counts, psum, psumsq, names, 10.0, 0.05))
+    dt_vec = _time_once(lambda: estimates_from_statistics(
+        counts, psum, psumsq, 10.0, names))
+    speedup = dt_loop / dt_vec
+    record["estimator"] = {"num_regions": R_est, "loop_sec": dt_loop,
+                           "vectorized_sec": dt_vec, "speedup": speedup}
+    rows.append((f"estimator/build_loop/R{R_est}", dt_loop * 1e6, "seed loop"))
+    rows.append((f"estimator/build_vectorized/R{R_est}", dt_vec * 1e6,
+                 f"{speedup:.1f}x over loop"))
+
+    _JSON_PATH.write_text(json.dumps(record, indent=2))
+    if verbose:
+        for nm, us, d in rows:
+            print(f"{nm:44s} {us:12.1f}us {d}")
+        print(f"wrote {_JSON_PATH}")
+    return [csv_row(nm, us, d) for nm, us, d in rows]
+
+
+if __name__ == "__main__":
+    run()

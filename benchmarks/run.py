@@ -11,8 +11,9 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (kernels, kmeans_hotspot, memory_power,
-                            ocean_finegrain, sampling_period, validation)
+    from benchmarks import (aggregation, kernels, kmeans_hotspot,
+                            memory_power, ocean_finegrain, sampling_period,
+                            validation)
     mods = [
         ("sampling_period (Fig 4/5)", sampling_period),
         ("validation (Fig 6 / §5)", validation),
@@ -20,6 +21,7 @@ def main() -> None:
         ("kmeans_hotspot (Table 2, §7.1)", kmeans_hotspot),
         ("ocean_finegrain (Table 3, §7.2)", ocean_finegrain),
         ("kernels (Pallas microbench)", kernels),
+        ("aggregation (streaming engine)", aggregation),
     ]
     all_rows = ["name,us_per_call,derived"]
     for title, mod in mods:

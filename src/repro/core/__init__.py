@@ -9,26 +9,35 @@ the sensor's sampling period.
 from repro.core.attribution import AttributionReport, ValidationResult, validate
 from repro.core.energy_opt import (ImplVariant, KnobSpace, ProgramPlan,
                                    RegionPlan, baseline_plan, optimize_regions)
-from repro.core.estimator import (EstimateSet, RegionEstimate,
-                                  aggregate_samples_np, estimate_combinations,
-                                  estimate_regions, z_quantile)
+from repro.core.estimator import (AggregateFn, EstimateSet, EstimateTable,
+                                  RegionEstimate, aggregate_samples_np,
+                                  estimate_combinations, estimate_regions,
+                                  estimates_from_statistics, z_quantile)
 from repro.core.power_model import (TPU_V5E, HardwareSpec, PowerModel,
                                     PowerModelParams)
 from repro.core.profiler import EnergyProfiler, HostSession
 from repro.core.regions import profiling_session, region, registry
-from repro.core.sampler import (HostSampler, RegionMarker, SampleStream,
-                                sample_timeline)
+from repro.core.sampler import (HostSampler, RegionMarker, SampleBuffer,
+                                SampleStream, iter_multiworker_chunks,
+                                iter_sample_chunks, sample_timeline)
+from repro.core.streaming import (CombinationInterner, StreamingAggregator,
+                                  StreamingCombinationAggregator,
+                                  stream_estimate)
 from repro.core.timeline import RegionCost, Timeline, ground_truth, synthesize
 
 __all__ = [
     "AttributionReport", "ValidationResult", "validate",
     "ImplVariant", "KnobSpace", "ProgramPlan", "RegionPlan",
     "baseline_plan", "optimize_regions",
-    "EstimateSet", "RegionEstimate", "aggregate_samples_np",
-    "estimate_combinations", "estimate_regions", "z_quantile",
+    "AggregateFn", "EstimateSet", "EstimateTable", "RegionEstimate",
+    "aggregate_samples_np", "estimate_combinations", "estimate_regions",
+    "estimates_from_statistics", "z_quantile",
+    "CombinationInterner", "StreamingAggregator",
+    "StreamingCombinationAggregator", "stream_estimate",
     "TPU_V5E", "HardwareSpec", "PowerModel", "PowerModelParams",
     "EnergyProfiler", "HostSession",
     "profiling_session", "region", "registry",
-    "HostSampler", "RegionMarker", "SampleStream", "sample_timeline",
+    "HostSampler", "RegionMarker", "SampleBuffer", "SampleStream",
+    "iter_multiworker_chunks", "iter_sample_chunks", "sample_timeline",
     "RegionCost", "Timeline", "ground_truth", "synthesize",
 ]

@@ -15,25 +15,39 @@ regions sampled simultaneously across workers (threads in the paper; chips
 or hosts here), because shared-resource contention makes per-worker
 apportioning unsound.
 
-Everything is vectorized; the aggregation hot spot (counts / power sums /
-power sums-of-squares per region) is pluggable so the Pallas
+Everything is vectorized end to end: the aggregation hot spot (counts /
+power sums / power sums-of-squares per region) is pluggable so the Pallas
 ``kernels.sample_attr`` kernel can take over on TPU for fleet-scale sample
-streams.
+streams, and estimate construction itself is pure numpy column math over an
+:class:`EstimateTable` — :class:`RegionEstimate` rows are lazy views, so
+10⁴–10⁵ multi-worker combinations cost array ops, not Python-loop time.
+
+Two consumption modes share this module's math:
+
+  * one-shot — :func:`estimate_regions` over in-memory arrays (this file);
+  * streaming — :class:`repro.core.streaming.StreamingAggregator` folds
+    sample *chunks* into (counts, Σpow, Σpow²) accumulators behind the same
+    ``AggregateFn`` seam and calls :func:`estimates_from_statistics` at the
+    end, so fleet-scale runs never materialize the full stream.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
 __all__ = [
+    "AggregateFn",
     "RegionEstimate",
+    "EstimateTable",
     "EstimateSet",
     "aggregate_samples_np",
     "estimate_regions",
+    "estimates_from_statistics",
     "estimate_combinations",
     "z_quantile",
 ]
@@ -97,28 +111,103 @@ class RegionEstimate:
 
 
 @dataclasses.dataclass(frozen=True)
-class EstimateSet:
-    """All region estimates from one profiling pass."""
+class EstimateTable:
+    """Columnar per-region estimates (one numpy array per statistic).
 
-    regions: tuple[RegionEstimate, ...]
+    The vectorized ``_build_estimates`` produces this directly; it is the
+    storage format for fleet-scale runs where the combination table reaches
+    10⁴–10⁵ rows. :class:`RegionEstimate` objects are materialized lazily
+    per row via :meth:`row` / :meth:`rows`.
+    """
+
+    region_ids: np.ndarray    # int64 [k]
+    names: tuple[str, ...]    # len k (aligned with rows, not global ids)
+    n_samples: np.ndarray     # int64 [k]
+    p_hat: np.ndarray         # float64 [k]
+    t_hat: np.ndarray
+    t_lo: np.ndarray
+    t_hi: np.ndarray
+    pow_hat: np.ndarray
+    pow_lo: np.ndarray
+    pow_hi: np.ndarray
+    e_hat: np.ndarray
+    e_lo: np.ndarray
+    e_hi: np.ndarray
+    ci_valid: np.ndarray      # bool [k]
+
+    def __len__(self) -> int:
+        return len(self.region_ids)
+
+    def row(self, i: int) -> RegionEstimate:
+        """Materialize one row as a RegionEstimate view."""
+        return RegionEstimate(
+            region_id=int(self.region_ids[i]), name=self.names[i],
+            n_samples=int(self.n_samples[i]), p_hat=float(self.p_hat[i]),
+            t_hat=float(self.t_hat[i]), t_lo=float(self.t_lo[i]),
+            t_hi=float(self.t_hi[i]), pow_hat=float(self.pow_hat[i]),
+            pow_lo=float(self.pow_lo[i]), pow_hi=float(self.pow_hi[i]),
+            e_hat=float(self.e_hat[i]), e_lo=float(self.e_lo[i]),
+            e_hi=float(self.e_hi[i]), ci_valid=bool(self.ci_valid[i]))
+
+    def rows(self) -> tuple[RegionEstimate, ...]:
+        return tuple(self.row(i) for i in range(len(self)))
+
+    @classmethod
+    def from_rows(cls, rows: Sequence[RegionEstimate]) -> "EstimateTable":
+        def col(attr, dtype):
+            return np.array([getattr(r, attr) for r in rows], dtype=dtype)
+        return cls(
+            region_ids=col("region_id", np.int64),
+            names=tuple(r.name for r in rows),
+            n_samples=col("n_samples", np.int64),
+            p_hat=col("p_hat", np.float64), t_hat=col("t_hat", np.float64),
+            t_lo=col("t_lo", np.float64), t_hi=col("t_hi", np.float64),
+            pow_hat=col("pow_hat", np.float64),
+            pow_lo=col("pow_lo", np.float64),
+            pow_hi=col("pow_hi", np.float64),
+            e_hat=col("e_hat", np.float64), e_lo=col("e_lo", np.float64),
+            e_hi=col("e_hi", np.float64), ci_valid=col("ci_valid", bool))
+
+
+@dataclasses.dataclass(frozen=True)
+class EstimateSet:
+    """All region estimates from one profiling pass.
+
+    Backed by a columnar :class:`EstimateTable`; ``regions`` is a lazily
+    cached tuple of per-row views, so existing consumers keep iterating
+    RegionEstimate objects while array consumers read ``table`` columns.
+    """
+
+    table: EstimateTable
     n_total: int
     t_exec: float
     alpha: float
+
+    @classmethod
+    def from_regions(cls, regions: Sequence[RegionEstimate], n_total: int,
+                     t_exec: float, alpha: float) -> "EstimateSet":
+        return cls(table=EstimateTable.from_rows(tuple(regions)),
+                   n_total=n_total, t_exec=t_exec, alpha=alpha)
+
+    @functools.cached_property
+    def regions(self) -> tuple[RegionEstimate, ...]:
+        return self.table.rows()
 
     def by_name(self) -> Mapping[str, RegionEstimate]:
         return {r.name: r for r in self.regions}
 
     @property
     def total_energy(self) -> float:
-        return float(sum(r.e_hat for r in self.regions))
+        return float(self.table.e_hat.sum())
 
     @property
     def total_time(self) -> float:
-        return float(sum(r.t_hat for r in self.regions))
+        return float(self.table.t_hat.sum())
 
     def dominant(self, k: int = 1) -> tuple[RegionEstimate, ...]:
         """Top-k regions by estimated energy (hotspot analysis, §7.1)."""
-        return tuple(sorted(self.regions, key=lambda r: -r.e_hat)[:k])
+        idx = np.argsort(-self.table.e_hat, kind="stable")[:k]
+        return tuple(self.table.row(int(i)) for i in idx)
 
 
 AggregateFn = Callable[[np.ndarray, np.ndarray, int],
@@ -144,53 +233,79 @@ def aggregate_samples_np(region_ids: np.ndarray, powers: np.ndarray,
 def _build_estimates(counts: np.ndarray, psum: np.ndarray, psumsq: np.ndarray,
                      names: Sequence[str], t_exec: float, alpha: float,
                      drop_empty: bool) -> EstimateSet:
+    """Vectorized Eq. 4-16 over the per-region sufficient statistics.
+
+    Pure numpy column math — no per-region Python loop — so multi-worker
+    runs with 10⁴–10⁵ combinations build in array time. Returns an
+    EstimateSet backed by a columnar EstimateTable.
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    psum = np.asarray(psum, dtype=np.float64)
+    psumsq = np.asarray(psumsq, dtype=np.float64)
     n = int(counts.sum())
     if n == 0:
         raise ValueError("no samples collected; cannot estimate")
     z = z_quantile(alpha)
-    out: list[RegionEstimate] = []
-    for rid in range(len(counts)):
-        n_bb = int(counts[rid])
-        if n_bb == 0 and drop_empty:
-            continue
-        p_hat = n_bb / n
-        # Eq. 8/9: Wald interval on the Bernoulli proportion.
-        se_p = math.sqrt(max(p_hat * (1.0 - p_hat), 0.0) / n)
-        p_lo = max(p_hat - z * se_p, 0.0)
-        p_hi = min(p_hat + z * se_p, 1.0)
-        t_hat = p_hat * t_exec
-        # Eq. 6 and 12-14: mean power and its normal CI.
-        if n_bb > 0:
-            pow_hat = psum[rid] / n_bb
-        else:
-            pow_hat = 0.0
-        if n_bb > 1:
-            var = (psumsq[rid] - n_bb * pow_hat * pow_hat) / (n_bb - 1)
-            s = math.sqrt(max(var, 0.0))
-            se_pow = s / math.sqrt(n_bb)
-        else:
-            se_pow = 0.0
-        pow_lo = pow_hat - z * se_pow
-        pow_hi = pow_hat + z * se_pow
-        e_hat = pow_hat * t_hat  # Eq. 7
-        out.append(RegionEstimate(
-            region_id=rid,
-            name=names[rid] if rid < len(names) else f"region_{rid}",
-            n_samples=n_bb,
-            p_hat=p_hat,
-            t_hat=t_hat,
-            t_lo=p_lo * t_exec,
-            t_hi=p_hi * t_exec,
-            pow_hat=float(pow_hat),
-            pow_lo=float(pow_lo),
-            pow_hi=float(pow_hi),
-            e_hat=float(e_hat),
-            e_lo=float(p_lo * t_exec * pow_lo),   # Eq. 16
-            e_hi=float(p_hi * t_exec * pow_hi),
-            ci_valid=(n * p_hat > 5.0) and (n * (1.0 - p_hat) > 5.0),
-        ))
-    return EstimateSet(regions=tuple(out), n_total=n, t_exec=float(t_exec),
+
+    rids = np.arange(len(counts), dtype=np.int64)
+    if drop_empty:
+        keep = counts > 0
+        rids, counts = rids[keep], counts[keep]
+        psum, psumsq = psum[keep], psumsq[keep]
+
+    p_hat = counts / n
+    # Eq. 8/9: Wald interval on the Bernoulli proportion.
+    se_p = np.sqrt(np.maximum(p_hat * (1.0 - p_hat), 0.0) / n)
+    p_lo = np.maximum(p_hat - z * se_p, 0.0)
+    p_hi = np.minimum(p_hat + z * se_p, 1.0)
+    t_hat = p_hat * t_exec
+    # Eq. 6 and 12-14: mean power and its normal CI.
+    nz = counts > 0
+    pow_hat = np.divide(psum, counts, out=np.zeros_like(psum), where=nz)
+    gt1 = counts > 1
+    var = np.divide(psumsq - counts * pow_hat * pow_hat,
+                    np.maximum(counts - 1, 1),
+                    out=np.zeros_like(psum), where=gt1)
+    se_pow = np.sqrt(np.maximum(var, 0.0) / np.maximum(counts, 1))
+    pow_lo = pow_hat - z * se_pow
+    pow_hi = pow_hat + z * se_pow
+    e_hat = pow_hat * t_hat                      # Eq. 7
+    n_names = len(names)
+    table = EstimateTable(
+        region_ids=rids,
+        names=tuple(names[r] if r < n_names else f"region_{r}"
+                    for r in rids),
+        n_samples=counts,
+        p_hat=p_hat,
+        t_hat=t_hat,
+        t_lo=p_lo * t_exec,
+        t_hi=p_hi * t_exec,
+        pow_hat=pow_hat,
+        pow_lo=pow_lo,
+        pow_hi=pow_hi,
+        e_hat=e_hat,
+        e_lo=p_lo * t_exec * pow_lo,             # Eq. 16
+        e_hi=p_hi * t_exec * pow_hi,
+        ci_valid=(n * p_hat > 5.0) & (n * (1.0 - p_hat) > 5.0),
+    )
+    return EstimateSet(table=table, n_total=n, t_exec=float(t_exec),
                        alpha=alpha)
+
+
+def estimates_from_statistics(counts: np.ndarray, psum: np.ndarray,
+                              psumsq: np.ndarray, t_exec: float,
+                              names: Sequence[str], *, alpha: float = 0.05,
+                              drop_empty: bool = True) -> EstimateSet:
+    """Build estimates directly from pre-aggregated sufficient statistics.
+
+    Entry point for the streaming path: a
+    :class:`repro.core.streaming.StreamingAggregator` (or any multi-host
+    shard reduction) hands its merged (counts, Σpow, Σpow²) here without
+    ever materializing the raw sample stream.
+    """
+    return _build_estimates(np.asarray(counts), np.asarray(psum),
+                            np.asarray(psumsq), list(names), t_exec, alpha,
+                            drop_empty)
 
 
 def estimate_regions(region_ids: np.ndarray, powers: np.ndarray,
@@ -222,6 +337,11 @@ def encode_combinations(region_id_matrix: np.ndarray
 
     Paper §4.4 / Eq. 19: ``comb = (bb_thread_1, ..., bb_thread_l)``.
 
+    One-shot variant: sorts the full matrix via ``np.unique`` (combos come
+    out in lexicographic order). For chunked streams use
+    :class:`repro.core.streaming.CombinationInterner`, which interns rows
+    incrementally in first-appearance order with O(chunk + distinct) memory.
+
     Args:
       region_id_matrix: int array [n, workers].
     Returns:
@@ -235,14 +355,21 @@ def encode_combinations(region_id_matrix: np.ndarray
     return inverse.astype(np.int64), combos
 
 
+def combination_names(combos: Sequence[tuple[int, ...]],
+                      names: Sequence[str]) -> list[str]:
+    """Human names for combination tuples (shared by one-shot + streaming)."""
+    n_names = len(names)
+    return ["+".join(names[r] if r < n_names else f"r{r}" for r in c)
+            for c in combos]
+
+
 def estimate_combinations(region_id_matrix: np.ndarray, powers: np.ndarray,
                           t_exec: float, names: Sequence[str],
                           *, alpha: float = 0.05) -> tuple[EstimateSet, list[tuple[int, ...]]]:
     """Multi-worker estimation over region combinations (Eqs. 17-19)."""
     comb_ids, combos = encode_combinations(region_id_matrix)
-    comb_names = ["+".join(names[r] if r < len(names) else f"r{r}" for r in c)
-                  for c in combos]
-    est = estimate_regions(comb_ids, powers, t_exec, comb_names, alpha=alpha)
+    est = estimate_regions(comb_ids, powers, t_exec,
+                           combination_names(combos, names), alpha=alpha)
     return est, combos
 
 
@@ -276,5 +403,5 @@ def marginalize_worker(est: EstimateSet, combos: list[tuple[int, ...]],
             pow_hat=float(pw), pow_lo=float("nan"), pow_hi=float("nan"),
             e_hat=float(e[rid]), e_lo=float("nan"), e_hi=float("nan"),
             ci_valid=False))
-    return EstimateSet(regions=tuple(out), n_total=est.n_total,
-                       t_exec=est.t_exec, alpha=est.alpha)
+    return EstimateSet.from_regions(out, n_total=est.n_total,
+                                    t_exec=est.t_exec, alpha=est.alpha)

@@ -21,10 +21,13 @@ from typing import Iterator
 
 from repro.core import regions as regions_mod
 from repro.core.attribution import AttributionReport
-from repro.core.estimator import (EstimateSet, estimate_combinations,
-                                  estimate_regions)
+from repro.core.estimator import (AggregateFn, EstimateSet,
+                                  estimate_combinations, estimate_regions)
 from repro.core.sampler import (HostSampler, RegionMarker, SampleStream,
+                                iter_multiworker_chunks, iter_sample_chunks,
                                 sample_timeline, sample_timeline_multiworker)
+from repro.core.streaming import (StreamingAggregator,
+                                  StreamingCombinationAggregator)
 from repro.core.sensors import (Ina231TraceSensor, InstantTraceSensor,
                                 RaplTraceSensor, available_host_sensor)
 from repro.core.timeline import Timeline
@@ -106,6 +109,54 @@ class EnergyProfiler:
         names = timelines[0].names
         return estimate_combinations(stream.region_ids, stream.powers,
                                      stream.t_exec, names, alpha=self.alpha)
+
+    # -- streaming (fleet-scale) mode ------------------------------------------
+    def profile_timeline_streaming(self, tl: Timeline, *,
+                                   sensor: str = "rapl",
+                                   chunk_size: int = 65536,
+                                   overhead_per_sample: float = 0.0,
+                                   aggregate_fn: AggregateFn | None = None,
+                                   seed: int | None = None) -> EstimateSet:
+        """Constant-memory profiling: chunked sampling → StreamingAggregator.
+
+        Equivalent estimates to :meth:`profile_timeline` (different jitter
+        draws for the same seed) while holding O(chunk + R) sample state —
+        the path for runs long enough that the stream won't fit in memory.
+        ``aggregate_fn`` plugs the Pallas chunked kernel in per block.
+        """
+        sens = _SENSORS[sensor](tl)
+        agg = StreamingAggregator(len(tl.names), aggregate_fn=aggregate_fn)
+        n = 0
+        for rids, pows in iter_sample_chunks(
+                tl, sens, period=self.period, jitter=self.jitter,
+                overhead_per_sample=overhead_per_sample,
+                seed=self.seed if seed is None else seed,
+                chunk_size=chunk_size):
+            agg.update(rids, pows)
+            n += len(rids)
+        t_exec = tl.t_exec + n * overhead_per_sample
+        return agg.estimates(t_exec, tl.names, alpha=self.alpha)
+
+    def profile_multiworker_streaming(self, timelines: list[Timeline], *,
+                                      sensor: str = "rapl",
+                                      chunk_size: int = 65536,
+                                      aggregate_fn: AggregateFn | None = None,
+                                      seed: int | None = None):
+        """§4.4 combination attribution without materializing the stream.
+
+        Chunked multi-worker sampling feeds a
+        StreamingCombinationAggregator (incremental combination interning),
+        so fleet-scale combination spaces (10⁴–10⁵) stay bounded by
+        O(chunk + distinct combinations).
+        """
+        agg = StreamingCombinationAggregator(aggregate_fn=aggregate_fn)
+        agg.update_stream(iter_multiworker_chunks(
+            timelines, lambda tl: _SENSORS[sensor](tl),
+            period=self.period, jitter=self.jitter,
+            seed=self.seed if seed is None else seed,
+            chunk_size=chunk_size))
+        t_end = min(tl.t_exec for tl in timelines)
+        return agg.estimates(t_end, timelines[0].names, alpha=self.alpha)
 
     # -- host (this machine) mode --------------------------------------------
     def host_session(self, *, jit_marking: bool = False) -> HostSession:

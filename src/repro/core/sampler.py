@@ -29,7 +29,9 @@ import numpy as np
 
 from repro.core.timeline import Timeline
 
-__all__ = ["SampleStream", "sample_timeline", "HostSampler", "RegionMarker"]
+__all__ = ["SampleStream", "sample_timeline", "iter_sample_chunks",
+           "iter_multiworker_chunks", "sample_timeline_multiworker",
+           "HostSampler", "RegionMarker", "SampleBuffer"]
 
 
 @dataclasses.dataclass
@@ -99,6 +101,83 @@ def sample_timeline(tl: Timeline, sensor, *, period: float,
                         overhead_time=overhead_time)
 
 
+class _ChunkedTimes:
+    """Systematic sample-time generator emitting bounded chunks.
+
+    Same process as :func:`_sample_times` (first sample at U(0, T), then
+    advance by T + U(0, jitter)) but drawn ``chunk_size`` deltas at a time,
+    so an arbitrarily long run needs O(chunk) memory for times.
+    """
+
+    def __init__(self, t_end: float, period: float, jitter: float,
+                 rng: np.random.Generator, chunk_size: int):
+        self._t_end = t_end
+        self._period = period
+        self._jitter = jitter
+        self._rng = rng
+        self._chunk = chunk_size
+        self._next_t = float(rng.uniform(0.0, period))
+
+    def __iter__(self):
+        while self._next_t < self._t_end:
+            deltas = self._period + self._rng.uniform(
+                0.0, self._jitter, size=self._chunk)
+            times = self._next_t + np.concatenate(
+                [[0.0], np.cumsum(deltas[:-1])])
+            self._next_t = float(times[-1] + deltas[-1])
+            times = times[times < self._t_end]
+            if len(times):
+                yield times
+
+
+def iter_sample_chunks(tl: Timeline, sensor, *, period: float,
+                       jitter: float = 200e-6,
+                       overhead_per_sample: float = 0.0,
+                       idle_power: float = 70.0, seed: int = 0,
+                       chunk_size: int = 65536):
+    """Streaming counterpart of :func:`sample_timeline`.
+
+    Yields (region_ids, powers) chunks of ≤ ``chunk_size`` samples without
+    ever materializing the full stream — feed to
+    ``streaming.StreamingAggregator``. Draws a different (statistically
+    equivalent) jitter sequence than the one-shot path for the same seed.
+    """
+    rng = np.random.default_rng(seed)
+    if period < getattr(sensor, "min_period", 0.0):
+        raise ValueError(f"sampling period {period} below sensor minimum "
+                         f"{sensor.min_period}")
+    frac = min(overhead_per_sample / period, 1.0) if overhead_per_sample > 0.0 \
+        else 0.0
+    for times in _ChunkedTimes(tl.t_exec, period, jitter, rng, chunk_size):
+        rids = tl.region_at(times)
+        if hasattr(sensor, "read_many"):
+            pows = np.asarray(sensor.read_many(times), dtype=np.float64)
+        else:
+            pows = np.asarray(sensor.read(times), dtype=np.float64)
+        if frac:
+            pows = (1.0 - frac) * pows + frac * idle_power
+        yield rids, pows
+
+
+def iter_multiworker_chunks(timelines: list[Timeline], sensor_fn, *,
+                            period: float, jitter: float = 200e-6,
+                            seed: int = 0, chunk_size: int = 65536):
+    """Streaming counterpart of :func:`sample_timeline_multiworker`.
+
+    Yields ([c, workers] region-id matrices, [c] summed powers) chunks —
+    feed to ``streaming.StreamingCombinationAggregator``.
+    """
+    rng = np.random.default_rng(seed)
+    t_end = min(tl.t_exec for tl in timelines)
+    sensors = [sensor_fn(tl) for tl in timelines]
+    for times in _ChunkedTimes(t_end, period, jitter, rng, chunk_size):
+        rid_mat = np.stack([tl.region_at(times) for tl in timelines], axis=1)
+        total_power = sum(np.asarray(s.read_many(times)
+                                     if hasattr(s, "read_many")
+                                     else s.read(times)) for s in sensors)
+        yield rid_mat, total_power
+
+
 def sample_timeline_multiworker(timelines: list[Timeline], sensor_fn,
                                 *, period: float, jitter: float = 200e-6,
                                 seed: int = 0) -> SampleStream:
@@ -142,6 +221,53 @@ class RegionMarker:
         self.value = region_id
 
 
+class SampleBuffer:
+    """Growable preallocated (region_id, power) buffer.
+
+    The control thread's hot path is two array stores + an index bump —
+    no per-sample Python object boxing or list resizing (paper's ~1%
+    overhead budget, §4.8). Capacity doubles when full (amortized O(1)).
+    ``drain()`` empties the buffer, so streaming consumers that drain
+    periodically hold O(drain chunk) state — capacity is bounded by the
+    largest inter-drain burst, not run length. The lock is uncontended
+    except at drain points (≪ the ≥1 ms sampling period).
+    """
+
+    def __init__(self, capacity: int = 4096):
+        self._rids = np.empty(max(capacity, 16), dtype=np.int32)
+        self._pows = np.empty(max(capacity, 16), dtype=np.float64)
+        self._n = 0
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        return self._n
+
+    def append(self, rid: int, power: float) -> None:
+        with self._lock:
+            n = self._n
+            if n == len(self._rids):
+                self._rids = np.concatenate(
+                    [self._rids, np.empty_like(self._rids)])
+                self._pows = np.concatenate(
+                    [self._pows, np.empty_like(self._pows)])
+            self._rids[n] = rid
+            self._pows[n] = power
+            self._n = n + 1
+
+    def view(self) -> tuple[np.ndarray, np.ndarray]:
+        """All undrained samples (copies); does not advance the cursor."""
+        with self._lock:
+            return self._rids[:self._n].copy(), self._pows[:self._n].copy()
+
+    def drain(self) -> tuple[np.ndarray, np.ndarray]:
+        """All undrained samples (copies); empties the buffer."""
+        with self._lock:
+            n = self._n
+            out = self._rids[:n].copy(), self._pows[:n].copy()
+            self._n = 0
+            return out
+
+
 class HostSampler:
     """Control thread sampling (marker, sensor) at a jittered period."""
 
@@ -154,16 +280,16 @@ class HostSampler:
         self._rng = np.random.default_rng(seed)
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
-        self._rids: list[int] = []
-        self._pows: list[float] = []
+        self._buf = SampleBuffer()
         self._t0 = 0.0
         self._t1 = 0.0
 
     def _loop(self) -> None:
         read = self.sensor.read
+        append = self._buf.append
+        marker = self.marker
         while not self._stop.is_set():
-            self._rids.append(self.marker.value)
-            self._pows.append(float(read()))
+            append(marker.value, float(read()))
             time.sleep(self.period + float(self._rng.uniform(0, self.jitter)))
 
     def __enter__(self) -> "HostSampler":
@@ -186,9 +312,24 @@ class HostSampler:
         self._thread.join(timeout=5.0)
         sys.setswitchinterval(self._old_switch)
 
+    def drain(self) -> tuple[np.ndarray, np.ndarray]:
+        """New (region_ids, powers) since the last drain (streaming use).
+
+        Empties the buffer — a session either drains periodically into a
+        streaming aggregator or collects everything for :meth:`stream`;
+        after any drain, ``stream()`` only covers the undrained tail.
+        """
+        return self._buf.drain()
+
+    @property
+    def elapsed(self) -> float:
+        """Session wall time so far (final once the sampler exits)."""
+        end = self._t1 if self._t1 > self._t0 else time.monotonic()
+        return end - self._t0
+
     def stream(self) -> SampleStream:
-        if not self._rids:
+        if not len(self._buf):
             raise RuntimeError("no samples collected")
-        return SampleStream(region_ids=np.asarray(self._rids, dtype=np.int32),
-                            powers=np.asarray(self._pows, dtype=np.float64),
-                            t_exec=self._t1 - self._t0, n=len(self._rids))
+        rids, pows = self._buf.view()
+        return SampleStream(region_ids=rids, powers=pows,
+                            t_exec=self._t1 - self._t0, n=len(rids))

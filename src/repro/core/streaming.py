@@ -1,0 +1,261 @@
+"""Streaming fleet-scale sample aggregation (constant extra memory).
+
+ALEA's accuracy comes from sample volume: a fleet sampling at the paper's
+~10 ms period (let alone PowerSensor3-class multi-kHz sensors) produces
+billions of (region_id, power) samples — far more than the one-shot
+``np.bincount`` path in :mod:`repro.core.estimator` can hold in memory.
+This module makes the estimator pipeline *streaming*:
+
+* :class:`StreamingAggregator` folds sample chunks of any size into the
+  per-region sufficient statistics (counts, Σpow, Σpow²) behind the same
+  pluggable ``AggregateFn`` seam the one-shot path uses, so the Pallas
+  ``kernels/sample_attr`` kernel (region-tiled, chunked) drops in per
+  block. ``merge()`` reduces shards from multiple hosts — the statistics
+  are associative+commutative, so any reduction tree is exact.
+
+* :class:`CombinationInterner` replaces ``encode_combinations``'s
+  full-matrix ``np.unique(axis=0)`` with incremental hash-interning of
+  per-worker region vectors: each chunk is deduplicated locally (sort
+  bounded by chunk size) and its unique rows interned into a dict, so the
+  multi-worker path runs in one pass with O(chunk + distinct combos)
+  memory and no re-sort of previously seen data.
+
+* :class:`StreamingCombinationAggregator` composes the two for §4.4
+  combination-level attribution over chunked multi-worker streams.
+
+Peak extra memory is O(chunk + R) instead of O(n); see
+``benchmarks/aggregation.py`` for the throughput trajectory.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core import estimator as estimator_mod
+from repro.core.estimator import (AggregateFn, EstimateSet,
+                                  combination_names,
+                                  estimates_from_statistics)
+
+__all__ = [
+    "DEFAULT_CHUNK",
+    "StreamingAggregator",
+    "CombinationInterner",
+    "StreamingCombinationAggregator",
+    "stream_estimate",
+]
+
+DEFAULT_CHUNK = 65536
+
+
+class StreamingAggregator:
+    """Constant-memory accumulator of per-region sample statistics.
+
+    Consumes (region_ids, powers) chunks of any size via :meth:`update`;
+    holds exactly three [R] accumulators (counts int64, Σpow f64, Σpow² f64).
+    ``aggregate_fn`` is the per-chunk reducer — defaults to the numpy
+    reference, swap in ``kernels.sample_attr.ops.chunked_aggregate_fn`` for
+    the Pallas path. :meth:`merge` combines shards (multi-host reduction).
+    """
+
+    def __init__(self, num_regions: int, *,
+                 aggregate_fn: AggregateFn | None = None):
+        if num_regions < 0:
+            raise ValueError(f"num_regions must be >= 0; got {num_regions}")
+        self._agg = aggregate_fn or estimator_mod.aggregate_samples_np
+        self.counts = np.zeros(num_regions, dtype=np.int64)
+        self.psum = np.zeros(num_regions, dtype=np.float64)
+        self.psumsq = np.zeros(num_regions, dtype=np.float64)
+
+    @property
+    def num_regions(self) -> int:
+        return len(self.counts)
+
+    @property
+    def n_total(self) -> int:
+        return int(self.counts.sum())
+
+    def grow(self, num_regions: int) -> None:
+        """Widen the accumulators (new regions observed mid-stream)."""
+        extra = num_regions - self.num_regions
+        if extra < 0:
+            raise ValueError("cannot shrink a StreamingAggregator")
+        if extra:
+            self.counts = np.concatenate(
+                [self.counts, np.zeros(extra, np.int64)])
+            self.psum = np.concatenate(
+                [self.psum, np.zeros(extra, np.float64)])
+            self.psumsq = np.concatenate(
+                [self.psumsq, np.zeros(extra, np.float64)])
+
+    def update(self, region_ids: np.ndarray,
+               powers: np.ndarray) -> "StreamingAggregator":
+        """Fold one chunk into the accumulators. Returns self (chainable)."""
+        region_ids = np.asarray(region_ids)
+        powers = np.asarray(powers)
+        if len(region_ids) == 0:
+            return self
+        c, s, sq = self._agg(region_ids, powers, self.num_regions)
+        self.counts += np.asarray(c, dtype=np.int64)
+        self.psum += np.asarray(s, dtype=np.float64)
+        self.psumsq += np.asarray(sq, dtype=np.float64)
+        return self
+
+    def update_stream(self, chunks: Iterable[tuple[np.ndarray, np.ndarray]]
+                      ) -> "StreamingAggregator":
+        """Drain an iterator of (region_ids, powers) chunks."""
+        for rids, pows in chunks:
+            self.update(rids, pows)
+        return self
+
+    def merge(self, other: "StreamingAggregator") -> "StreamingAggregator":
+        """Fold another shard's statistics into this one (associative)."""
+        if other.num_regions > self.num_regions:
+            self.grow(other.num_regions)
+        r = other.num_regions
+        self.counts[:r] += other.counts
+        self.psum[:r] += other.psum
+        self.psumsq[:r] += other.psumsq
+        return self
+
+    def statistics(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(counts, Σpow, Σpow²) — copies, safe to hand across hosts."""
+        return self.counts.copy(), self.psum.copy(), self.psumsq.copy()
+
+    def estimates(self, t_exec: float, names: Sequence[str], *,
+                  alpha: float = 0.05, drop_empty: bool = True) -> EstimateSet:
+        """Finalize into an EstimateSet (vectorized Eq. 4-16)."""
+        return estimates_from_statistics(self.counts, self.psum, self.psumsq,
+                                         t_exec, names, alpha=alpha,
+                                         drop_empty=drop_empty)
+
+
+class CombinationInterner:
+    """Incremental hash-interning of per-sample worker region vectors.
+
+    Each :meth:`encode` call deduplicates its chunk locally (``np.unique``
+    over chunk rows only — the sort is bounded by chunk size) and interns
+    the chunk's unique rows into a persistent dict keyed by row bytes.
+    Combination ids are assigned in first-appearance order, so ids are
+    stream-order dependent but the (id → tuple) table always maps every
+    sample to the same combination tuple as the one-shot path.
+    """
+
+    def __init__(self):
+        self._table: dict[bytes, int] = {}
+        self._combos: list[tuple[int, ...]] = []
+        self._width: int | None = None
+
+    def __len__(self) -> int:
+        return len(self._combos)
+
+    @property
+    def combos(self) -> list[tuple[int, ...]]:
+        """Combination tuples indexed by combination id."""
+        return list(self._combos)
+
+    def intern(self, combo: tuple[int, ...]) -> int:
+        """Intern a single combination tuple; returns its id."""
+        key = np.asarray(combo, dtype=np.int64).tobytes()
+        cid = self._table.get(key)
+        if cid is None:
+            cid = len(self._combos)
+            self._table[key] = cid
+            self._combos.append(tuple(int(v) for v in combo))
+        return cid
+
+    def encode(self, region_id_matrix: np.ndarray) -> np.ndarray:
+        """Map one chunk [c, workers] of region-id vectors to comb ids [c]."""
+        mat = np.ascontiguousarray(np.asarray(region_id_matrix),
+                                   dtype=np.int64)
+        if mat.ndim != 2:
+            raise ValueError(f"expected [n, workers]; got shape {mat.shape}")
+        if self._width is None:
+            self._width = mat.shape[1]
+        elif mat.shape[1] != self._width:
+            raise ValueError(f"worker count changed mid-stream: "
+                             f"{mat.shape[1]} != {self._width}")
+        if len(mat) == 0:
+            return np.empty(0, dtype=np.int64)
+        uniq, inverse = np.unique(mat, axis=0, return_inverse=True)
+        # Hash the contiguous row bytes directly; the tuple form is only
+        # materialized on first insertion (steady state re-interns cost a
+        # dict lookup per distinct row, no boxing).
+        uniq = np.ascontiguousarray(uniq)
+        table = self._table
+        combos = self._combos
+        local_to_global = np.empty(len(uniq), dtype=np.int64)
+        for k in range(len(uniq)):
+            key = uniq[k].tobytes()
+            cid = table.get(key)
+            if cid is None:
+                cid = len(combos)
+                table[key] = cid
+                combos.append(tuple(int(v) for v in uniq[k]))
+            local_to_global[k] = cid
+        return local_to_global[inverse.reshape(-1)]
+
+
+class StreamingCombinationAggregator:
+    """§4.4 combination attribution over chunked multi-worker streams.
+
+    Composes a :class:`CombinationInterner` (growing combination id space)
+    with a :class:`StreamingAggregator` that widens as new combinations
+    appear. ``merge()`` remaps the other shard's combination ids through
+    this shard's interner, so multi-host reductions agree with a single
+    stream over the concatenated data.
+    """
+
+    def __init__(self, *, aggregate_fn: AggregateFn | None = None):
+        self.interner = CombinationInterner()
+        self.agg = StreamingAggregator(0, aggregate_fn=aggregate_fn)
+
+    @property
+    def n_total(self) -> int:
+        return self.agg.n_total
+
+    def update(self, region_id_matrix: np.ndarray,
+               powers: np.ndarray) -> "StreamingCombinationAggregator":
+        cids = self.interner.encode(region_id_matrix)
+        if len(self.interner) > self.agg.num_regions:
+            self.agg.grow(len(self.interner))
+        self.agg.update(cids, powers)
+        return self
+
+    def update_stream(self, chunks: Iterable[tuple[np.ndarray, np.ndarray]]
+                      ) -> "StreamingCombinationAggregator":
+        for mat, pows in chunks:
+            self.update(mat, pows)
+        return self
+
+    def merge(self, other: "StreamingCombinationAggregator"
+              ) -> "StreamingCombinationAggregator":
+        remap = np.array([self.interner.intern(c)
+                          for c in other.interner.combos], dtype=np.int64)
+        if len(self.interner) > self.agg.num_regions:
+            self.agg.grow(len(self.interner))
+        if len(remap):
+            np.add.at(self.agg.counts, remap, other.agg.counts)
+            np.add.at(self.agg.psum, remap, other.agg.psum)
+            np.add.at(self.agg.psumsq, remap, other.agg.psumsq)
+        return self
+
+    def estimates(self, t_exec: float, names: Sequence[str], *,
+                  alpha: float = 0.05
+                  ) -> tuple[EstimateSet, list[tuple[int, ...]]]:
+        """Finalize into (combination EstimateSet, combination tuples)."""
+        combos = self.interner.combos
+        est = self.agg.estimates(t_exec, combination_names(combos, names),
+                                 alpha=alpha)
+        return est, combos
+
+
+def stream_estimate(chunks: Iterable[tuple[np.ndarray, np.ndarray]],
+                    t_exec: float, names: Sequence[str], *,
+                    alpha: float = 0.05,
+                    aggregate_fn: AggregateFn | None = None) -> EstimateSet:
+    """One-call streaming estimation: fold chunks, then build estimates."""
+    agg = StreamingAggregator(len(names), aggregate_fn=aggregate_fn)
+    agg.update_stream(chunks)
+    return agg.estimates(t_exec, names, alpha=alpha)

@@ -56,29 +56,43 @@ class Timeline:
     names: tuple[str, ...]   # region id → name
 
     def __post_init__(self):
-        self.region_ids = np.asarray(self.region_ids, dtype=np.int32)
-        self.durations = np.asarray(self.durations, dtype=np.float64)
-        self.powers = np.asarray(self.powers, dtype=np.float64)
+        # Own copies, frozen: the lazy cumsum caches below assume the
+        # interval arrays never change after construction, so in-place
+        # mutation must fail loudly rather than silently serve stale
+        # t_exec/region_at/energy_integral.
+        self.region_ids = np.array(self.region_ids, dtype=np.int32)
+        self.durations = np.array(self.durations, dtype=np.float64)
+        self.powers = np.array(self.powers, dtype=np.float64)
+        for arr in (self.region_ids, self.durations, self.powers):
+            arr.flags.writeable = False
         if not (len(self.region_ids) == len(self.durations) == len(self.powers)):
             raise ValueError("timeline arrays must share length")
         if np.any(self.durations < 0):
             raise ValueError("negative durations")
+        # Lazy caches: region_at/power_at are called once per sample chunk,
+        # so recomputing an O(m) prefix sum per call dominates long runs.
+        self._ends_cache: np.ndarray | None = None
+        self._eint_cache: np.ndarray | None = None
 
     @property
     def t_exec(self) -> float:
-        return float(self.durations.sum())
+        return float(self.ends[-1]) if len(self.durations) else 0.0
 
     @property
     def starts(self) -> np.ndarray:
-        return np.concatenate([[0.0], np.cumsum(self.durations)[:-1]])
+        return np.concatenate([[0.0], self.ends[:-1]])
 
     @property
     def ends(self) -> np.ndarray:
-        return np.cumsum(self.durations)
+        if self._ends_cache is None:
+            self._ends_cache = np.cumsum(self.durations)
+        return self._ends_cache
 
     def energy_integral(self) -> np.ndarray:
         """Cumulative energy E(t) at interval ends (for sensor emulation)."""
-        return np.cumsum(self.durations * self.powers)
+        if self._eint_cache is None:
+            self._eint_cache = np.cumsum(self.durations * self.powers)
+        return self._eint_cache
 
     def region_at(self, times: np.ndarray) -> np.ndarray:
         """Region id executing at each time point (vectorized PC sampling)."""
@@ -99,15 +113,20 @@ class Timeline:
 
 
 def ground_truth(tl: Timeline) -> dict[str, dict[str, float]]:
-    """Exact per-region time/energy/power (the 'direct measurement')."""
-    out: dict[str, dict[str, float]] = {}
-    for rid in np.unique(tl.region_ids):
-        mask = tl.region_ids == rid
-        t = float(tl.durations[mask].sum())
-        e = float((tl.durations[mask] * tl.powers[mask]).sum())
-        out[tl.names[rid]] = {
-            "time": t, "energy": e, "power": (e / t if t > 0 else 0.0)}
-    return out
+    """Exact per-region time/energy/power (the 'direct measurement').
+
+    Vectorized: one weighted bincount per statistic instead of a
+    per-region boolean-mask pass over the interval arrays.
+    """
+    minlen = int(tl.region_ids.max()) + 1 if len(tl.region_ids) else 0
+    t = np.bincount(tl.region_ids, weights=tl.durations, minlength=minlen)
+    e = np.bincount(tl.region_ids, weights=tl.durations * tl.powers,
+                    minlength=minlen)
+    present = np.bincount(tl.region_ids, minlength=minlen) > 0
+    return {tl.names[rid]: {"time": float(t[rid]), "energy": float(e[rid]),
+                            "power": float(e[rid] / t[rid]) if t[rid] > 0
+                            else 0.0}
+            for rid in np.flatnonzero(present)}
 
 
 def synthesize(costs: Sequence[RegionCost], *, steps: int = 1,

@@ -1,8 +1,14 @@
-"""jit'd public wrapper for the sample-attribution kernel.
+"""jit'd public wrappers for the sample-attribution kernel.
 
 ``sample_attr(ids, powers, R)`` dispatches to the Pallas kernel on TPU and
 to interpret mode elsewhere; ``as_aggregate_fn`` adapts it to the
 estimator's pluggable aggregation interface.
+
+Streaming path: ``chunked_aggregate_fn`` returns an AggregateFn whose
+underlying ``pallas_call`` jit is cached by (block_n, block_r, num_regions)
+via :func:`sample_attr_chunk` — chunks are padded host-side to a fixed
+capacity so every chunk of a stream hits the same compiled executable
+(one trace per configuration, not one per chunk length).
 """
 
 from __future__ import annotations
@@ -13,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.sample_attr.sample_attr import sample_attr_pallas
+from repro.kernels.sample_attr.sample_attr import (DEFAULT_BLOCK_N,
+                                                   sample_attr_pallas)
 
 
 @functools.partial(jax.jit, static_argnums=(2, 3))
@@ -33,4 +40,65 @@ def as_aggregate_fn(interpret: bool | None = None):
                                int(num_regions), interpret)
         return (np.asarray(c).astype(np.int64), np.asarray(s, np.float64),
                 np.asarray(sq, np.float64))
+    return agg
+
+
+@functools.lru_cache(maxsize=None)
+def sample_attr_chunk(block_n: int, block_r: int | None, num_regions: int,
+                      interpret: bool):
+    """Compiled fixed-shape chunk reducer, cached by configuration.
+
+    Returns a jitted ``fn(ids[capacity] i32, powers[capacity] f32) ->
+    (counts, psum, psumsq)``; the pallas_call is built once per
+    (block_n, block_r, num_regions, interpret) and the jit cache is keyed
+    on the fixed chunk shape, so a streaming aggregator calling it per
+    block never re-traces.
+    """
+    @jax.jit
+    def run(region_ids, powers):
+        return sample_attr_pallas(region_ids.astype(jnp.int32),
+                                  powers.astype(jnp.float32), num_regions,
+                                  block_n=block_n, block_r=block_r,
+                                  interpret=interpret)
+    return run
+
+
+def chunked_aggregate_fn(chunk_capacity: int = 16 * DEFAULT_BLOCK_N, *,
+                         block_n: int = DEFAULT_BLOCK_N,
+                         block_r: int | None = None,
+                         interpret: bool | None = None):
+    """AggregateFn for ``StreamingAggregator``: fixed-capacity Pallas chunks.
+
+    Chunks (≤ ``chunk_capacity`` samples) are padded host-side with
+    region_id = -1 (zero one-hot rows) to the fixed capacity, so every
+    update reuses one compiled kernel. Oversized chunks are folded in
+    capacity-sized slices.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    def agg(region_ids, powers, num_regions):
+        # Quantize the region axis to the next power of two (≥64) so a
+        # growing region space (streaming combination interning) hits at
+        # most O(log R) compiled kernels instead of one per distinct R.
+        num_regions = int(num_regions)
+        r_quant = max(64, 1 << (num_regions - 1).bit_length())
+        fn = sample_attr_chunk(block_n, block_r, r_quant, bool(interpret))
+        ids = np.asarray(region_ids, dtype=np.int32)
+        pw = np.asarray(powers, dtype=np.float32)
+        counts = np.zeros(num_regions, np.int64)
+        psum = np.zeros(num_regions, np.float64)
+        psumsq = np.zeros(num_regions, np.float64)
+        for lo in range(0, len(ids), chunk_capacity):
+            ids_c = ids[lo:lo + chunk_capacity]
+            pw_c = pw[lo:lo + chunk_capacity]
+            pad = chunk_capacity - len(ids_c)
+            if pad:
+                ids_c = np.concatenate([ids_c, np.full(pad, -1, np.int32)])
+                pw_c = np.concatenate([pw_c, np.zeros(pad, np.float32)])
+            c, s, sq = fn(ids_c, pw_c)
+            counts += np.asarray(c).astype(np.int64)[:num_regions]
+            psum += np.asarray(s, np.float64)[:num_regions]
+            psumsq += np.asarray(sq, np.float64)[:num_regions]
+        return counts, psum, psumsq
     return agg

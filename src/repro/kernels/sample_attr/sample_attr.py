@@ -7,10 +7,15 @@ statistics become MXU matmuls:
 
     counts += 1ᵀ · onehot      psum += powᵀ · onehot      psumsq += (pow²)ᵀ · onehot
 
-Grid: one dimension over sample blocks. The [R]-sized accumulators live in
-the output blocks (same block every step → VMEM-resident); sample blocks
-stream HBM→VMEM. Block size 1024 samples × R≤2048 regions keeps the
-one-hot (1024×2048×4B = 8 MB) within VMEM.
+Grid: (region tiles, sample blocks), sample axis innermost. Each region
+tile's [block_r] accumulators live in the output blocks (same block across
+the whole inner sweep → VMEM-resident); sample blocks stream HBM→VMEM.
+The region axis is tiled so num_regions is unbounded: R > 2048 (e.g. the
+10⁴–10⁵ multi-worker combination space) no longer overflows VMEM — the
+default 1024×2048 one-hot tile (1024×2048×4B = 8 MB) is the VMEM budget
+regardless of R. Samples are re-streamed once per region tile; the
+region-tile loop is the classic reduction-tiling tradeoff (R/block_r ×
+sample traffic for O(block_r) on-chip state).
 """
 
 from __future__ import annotations
@@ -22,11 +27,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK_N = 1024
+DEFAULT_BLOCK_R = 2048
 
 
 def _kernel(ids_ref, pow_ref, counts_ref, psum_ref, psumsq_ref, *,
-            num_regions: int):
-    i = pl.program_id(0)
+            block_r: int):
+    j = pl.program_id(0)   # region tile (outer)
+    i = pl.program_id(1)   # sample block (inner; accumulators stay resident)
 
     @pl.when(i == 0)
     def _init():
@@ -36,10 +43,11 @@ def _kernel(ids_ref, pow_ref, counts_ref, psum_ref, psumsq_ref, *,
 
     ids = ids_ref[...]                                  # [bn] int32
     pw = pow_ref[...].astype(jnp.float32)               # [bn]
-    # One-hot via broadcasted iota compare (2D iota: TPU-legal).
-    iota = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], num_regions), 1)
-    onehot = (ids[:, None] == iota).astype(jnp.float32)  # [bn, R]
-    # Padded samples carry region_id = -1 → all-zero one-hot rows.
+    # Tile-local one-hot via broadcasted iota compare (2D iota: TPU-legal).
+    # Ids outside this tile (and -1 padding) match no column → zero rows.
+    local = ids - j * block_r
+    iota = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], block_r), 1)
+    onehot = (local[:, None] == iota).astype(jnp.float32)  # [bn, block_r]
     counts_ref[...] += jnp.sum(onehot, axis=0)
     psum_ref[...] += pw @ onehot
     psumsq_ref[...] += (pw * pw) @ onehot
@@ -47,24 +55,39 @@ def _kernel(ids_ref, pow_ref, counts_ref, psum_ref, psumsq_ref, *,
 
 def sample_attr_pallas(region_ids: jnp.ndarray, powers: jnp.ndarray,
                        num_regions: int, *, block_n: int = DEFAULT_BLOCK_N,
+                       block_r: int | None = None,
                        interpret: bool = False):
-    """region_ids: [n] int32 (pad with -1); powers: [n] f32."""
+    """region_ids: [n] int32 (pad with -1); powers: [n] f32.
+
+    ``block_r`` tiles the region axis (default: min(num_regions, 2048));
+    any ``num_regions`` is supported — the region space is padded up to a
+    multiple of ``block_r`` and the outputs sliced back.
+    """
+    if block_r is None:
+        block_r = min(num_regions, DEFAULT_BLOCK_R)
     n = region_ids.shape[0]
     n_pad = (block_n - n % block_n) % block_n
     if n_pad:
         region_ids = jnp.concatenate(
             [region_ids, jnp.full((n_pad,), -1, region_ids.dtype)])
         powers = jnp.concatenate([powers, jnp.zeros((n_pad,), powers.dtype)])
-    grid = (region_ids.shape[0] // block_n,)
+    r_pad = (block_r - num_regions % block_r) % block_r
+    num_r_padded = num_regions + r_pad
+    grid = (num_r_padded // block_r, region_ids.shape[0] // block_n)
 
-    out_shape = [jax.ShapeDtypeStruct((num_regions,), jnp.float32)] * 3
-    out_specs = [pl.BlockSpec((num_regions,), lambda i: (0,))] * 3
-    return pl.pallas_call(
-        functools.partial(_kernel, num_regions=num_regions),
+    out_shape = [jax.ShapeDtypeStruct((num_r_padded,), jnp.float32)] * 3
+    out_specs = [pl.BlockSpec((block_r,), lambda j, i: (j,))] * 3
+    counts, psum, psumsq = pl.pallas_call(
+        functools.partial(_kernel, block_r=block_r),
         grid=grid,
-        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,)),
-                  pl.BlockSpec((block_n,), lambda i: (i,))],
+        in_specs=[pl.BlockSpec((block_n,), lambda j, i: (i,)),
+                  pl.BlockSpec((block_n,), lambda j, i: (i,))],
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
     )(region_ids, powers.astype(jnp.float32))
+    if r_pad:
+        counts = counts[:num_regions]
+        psum = psum[:num_regions]
+        psumsq = psumsq[:num_regions]
+    return counts, psum, psumsq

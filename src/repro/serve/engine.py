@@ -4,11 +4,16 @@ host scheduler (slot-based, vLLM-lite).
 The device side is two pure functions (prefill fills a slot's cache pages;
 decode advances every active slot one token). The host side packs requests
 into fixed slots so the decode step shape stays static (no recompiles).
-ALEA regions wrap both so serving energy is attributable per phase.
+ALEA regions wrap both so serving energy is attributable per phase:
+attach a :class:`PhaseEnergyAccountant` and the engine drains the host
+sampler's ring buffer into a StreamingAggregator after every scheduler
+step — a serving run of any length holds O(R + drain chunk) profiling
+state, never the full sample stream.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Callable
 
@@ -17,9 +22,64 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import regions as regions_mod
+from repro.core.estimator import EstimateSet
+from repro.core.sampler import HostSampler, RegionMarker
+from repro.core.sensors import available_host_sensor
+from repro.core.streaming import StreamingAggregator
 from repro.models import model as M
 
-__all__ = ["ServeConfig", "Request", "Engine"]
+__all__ = ["ServeConfig", "Request", "Engine", "PhaseEnergyAccountant"]
+
+
+class PhaseEnergyAccountant:
+    """Constant-memory per-phase energy accounting for serving runs.
+
+    Owns the §4.8 control thread (RegionMarker + HostSampler) and a
+    :class:`StreamingAggregator`; callers (the Engine) periodically call
+    :meth:`drain` to fold newly collected samples into the per-region
+    sufficient statistics and discard them. Region ids come from the
+    process-wide registry, so the accumulators grow only with the number
+    of distinct phases, not with run length.
+    """
+
+    def __init__(self, *, period: float = 2e-3, jitter: float = 1e-4,
+                 seed: int = 0, sensor=None):
+        self.marker = RegionMarker()
+        self.sampler = HostSampler(self.marker,
+                                   sensor or available_host_sensor(),
+                                   period=period, jitter=jitter, seed=seed)
+        self.agg = StreamingAggregator(len(regions_mod.registry.names))
+        self._ctx: contextlib.ExitStack | None = None
+
+    def __enter__(self) -> "PhaseEnergyAccountant":
+        self._ctx = contextlib.ExitStack()
+        self._ctx.enter_context(regions_mod.profiling_session(self.marker))
+        self._ctx.enter_context(self.sampler)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        assert self._ctx is not None
+        self._ctx.close()
+        self._ctx = None
+        self.drain()
+
+    def drain(self) -> int:
+        """Fold samples collected since the last drain; returns the count."""
+        rids, pows = self.sampler.drain()
+        if len(rids):
+            names = regions_mod.registry.names
+            if len(names) > self.agg.num_regions:
+                self.agg.grow(len(names))
+            self.agg.update(rids, pows)
+        return len(rids)
+
+    def estimates(self, alpha: float = 0.05) -> EstimateSet:
+        """Per-phase estimates over everything drained so far."""
+        if self.agg.n_total == 0:
+            raise RuntimeError("no samples collected")
+        return self.agg.estimates(self.sampler.elapsed,
+                                  regions_mod.registry.names, alpha=alpha)
 
 
 @dataclasses.dataclass
@@ -43,10 +103,12 @@ class Engine:
     """Slot-based continuous batching over the pure decode step."""
 
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig,
-                 *, sample: Callable | None = None):
+                 *, sample: Callable | None = None,
+                 accountant: PhaseEnergyAccountant | None = None):
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
+        self.accountant = accountant
         B, T = serve_cfg.max_batch, serve_cfg.max_len
         dt = jnp.bfloat16 if serve_cfg.cache_dtype == "bfloat16" else jnp.float32
         self.cache = M.init_cache(cfg, B, T, dtype=dt)
@@ -79,11 +141,12 @@ class Engine:
         self.slot_req[s] = req
         # Prefill via teacher-forced decode steps on this slot (host loop;
         # fine at example scale).
-        for t, tok in enumerate(req.prompt):
-            self.tokens[s, 0] = tok
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(self.tokens), self.cache,
-                jnp.int32(t))
+        with regions_mod.region("serve/prefill"):
+            for t, tok in enumerate(req.prompt):
+                self.tokens[s, 0] = tok
+                logits, self.cache = self._decode(
+                    self.params, jnp.asarray(self.tokens), self.cache,
+                    jnp.int32(t))
         self.slot_len[s] = len(req.prompt)
         self.tokens[s, 0] = int(np.asarray(
             self.sample(logits[s:s + 1, -1, :]))[0])
@@ -95,9 +158,10 @@ class Engine:
         if not active:
             return []
         cur = int(self.slot_len.max())
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(self.tokens), self.cache,
-            jnp.int32(cur))
+        with regions_mod.region("serve/decode"):
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(self.tokens), self.cache,
+                jnp.int32(cur))
         nxt = np.asarray(self.sample(logits[:, -1, :]))
         finished = []
         for s in active:
@@ -122,6 +186,10 @@ class Engine:
             while pending and self._free_slots():
                 self.add_request(pending.pop(0))
             done += self.step()
+            if self.accountant is not None:
+                # Fold freshly sampled (phase, power) pairs into the
+                # streaming accumulators; the raw stream never accumulates.
+                self.accountant.drain()
             if not pending and all(r is None for r in self.slot_req):
                 break
         return done

@@ -1,0 +1,296 @@
+"""Streaming aggregation layer: chunked == one-shot, merge associativity,
+incremental combination interning, region-tiled Pallas kernel, and the
+profiler/serve streaming wiring."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.estimator import (aggregate_samples_np, encode_combinations,
+                                  estimate_combinations, estimate_regions,
+                                  estimates_from_statistics)
+from repro.core.profiler import EnergyProfiler
+from repro.core.streaming import (CombinationInterner, StreamingAggregator,
+                                  StreamingCombinationAggregator,
+                                  stream_estimate)
+from repro.core.timeline import RegionCost, ground_truth, synthesize
+
+
+def _stream(n=20000, R=37, seed=0, int_powers=False):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, R, n).astype(np.int32)
+    if int_powers:
+        pows = rng.integers(0, 200, n).astype(np.float64)
+    else:
+        pows = 50.0 + 150.0 * rng.random(n)
+    return ids, pows
+
+
+# ---------------------------------------------------------------------------
+# StreamingAggregator
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [1, 7, 1000, 4096, 10**9])
+def test_chunked_matches_oneshot_exact(chunk):
+    """Integer-valued powers: chunked accumulation is bit-exact (all
+    partial sums representable), so counts/Σpow/Σpow² match to the ULP."""
+    ids, pows = _stream(5000, 37, int_powers=True)
+    ref = aggregate_samples_np(ids, pows, 37)
+    agg = StreamingAggregator(37)
+    for lo in range(0, len(ids), chunk):
+        agg.update(ids[lo:lo + chunk], pows[lo:lo + chunk])
+    for got, want in zip(agg.statistics(), ref):
+        np.testing.assert_array_equal(got, want)
+    assert agg.n_total == 5000
+
+
+def test_chunked_matches_oneshot_float():
+    ids, pows = _stream(30000, 64, seed=3)
+    ref = aggregate_samples_np(ids, pows, 64)
+    agg = StreamingAggregator(64)
+    agg.update_stream((ids[lo:lo + 999], pows[lo:lo + 999])
+                      for lo in range(0, len(ids), 999))
+    counts, psum, psumsq = agg.statistics()
+    np.testing.assert_array_equal(counts, ref[0])
+    np.testing.assert_allclose(psum, ref[1], rtol=1e-12)
+    np.testing.assert_allclose(psumsq, ref[2], rtol=1e-12)
+
+
+def test_merge_associative_across_shards():
+    ids, pows = _stream(9000, 16, int_powers=True)
+    ref = aggregate_samples_np(ids, pows, 16)
+    cuts = [(0, 2500), (2500, 6000), (6000, 9000)]
+    shards = [StreamingAggregator(16).update(ids[a:b], pows[a:b])
+              for a, b in cuts]
+
+    left = StreamingAggregator(16)
+    left.merge(shards[0]).merge(shards[1]).merge(shards[2])
+    right = StreamingAggregator(16)
+    right.merge(shards[2]).merge(shards[0]).merge(shards[1])
+    for l, r, w in zip(left.statistics(), right.statistics(), ref):
+        np.testing.assert_array_equal(l, r)
+        np.testing.assert_array_equal(l, w)
+
+
+def test_merge_grows_region_space():
+    a = StreamingAggregator(4).update([0, 3], [1.0, 2.0])
+    b = StreamingAggregator(8).update([7], [5.0])
+    a.merge(b)
+    assert a.num_regions == 8
+    assert a.counts[7] == 1 and a.counts[0] == 1
+    with pytest.raises(ValueError):
+        a.grow(2)
+
+
+def test_streaming_estimates_equal_oneshot():
+    ids, pows = _stream(12000, 8, seed=9)
+    names = [f"r{i}" for i in range(8)]
+    est_one = estimate_regions(ids, pows, 6.0, names)
+    est_stream = stream_estimate(
+        ((ids[lo:lo + 1024], pows[lo:lo + 1024])
+         for lo in range(0, len(ids), 1024)), 6.0, names)
+    assert est_stream.n_total == est_one.n_total
+    for a, b in zip(est_stream.regions, est_one.regions):
+        assert a.n_samples == b.n_samples
+        assert a.e_hat == pytest.approx(b.e_hat, rel=1e-12)
+        assert a.t_lo == pytest.approx(b.t_lo, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Combination interning
+# ---------------------------------------------------------------------------
+
+def test_interner_matches_np_unique_ordering_independently():
+    rng = np.random.default_rng(7)
+    mat = rng.integers(0, 4, (6000, 3))
+    one_ids, one_combos = encode_combinations(mat)
+
+    interner = CombinationInterner()
+    parts = [interner.encode(mat[lo:lo + 1111])
+             for lo in range(0, len(mat), 1111)]
+    s_ids = np.concatenate(parts)
+    s_combos = interner.combos
+
+    # Same combination set; every sample maps to the same tuple.
+    assert set(s_combos) == set(one_combos)
+    for i in range(0, len(mat), 517):
+        assert s_combos[s_ids[i]] == one_combos[one_ids[i]] == tuple(mat[i])
+    # Id spaces are consistent bijections of each other.
+    remap = {}
+    for sid, oid in zip(s_ids, one_ids):
+        assert remap.setdefault(int(sid), int(oid)) == int(oid)
+
+
+def test_interner_rejects_width_change():
+    interner = CombinationInterner()
+    interner.encode(np.zeros((4, 2), np.int64))
+    with pytest.raises(ValueError):
+        interner.encode(np.zeros((4, 3), np.int64))
+
+
+def test_streaming_combinations_equal_oneshot():
+    rng = np.random.default_rng(11)
+    mat = rng.integers(0, 3, (8000, 2))
+    pows = rng.integers(40, 120, 8000).astype(np.float64)
+    names = ["a", "b", "c"]
+    est_one, combos_one = estimate_combinations(mat, pows, 12.0, names)
+
+    agg = StreamingCombinationAggregator()
+    agg.update_stream((mat[lo:lo + 700], pows[lo:lo + 700])
+                      for lo in range(0, len(mat), 700))
+    est_s, combos_s = agg.estimates(12.0, names)
+    assert set(combos_s) == set(combos_one)
+    by_s, by_one = est_s.by_name(), est_one.by_name()
+    assert set(by_s) == set(by_one)
+    for k in by_s:
+        assert by_s[k].n_samples == by_one[k].n_samples
+        assert by_s[k].e_hat == pytest.approx(by_one[k].e_hat, rel=1e-12)
+
+
+def test_streaming_combination_merge():
+    rng = np.random.default_rng(13)
+    mat = rng.integers(0, 3, (6000, 2))
+    pows = rng.integers(40, 120, 6000).astype(np.float64)
+    whole = StreamingCombinationAggregator().update(mat, pows)
+    sharded = StreamingCombinationAggregator()
+    for a, b in [(0, 1500), (1500, 4000), (4000, 6000)]:
+        sharded.merge(
+            StreamingCombinationAggregator().update(mat[a:b], pows[a:b]))
+    est_w, _ = whole.estimates(5.0, ["a", "b", "c"])
+    est_s, _ = sharded.estimates(5.0, ["a", "b", "c"])
+    by_w, by_s = est_w.by_name(), est_s.by_name()
+    assert set(by_w) == set(by_s)
+    for k in by_w:
+        assert by_w[k].n_samples == by_s[k].n_samples
+        assert by_w[k].e_hat == pytest.approx(by_s[k].e_hat, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Region-tiled Pallas kernel (interpret mode)
+# ---------------------------------------------------------------------------
+
+def test_pallas_region_tiled_r8192_exact():
+    """R > 2048 exercises the region-tile grid axis; integer powers at
+    f32-exact magnitudes make the comparison bit-exact."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels.sample_attr.sample_attr import sample_attr_pallas
+    rng = np.random.default_rng(17)
+    n, R = 4096 + 33, 8192
+    ids = rng.integers(0, R, n).astype(np.int32)
+    pows = rng.integers(0, 100, n).astype(np.float32)
+    c, s, sq = sample_attr_pallas(jnp.asarray(ids), jnp.asarray(pows), R,
+                                  interpret=True)
+    cr, sr, sqr = aggregate_samples_np(ids, pows.astype(np.float64), R)
+    np.testing.assert_array_equal(np.asarray(c, np.int64), cr)
+    np.testing.assert_array_equal(np.asarray(s, np.float64), sr)
+    np.testing.assert_array_equal(np.asarray(sq, np.float64), sqr)
+
+
+@pytest.mark.parametrize("R,block_r", [(2500, 1024), (130, 64), (8192, 4096)])
+def test_pallas_region_tiling_padding(R, block_r):
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels.sample_attr.sample_attr import sample_attr_pallas
+    rng = np.random.default_rng(R)
+    ids = rng.integers(0, R, 3000).astype(np.int32)
+    pows = rng.integers(0, 50, 3000).astype(np.float32)
+    c, s, sq = sample_attr_pallas(jnp.asarray(ids), jnp.asarray(pows), R,
+                                  block_r=block_r, interpret=True)
+    assert c.shape == (R,)
+    cr, sr, sqr = aggregate_samples_np(ids, pows.astype(np.float64), R)
+    np.testing.assert_array_equal(np.asarray(c, np.int64), cr)
+    np.testing.assert_array_equal(np.asarray(s, np.float64), sr)
+    np.testing.assert_array_equal(np.asarray(sq, np.float64), sqr)
+
+
+def test_streaming_with_pallas_chunked_aggregate_fn():
+    from repro.kernels.sample_attr.ops import chunked_aggregate_fn
+    ids, pows = _stream(5000, 100, int_powers=True)
+    ref = aggregate_samples_np(ids, pows, 100)
+    agg = StreamingAggregator(
+        100, aggregate_fn=chunked_aggregate_fn(2048, interpret=True))
+    for lo in range(0, len(ids), 1700):
+        agg.update(ids[lo:lo + 1700], pows[lo:lo + 1700])
+    for got, want in zip(agg.statistics(), ref):
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Columnar EstimateTable
+# ---------------------------------------------------------------------------
+
+def test_estimate_table_lazy_rows_match_columns():
+    ids, pows = _stream(4000, 6, seed=21)
+    names = [f"r{i}" for i in range(6)]
+    est = estimate_regions(ids, pows, 3.0, names)
+    tab = est.table
+    assert len(tab) == len(est.regions)
+    for i, r in enumerate(est.regions):
+        assert r.region_id == int(tab.region_ids[i])
+        assert r.e_hat == float(tab.e_hat[i])
+        assert r.ci_valid == bool(tab.ci_valid[i])
+    assert est.total_energy == pytest.approx(sum(r.e_hat for r in est.regions))
+    assert est.dominant(2)[0].e_hat == max(r.e_hat for r in est.regions)
+
+
+def test_estimates_from_statistics_roundtrip():
+    ids, pows = _stream(4000, 6, seed=22)
+    names = [f"r{i}" for i in range(6)]
+    counts, psum, psumsq = aggregate_samples_np(ids, pows, 6)
+    est_a = estimates_from_statistics(counts, psum, psumsq, 3.0, names)
+    est_b = estimate_regions(ids, pows, 3.0, names)
+    for a, b in zip(est_a.regions, est_b.regions):
+        assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Profiler / serve wiring
+# ---------------------------------------------------------------------------
+
+def test_profile_timeline_streaming_accuracy():
+    costs = [RegionCost("attn", flops=4e11, hbm_bytes=1.5e10, invocations=8),
+             RegionCost("ffn", flops=9e11, hbm_bytes=2.5e10, invocations=8)]
+    tl = synthesize(costs, steps=150, seed=5)
+    prof = EnergyProfiler(period=10e-3, seed=6)
+    est = prof.profile_timeline_streaming(tl, sensor="rapl", chunk_size=512)
+    gt = ground_truth(tl)
+    for name, g in gt.items():
+        r = est.by_name()[name]
+        assert r.t_hat == pytest.approx(g["time"], rel=0.10)
+        assert r.e_hat == pytest.approx(g["energy"], rel=0.12)
+
+
+def test_profile_multiworker_streaming():
+    costs = [RegionCost("mem", flops=1e10, hbm_bytes=5e10, invocations=4),
+             RegionCost("alu", flops=6e11, hbm_bytes=2e9, invocations=4)]
+    tls = [synthesize(costs, steps=120, seed=s) for s in (0, 1)]
+    prof = EnergyProfiler(period=10e-3)
+    est, combos = prof.profile_multiworker_streaming(
+        tls, sensor="instant", chunk_size=256)
+    assert len(combos) >= 2
+    assert sum(r.t_hat for r in est.regions) == pytest.approx(
+        min(t.t_exec for t in tls), rel=1e-6)
+
+
+def test_phase_energy_accountant_streams_host_samples():
+    from repro.core import regions as regions_mod
+    from repro.serve.engine import PhaseEnergyAccountant
+
+    # Thresholds deliberately loose (cf. test_host_session_smoke): on a
+    # loaded host the control thread competes with the busy loop, which
+    # stretches sleeps — attribution stays correct, busy fraction drops.
+    acct = PhaseEnergyAccountant(period=1e-3, jitter=1e-4)
+    with acct:
+        for _ in range(120):
+            with regions_mod.region("serve/busy"):
+                t0 = time.monotonic()
+                while time.monotonic() - t0 < 2e-3:
+                    pass
+            acct.drain()   # engine-style periodic fold; stream stays small
+            with regions_mod.region("serve/idle"):
+                time.sleep(0.5e-3)
+    assert acct.agg.n_total >= 5
+    est = acct.estimates()
+    names = {r.name for r in est.regions}
+    assert "serve/busy" in names
+    assert est.by_name()["serve/busy"].p_hat > 0.1
