@@ -1,0 +1,118 @@
+"""Shard-exchange benchmarks (cross-host reduction tentpole).
+
+Merge throughput of the exchange paths as the fleet grows, at the
+multi-worker combination-table scale the estimator targets (10⁴ distinct
+combination rows per shard):
+
+* in-memory tree-reduce (``merge_table`` lazy interner dedup) vs shard
+  count S ∈ {2, 4, 8, 16} — the CPU cost every gather pays;
+* checkpointed round trip (``spill_shard`` × S + ``gather_shards``) —
+  adds manifest+CRC+atomic-rename I/O;
+* the packed wire format itself (``pack_shard``/``unpack_shard``).
+
+Emits the usual CSV rows plus ``BENCH_exchange.json`` next to this file
+so the trajectory is tracked across PRs. ``ALEA_BENCH_ROWS`` scales the
+per-shard combination count (default 10⁴).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import exchange as ex
+from repro.core.streaming import StreamingCombinationAggregator
+
+_JSON_PATH = pathlib.Path(__file__).with_name("BENCH_exchange.json")
+
+
+def _make_shards(n_shards: int, rows: int, seed: int = 0):
+    """Shards with ~``rows`` distinct combination rows each, overlapping
+    id spaces (the realistic dedup-heavy regime)."""
+    rng = np.random.default_rng(seed)
+    width = 2
+    R = max(int(np.sqrt(2 * rows)), 2)   # ~R²/2 distinct pairs observable
+    shards = []
+    for _ in range(n_shards):
+        mat = rng.integers(0, R, (2 * rows, width)).astype(np.int64)
+        pows = rng.integers(50 * 64, 200 * 64, 2 * rows) / 64.0
+        shards.append(StreamingCombinationAggregator().update(mat, pows))
+    return shards
+
+
+def _time_once(fn):
+    fn()                       # warmup
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def _tree_reduce(shards):
+    # Fresh aggregators so the timed merge never mutates the inputs;
+    # the reduction itself is the production gather path.
+    return ex.tree_reduce(
+        [StreamingCombinationAggregator().merge(s) for s in shards])
+
+
+def run(verbose: bool = True) -> list[str]:
+    rows_per_shard = int(os.environ.get("ALEA_BENCH_ROWS", 10_000))
+    rows: list[tuple[str, float, str]] = []
+    record: dict = {"rows_per_shard": rows_per_shard, "merge": {},
+                    "checkpointed": {}, "wire": {}}
+
+    for S in (2, 4, 8, 16):
+        shards = _make_shards(S, rows_per_shard, seed=S)
+        total_rows = sum(len(s.interner) for s in shards)
+
+        merged, dt = _time_once(lambda: _tree_reduce(shards))
+        union = len(merged.interner)
+        record["merge"][f"S{S}"] = {
+            "sec": dt, "union_rows": union, "input_rows": total_rows,
+            "rows_per_sec": total_rows / dt}
+        rows.append((f"exchange/tree_merge/S{S}", dt * 1e6,
+                     f"{total_rows / dt / 1e6:.2f} Mrows/s union={union}"))
+
+        d = tempfile.mkdtemp(prefix="bench_exchange_")
+        try:
+            def spill_gather():
+                for h, s in enumerate(shards):
+                    ex.spill_shard(d, h, epoch=1, agg=s)
+                return ex.gather_shards(d)
+            _, dt_ck = _time_once(spill_gather)
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+        record["checkpointed"][f"S{S}"] = {
+            "sec": dt_ck, "rows_per_sec": total_rows / dt_ck,
+            "vs_inmem": dt_ck / dt}
+        rows.append((f"exchange/spill_gather/S{S}", dt_ck * 1e6,
+                     f"{total_rows / dt_ck / 1e6:.2f} Mrows/s "
+                     f"{dt_ck / dt:.1f}x inmem"))
+
+    shard0 = _make_shards(1, rows_per_shard)[0]
+    _, dt_pack = _time_once(lambda: ex.pack_shard(shard0))
+    packed = ex.pack_shard(shard0)
+    _, dt_unpack = _time_once(lambda: ex.unpack_shard(packed))
+    record["wire"] = {"pack_sec": dt_pack, "unpack_sec": dt_unpack,
+                      "rows": len(shard0.interner)}
+    rows.append(("exchange/pack", dt_pack * 1e6,
+                 f"{len(shard0.interner)} rows"))
+    rows.append(("exchange/unpack", dt_unpack * 1e6,
+                 f"{len(shard0.interner)} rows"))
+
+    _JSON_PATH.write_text(json.dumps(record, indent=2))
+    if verbose:
+        for nm, us, d_ in rows:
+            print(f"{nm:40s} {us:12.1f}us {d_}")
+        print(f"wrote {_JSON_PATH}")
+    return [csv_row(nm, us, d_) for nm, us, d_ in rows]
+
+
+if __name__ == "__main__":
+    run()

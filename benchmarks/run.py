@@ -11,7 +11,7 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (aggregation, kernels, kmeans_hotspot,
+    from benchmarks import (aggregation, exchange, kernels, kmeans_hotspot,
                             memory_power, ocean_finegrain, sampling_period,
                             validation)
     mods = [
@@ -22,6 +22,7 @@ def main() -> None:
         ("ocean_finegrain (Table 3, §7.2)", ocean_finegrain),
         ("kernels (Pallas microbench)", kernels),
         ("aggregation (streaming engine)", aggregation),
+        ("exchange (cross-host shard reduction)", exchange),
     ]
     all_rows = ["name,us_per_call,derived"]
     for title, mod in mods:

@@ -14,22 +14,33 @@ are re-placed by pjit). Partial/corrupt checkpoints are never visible:
 readers only trust directories named in LATEST whose manifest CRCs check.
 Async mode snapshots device arrays to host then writes in a thread so the
 train loop continues (write-behind).
+
+The manifest+CRC+rename protocol is factored into reusable pieces
+(:func:`write_manifest_dir`, :func:`read_manifest_dir`,
+:func:`publish_latest`) so other durable artifacts — notably the
+per-host shard spills of :mod:`repro.core.exchange` — share the exact
+same atomicity and corruption-detection guarantees. Leaf CRCs are
+computed on the in-memory ``np.save`` bytes during the write (one I/O
+pass, not write-then-reread), and verified reads CRC the bytes they
+just loaded for the same reason.
 """
 
 from __future__ import annotations
 
+import io
 import json
 import os
 import shutil
 import threading
 import uuid
 import zlib
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer",
+           "write_manifest_dir", "read_manifest_dir", "publish_latest"]
 
 
 def _flatten(tree: Any):
@@ -37,19 +48,47 @@ def _flatten(tree: Any):
     return leaves, treedef
 
 
-def save(path: str, step: int, tree: Any) -> str:
-    """Blocking atomic save. Returns the final directory."""
-    leaves, treedef = _flatten(tree)
-    final = os.path.join(path, f"step_{step:09d}")
+def _write_leaf(dirpath: str, fname: str, arr: np.ndarray) -> int:
+    """Serialize one leaf to ``<dirpath>/<fname>``; returns its CRC32.
+
+    ``np.save`` targets an in-memory buffer so the CRC covers exactly the
+    bytes written without re-reading the file from disk.
+    """
+    buf = io.BytesIO()
+    np.save(buf, np.asarray(arr))
+    data = buf.getvalue()
+    with open(os.path.join(dirpath, fname), "wb") as f:
+        f.write(data)
+    return zlib.crc32(data)
+
+
+def _read_leaf(dirpath: str, meta: dict) -> np.ndarray:
+    """Load + CRC-verify one leaf described by a manifest entry."""
+    fp = os.path.join(dirpath, meta["file"])
+    with open(fp, "rb") as f:
+        data = f.read()
+    if zlib.crc32(data) != meta["crc32"]:
+        raise IOError(f"CRC mismatch in {fp} (corrupt checkpoint)")
+    return np.load(io.BytesIO(data))
+
+
+def write_manifest_dir(final: str, arrays: Sequence[np.ndarray],
+                       meta: dict | None = None) -> str:
+    """Atomically publish ``arrays`` + manifest under directory ``final``.
+
+    The shared protocol: write into ``<final>.tmp-<nonce>/``, fsync the
+    manifest, then atomically rename. A crashed writer leaves only a
+    ``.tmp-`` directory, which readers never look at. ``meta`` is merged
+    into the manifest (callers stash step numbers, treedefs, shard ids).
+    """
     tmp = final + f".tmp-{uuid.uuid4().hex[:8]}"
     os.makedirs(tmp, exist_ok=True)
-    manifest = {"step": step, "treedef": str(treedef), "leaves": []}
-    for i, leaf in enumerate(leaves):
+    manifest: dict = dict(meta or {})
+    manifest["leaves"] = []
+    for i, leaf in enumerate(arrays):
         arr = np.asarray(leaf)
         fname = f"arr_{i:05d}.npy"
-        np.save(os.path.join(tmp, fname), arr)
-        with open(os.path.join(tmp, fname), "rb") as f:
-            crc = zlib.crc32(f.read())
+        crc = _write_leaf(tmp, fname, arr)
         manifest["leaves"].append({
             "file": fname, "shape": list(arr.shape),
             "dtype": str(arr.dtype), "crc32": crc})
@@ -60,12 +99,34 @@ def save(path: str, step: int, tree: Any) -> str:
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    return final
+
+
+def read_manifest_dir(d: str) -> tuple[list[np.ndarray], dict]:
+    """Load (arrays, manifest) from a published dir, verifying every CRC."""
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = [_read_leaf(d, meta) for meta in manifest["leaves"]]
+    return arrays, manifest
+
+
+def publish_latest(path: str, step: int) -> None:
+    """Atomically point ``<path>/LATEST`` at ``step`` (fsynced tmp+rename)."""
     with open(os.path.join(path, "LATEST.tmp"), "w") as f:
         f.write(str(step))
         f.flush()
         os.fsync(f.fileno())
     os.replace(os.path.join(path, "LATEST.tmp"),
                os.path.join(path, "LATEST"))
+
+
+def save(path: str, step: int, tree: Any) -> str:
+    """Blocking atomic save. Returns the final directory."""
+    leaves, treedef = _flatten(tree)
+    final = os.path.join(path, f"step_{step:09d}")
+    write_manifest_dir(final, leaves,
+                       meta={"step": step, "treedef": str(treedef)})
+    publish_latest(path, step)
     return final
 
 
@@ -95,12 +156,7 @@ def restore(path: str, example_tree: Any, step: int | None = None) -> tuple[Any,
             f"{len(example_leaves)} (structure changed?)")
     out = []
     for meta, ex in zip(leaves_meta, example_leaves):
-        fp = os.path.join(d, meta["file"])
-        with open(fp, "rb") as f:
-            crc = zlib.crc32(f.read())
-        if crc != meta["crc32"]:
-            raise IOError(f"CRC mismatch in {fp} (corrupt checkpoint)")
-        arr = np.load(fp)
+        arr = _read_leaf(d, meta)
         if list(arr.shape) != list(np.shape(ex)):
             raise ValueError(
                 f"shape mismatch for {meta['file']}: {arr.shape} vs "

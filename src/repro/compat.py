@@ -1,0 +1,36 @@
+"""jax version-compat shims (0.4.x ↔ 0.5+).
+
+The repo targets the latest jax API surface; this module bridges the
+names that moved or were renamed so the same code runs on jax 0.4.37
+(the CI pin) and newer releases:
+
+* ``shard_map`` — top-level ``jax.shard_map`` only exists from 0.5;
+  before that it lives in ``jax.experimental.shard_map`` and spells the
+  replication check ``check_rep`` instead of ``check_vma``.
+
+Mesh-construction compat (``jax.sharding.AxisType`` / the ``axis_types=``
+kwarg of ``jax.make_mesh``) lives in :mod:`repro.launch.mesh` next to the
+mesh builders themselves.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on any supported jax version.
+
+    ``check_vma`` follows the modern spelling; it is forwarded as
+    ``check_rep`` to the 0.4.x experimental implementation (same
+    semantics: verify that ``out_specs`` replication is provable).
+    """
+    impl = getattr(jax, "shard_map", None)
+    if impl is not None:
+        return impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as impl_04
+    return impl_04(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma)

@@ -13,6 +13,10 @@ from repro.core.estimator import (AggregateFn, EstimateSet, EstimateTable,
                                   RegionEstimate, aggregate_samples_np,
                                   estimate_combinations, estimate_regions,
                                   estimates_from_statistics, z_quantile)
+from repro.core.exchange import (CheckpointExchange, CollectiveExchange,
+                                 PackedShard, collective_reduce,
+                                 gather_shards, pack_shard, restore_shard,
+                                 spill_shard, unpack_shard)
 from repro.core.power_model import (TPU_V5E, HardwareSpec, PowerModel,
                                     PowerModelParams)
 from repro.core.profiler import EnergyProfiler, HostSession
@@ -32,6 +36,9 @@ __all__ = [
     "AggregateFn", "EstimateSet", "EstimateTable", "RegionEstimate",
     "aggregate_samples_np", "estimate_combinations", "estimate_regions",
     "estimates_from_statistics", "z_quantile",
+    "CheckpointExchange", "CollectiveExchange", "PackedShard",
+    "collective_reduce", "gather_shards", "pack_shard", "restore_shard",
+    "spill_shard", "unpack_shard",
     "CombinationInterner", "StreamingAggregator",
     "StreamingCombinationAggregator", "stream_estimate",
     "TPU_V5E", "HardwareSpec", "PowerModel", "PowerModelParams",

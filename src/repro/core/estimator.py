@@ -363,6 +363,23 @@ def combination_names(combos: Sequence[tuple[int, ...]],
             for c in combos]
 
 
+def combination_names_from_matrix(combo_matrix: np.ndarray,
+                                  names: Sequence[str]) -> list[str]:
+    """Human names for a serialized combination key table [k, workers].
+
+    The exchange wire format (:mod:`repro.core.exchange`) carries
+    combination id spaces as int64 matrices rather than tuple lists; a
+    merged table is named directly from the matrix so finalization never
+    reconstructs Python tuples.
+    """
+    mat = np.asarray(combo_matrix)
+    if mat.ndim != 2:
+        raise ValueError(f"expected [k, workers]; got shape {mat.shape}")
+    n_names = len(names)
+    return ["+".join(names[r] if r < n_names else f"r{r}" for r in row)
+            for row in mat.tolist()]
+
+
 def estimate_combinations(region_id_matrix: np.ndarray, powers: np.ndarray,
                           t_exec: float, names: Sequence[str],
                           *, alpha: float = 0.05) -> tuple[EstimateSet, list[tuple[int, ...]]]:

@@ -1,0 +1,468 @@
+"""Cross-host shard exchange for the streaming aggregation engine.
+
+ALEA's estimator is multi-worker by design (§4.4): per-region sample
+shards collected on each host must be reduced into one set of sufficient
+statistics (counts, Σpow, Σpow²) — and, for combination attribution, one
+deduplicated combination id space — before confidence intervals are
+valid. :mod:`repro.core.streaming` gives the in-process ``merge()``; this
+module moves it across hosts, two ways:
+
+* **Collective path** — :func:`collective_reduce`. Each host serializes
+  its aggregator into fixed-shape arrays (:func:`pack_shard`) and the
+  statistics are all-reduced via ``jax.lax.psum`` over a 1-D mesh axis
+  (``launch.mesh.make_exchange_mesh``). Combination shards cannot be
+  summed (ids are host-local), so their key tables + statistics are
+  ``all_gather``-ed instead and every host folds the same ordered union
+  merge — deterministic and identical on all hosts. Interpret-friendly:
+  runs eagerly under ``shard_map`` on CPU test meshes.
+
+* **Checkpointed path** — :func:`spill_shard` / :func:`gather_shards`.
+  Each host atomically spills its shard using the manifest+CRC+rename
+  protocol of :mod:`repro.checkpoint.ckpt` (``write_manifest_dir``), so
+  hosts can die and rejoin: a crashed spill leaves only an ignored
+  ``.tmp-`` directory, a restarted host resumes from its own LATEST
+  (:func:`restore_shard`), and the reader merges whatever shards are
+  published. Restore is a left-to-right binary reduction tree::
+
+      host_0   host_1   host_2   host_3     (published shards, id order)
+         \\       /         \\       /
+          m_01               m_23           round 1: pairwise merge()
+              \\             /
+               \\           /
+                m_0123                      round 2 → merged aggregator
+
+  ``merge`` appends a shard's unseen combination rows in the shard's
+  local first-appearance order, so *any* order-preserving tree assigns
+  the same union ids as a single aggregator fed the concatenated stream
+  — id assignment is reduction-shape independent.
+
+Shard manifest schema (see ROADMAP "exchange formats"): arrays
+``counts`` int64[cap], ``psum``/``psumsq`` float64[cap] and, for
+combination shards, ``combos`` int64[cap, width]; manifest ``meta`` keys
+``kind`` ("region"|"combination"), ``host_id``, ``epoch``, ``n_rows``
+(valid prefix — rows past it are padding for fixed-shape collectives).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from typing import Sequence
+
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core.estimator import AggregateFn
+from repro.core.streaming import (StreamingAggregator,
+                                  StreamingCombinationAggregator)
+
+__all__ = [
+    "PackedShard", "pack_shard", "unpack_shard",
+    "collective_reduce", "spill_shard", "restore_shard",
+    "read_shard_meta", "gather_shards", "list_spilled_hosts",
+    "tree_reduce", "CollectiveExchange", "CheckpointExchange",
+]
+
+# \d+ not \d{4}: the :04d dir format zero-pads but never truncates, so
+# host ids >= 10000 still publish (and must still gather).
+_HOST_DIR_RE = re.compile(r"^host_(\d+)$")
+
+KIND_REGION = "region"
+KIND_COMBINATION = "combination"
+
+
+# -- wire format ---------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PackedShard:
+    """One host's aggregator state as fixed-shape arrays.
+
+    ``n_rows`` is the valid prefix; rows past it are zero padding so
+    shards from hosts with different region/combination counts still
+    stack into one mesh-reducible array. ``combos`` is the host-local
+    combination key table (None for plain region shards) — receivers
+    dedupe it lazily at merge via ``CombinationInterner.intern_rows``.
+    """
+
+    counts: np.ndarray            # int64 [cap]
+    psum: np.ndarray              # float64 [cap]
+    psumsq: np.ndarray            # float64 [cap]
+    n_rows: int
+    combos: np.ndarray | None = None   # int64 [cap, width] or None
+
+    @property
+    def kind(self) -> str:
+        return KIND_REGION if self.combos is None else KIND_COMBINATION
+
+    @property
+    def capacity(self) -> int:
+        return len(self.counts)
+
+
+def _pad(arr: np.ndarray, cap: int) -> np.ndarray:
+    if len(arr) > cap:
+        raise ValueError(f"shard has {len(arr)} rows > capacity {cap}")
+    if len(arr) == cap:
+        return arr
+    pad = [(0, cap - len(arr))] + [(0, 0)] * (arr.ndim - 1)
+    return np.pad(arr, pad)
+
+
+def pack_shard(agg: StreamingAggregator | StreamingCombinationAggregator,
+               capacity: int | None = None) -> PackedShard:
+    """Serialize an aggregator into a :class:`PackedShard`.
+
+    ``capacity`` pads the row dimension to a fixed size; collectives need
+    every participating host to pass the same value.
+    """
+    if isinstance(agg, StreamingCombinationAggregator):
+        combos = agg.interner.combo_matrix()
+        n_rows = len(combos)
+        cap = n_rows if capacity is None else capacity
+        return PackedShard(
+            counts=_pad(agg.agg.counts[:n_rows], cap),
+            psum=_pad(agg.agg.psum[:n_rows], cap),
+            psumsq=_pad(agg.agg.psumsq[:n_rows], cap),
+            n_rows=n_rows, combos=_pad(combos, cap))
+    n_rows = agg.num_regions
+    cap = n_rows if capacity is None else capacity
+    return PackedShard(counts=_pad(agg.counts, cap),
+                       psum=_pad(agg.psum, cap),
+                       psumsq=_pad(agg.psumsq, cap), n_rows=n_rows)
+
+
+def unpack_shard(shard: PackedShard, *,
+                 aggregate_fn: AggregateFn | None = None
+                 ) -> StreamingAggregator | StreamingCombinationAggregator:
+    """Reconstruct a live aggregator from a packed shard."""
+    k = shard.n_rows
+    if shard.combos is None:
+        agg = StreamingAggregator(k, aggregate_fn=aggregate_fn)
+        agg.counts += np.asarray(shard.counts[:k], np.int64)
+        agg.psum += np.asarray(shard.psum[:k], np.float64)
+        agg.psumsq += np.asarray(shard.psumsq[:k], np.float64)
+        return agg
+    cagg = StreamingCombinationAggregator(aggregate_fn=aggregate_fn)
+    cagg.merge_table(shard.combos[:k], shard.counts[:k],
+                     shard.psum[:k], shard.psumsq[:k])
+    return cagg
+
+
+def _merge_shard_into(agg, shard: PackedShard):
+    """Fold a packed shard into a live aggregator (kinds must match)."""
+    k = shard.n_rows
+    if isinstance(agg, StreamingCombinationAggregator):
+        if shard.combos is None:
+            raise ValueError("cannot merge a region shard into a "
+                             "combination aggregator")
+        return agg.merge_table(shard.combos[:k], shard.counts[:k],
+                               shard.psum[:k], shard.psumsq[:k])
+    if shard.combos is not None:
+        raise ValueError("cannot merge a combination shard into a region "
+                         "aggregator")
+    other = unpack_shard(shard)
+    return agg.merge(other)
+
+
+# -- collective path -----------------------------------------------------------
+
+def _stack_global(mesh, axis: str, rows: Sequence[np.ndarray]):
+    """Stack per-position rows into the [H, ...] global array for a mesh.
+
+    Single-process (CI): plain np.stack — ``rows`` holds every position.
+    Multi-process (production): each process passes only its local row(s)
+    and the global array is assembled from process-local data.
+    """
+    import jax
+    stacked = np.stack(rows)
+    if jax.process_count() == 1:
+        return stacked
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sharding = NamedSharding(mesh, P(axis))
+    return jax.make_array_from_process_local_data(sharding, stacked)
+
+
+def collective_reduce(shards: Sequence[StreamingAggregator |
+                                       StreamingCombinationAggregator],
+                      *, mesh=None, axis: str = "hosts",
+                      capacity: int | None = None, width: int | None = None,
+                      aggregate_fn: AggregateFn | None = None):
+    """All-reduce aggregator shards over a mesh axis; returns the merge.
+
+    ``shards`` holds one aggregator per position of the mesh axis this
+    process owns — in production each host passes ``[its local shard]``
+    against a multi-host mesh; in single-process tests pass all H shards
+    against an H-device mesh. Plain region shards reduce with one
+    ``lax.psum``; combination shards ``all_gather`` (tables are
+    host-local id spaces, not summable) and every host folds the same
+    ordered union merge, so results are identical everywhere.
+    """
+    import jax
+    from jax.experimental import enable_x64
+    from jax.sharding import PartitionSpec as P
+    from functools import partial
+
+    from repro.compat import shard_map
+    from repro.launch.mesh import make_exchange_mesh
+
+    if not shards:
+        raise ValueError("no shards to reduce")
+    if mesh is None:
+        mesh = make_exchange_mesh(len(shards), axis=axis)
+    n_hosts = mesh.shape[axis]
+    if capacity is None:
+        if isinstance(shards[0], StreamingCombinationAggregator):
+            capacity = max(len(s.interner) for s in shards)
+        else:
+            capacity = max(s.num_regions for s in shards)
+    packed = [pack_shard(s, capacity) for s in shards]
+    kinds = {p.kind for p in packed}
+    if len(kinds) != 1:
+        raise ValueError(f"mixed shard kinds: {sorted(kinds)}")
+    if KIND_COMBINATION in kinds:
+        # A host that saw no traffic has a width-0 key table; its combos
+        # must still stack to the fleet's fixed [cap, width] shape (its
+        # n_rows=0 keeps the zero rows out of the merge). Multi-process
+        # fleets pass ``width`` explicitly (worker count is static).
+        widths = {p.combos.shape[1] for p in packed if p.combos.shape[1]}
+        if width is not None:
+            widths.add(width)
+        if len(widths) > 1:
+            raise ValueError(f"worker-count mismatch across shards: "
+                             f"{sorted(widths)}")
+        w = widths.pop() if widths else 0
+        packed = [p if p.combos.shape[1] == w else dataclasses.replace(
+                      p, combos=np.zeros((p.capacity, w), np.int64))
+                  for p in packed]
+    smap = partial(shard_map, mesh=mesh, in_specs=P(axis), out_specs=P(),
+                   check_vma=False)
+
+    # jax's default 32-bit mode would truncate int64 counts and round
+    # float64 sums; the exchange is bit-exact only under x64.
+    with enable_x64():
+        if KIND_REGION in kinds:
+            counts = _stack_global(mesh, axis, [p.counts for p in packed])
+            psum = _stack_global(mesh, axis, [p.psum for p in packed])
+            psumsq = _stack_global(mesh, axis, [p.psumsq for p in packed])
+
+            def _allreduce(c, s, q):
+                return (jax.lax.psum(c, axis).sum(0),
+                        jax.lax.psum(s, axis).sum(0),
+                        jax.lax.psum(q, axis).sum(0))
+
+            c, s, q = smap(_allreduce)(counts, psum, psumsq)
+            # Remote hosts may populate rows past any local shard's
+            # n_rows; the merged statistics span the full capacity.
+            return unpack_shard(
+                PackedShard(counts=np.asarray(c), psum=np.asarray(s),
+                            psumsq=np.asarray(q), n_rows=capacity),
+                aggregate_fn=aggregate_fn)
+
+        combos = _stack_global(mesh, axis, [p.combos for p in packed])
+        counts = _stack_global(mesh, axis, [p.counts for p in packed])
+        psum = _stack_global(mesh, axis, [p.psum for p in packed])
+        psumsq = _stack_global(mesh, axis, [p.psumsq for p in packed])
+        n_rows = _stack_global(
+            mesh, axis,
+            [np.asarray([p.n_rows], np.int64) for p in packed])
+
+        def _gather(*arrs):
+            return tuple(jax.lax.all_gather(a, axis, axis=0, tiled=True)
+                         for a in arrs)
+
+        g = smap(_gather)(combos, counts, psum, psumsq, n_rows)
+        g_combos, g_counts, g_psum, g_psumsq, g_rows = map(np.asarray, g)
+        merged = StreamingCombinationAggregator(aggregate_fn=aggregate_fn)
+        for h in range(n_hosts):
+            k = int(g_rows[h, 0])
+            merged.merge_table(g_combos[h, :k], g_counts[h, :k],
+                               g_psum[h, :k], g_psumsq[h, :k])
+        return merged
+
+
+# -- checkpointed path ---------------------------------------------------------
+
+def _host_dir(path: str, host_id: int) -> str:
+    return os.path.join(path, f"host_{host_id:04d}")
+
+
+def spill_shard(path: str, host_id: int, epoch: int,
+                agg: StreamingAggregator | StreamingCombinationAggregator,
+                *, extra_meta: dict | None = None) -> str:
+    """Atomically publish one host's shard at ``epoch``.
+
+    Reuses the checkpoint manifest+CRC+rename protocol: a shard is never
+    half-visible, and per-host ``LATEST`` is only advanced after the
+    epoch directory is durable. ``extra_meta`` (JSON-serializable) rides
+    along under the manifest's ``"extra"`` key — callers stash run-scope
+    state a restarted host needs (e.g. elapsed wall time). Returns the
+    published directory.
+    """
+    hd = _host_dir(path, host_id)
+    os.makedirs(hd, exist_ok=True)
+    shard = pack_shard(agg)
+    arrays = [shard.counts, shard.psum, shard.psumsq]
+    meta = {"kind": shard.kind, "host_id": host_id, "epoch": epoch,
+            "n_rows": shard.n_rows,
+            "schema": ["counts", "psum", "psumsq"]}
+    if extra_meta:
+        meta["extra"] = dict(extra_meta)
+    if shard.combos is not None:
+        arrays.append(shard.combos)
+        meta["schema"] = meta["schema"] + ["combos"]
+        meta["width"] = int(shard.combos.shape[1])
+    final = os.path.join(hd, f"epoch_{epoch:09d}")
+    ckpt.write_manifest_dir(final, arrays, meta=meta)
+    ckpt.publish_latest(hd, epoch)
+    return final
+
+
+def _load_shard(hd: str, epoch: int) -> PackedShard:
+    d = os.path.join(hd, f"epoch_{epoch:09d}")
+    arrays, manifest = ckpt.read_manifest_dir(d)
+    named = dict(zip(manifest["schema"], arrays))
+    return PackedShard(counts=named["counts"].astype(np.int64),
+                       psum=named["psum"], psumsq=named["psumsq"],
+                       n_rows=int(manifest["n_rows"]),
+                       combos=named.get("combos"))
+
+
+def restore_shard(path: str, host_id: int, *,
+                  aggregate_fn: AggregateFn | None = None):
+    """(aggregator, epoch) from a host's LATEST spill, or None if absent.
+
+    A restarted host calls this to resume accumulating from its last
+    durable state instead of re-sampling from zero.
+    """
+    hd = _host_dir(path, host_id)
+    epoch = ckpt.latest_step(hd)
+    if epoch is None:
+        return None
+    shard = _load_shard(hd, epoch)
+    return unpack_shard(shard, aggregate_fn=aggregate_fn), epoch
+
+
+def read_shard_meta(path: str, host_id: int) -> dict | None:
+    """Manifest of a host's LATEST shard (no array I/O), or None.
+
+    Includes the caller's ``extra`` dict from :func:`spill_shard`.
+    """
+    hd = _host_dir(path, host_id)
+    epoch = ckpt.latest_step(hd)
+    if epoch is None:
+        return None
+    d = os.path.join(hd, f"epoch_{epoch:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        return json.load(f)
+
+
+def list_spilled_hosts(path: str) -> list[int]:
+    """Host ids with at least one published (LATEST-named) shard.
+
+    ``.tmp-`` directories from crashed writers are never inspected.
+    """
+    if not os.path.isdir(path):
+        return []
+    out = []
+    for name in os.listdir(path):
+        m = _HOST_DIR_RE.match(name)
+        if m and ckpt.latest_step(os.path.join(path, name)) is not None:
+            out.append(int(m.group(1)))
+    # Numeric, not lexicographic: host_10000 must sort after host_9999
+    # (id order is what makes merged combination ids deterministic).
+    return sorted(out)
+
+
+def tree_reduce(aggs: Sequence):
+    """Merge aggregators by an order-preserving binary reduction tree.
+
+    The order preservation is correctness-critical (see module
+    docstring): it is what makes merged combination id assignment match
+    a single pass over the concatenated stream, for any tree shape.
+    """
+    aggs = list(aggs)
+    if not aggs:
+        raise ValueError("nothing to reduce")
+    while len(aggs) > 1:
+        nxt = [aggs[i].merge(aggs[i + 1])
+               for i in range(0, len(aggs) - 1, 2)]
+        if len(aggs) % 2:
+            nxt.append(aggs[-1])
+        aggs = nxt
+    return aggs[0]
+
+
+def gather_shards(path: str, *, aggregate_fn: AggregateFn | None = None):
+    """Merge every published host shard under ``path`` (reduction tree).
+
+    Hosts are taken in id order and merged by :func:`tree_reduce`, so
+    combination ids match a single-host pass over the concatenated
+    stream regardless of host count.
+    """
+    hosts = list_spilled_hosts(path)
+    if not hosts:
+        raise FileNotFoundError(f"no published shards under {path}")
+    aggs = []
+    for h in hosts:
+        restored = restore_shard(path, h, aggregate_fn=aggregate_fn)
+        assert restored is not None       # list_spilled_hosts checked LATEST
+        aggs.append(restored[0])
+    return tree_reduce(aggs)
+
+
+# -- profiler strategies -------------------------------------------------------
+
+class CollectiveExchange:
+    """``exchange=`` strategy: all-reduce the final shard over a mesh axis.
+
+    Production: every host constructs the same multi-host mesh and each
+    passes its local aggregator; CI: a 1-device mesh exercises the same
+    pack → shard_map collective → unpack path.
+    """
+
+    def __init__(self, mesh=None, *, axis: str = "hosts",
+                 capacity: int | None = None, width: int | None = None,
+                 aggregate_fn: AggregateFn | None = None):
+        self.mesh = mesh
+        self.axis = axis
+        self.capacity = capacity
+        self.width = width
+        self.aggregate_fn = aggregate_fn
+
+    def reduce(self, agg):
+        return collective_reduce([agg], mesh=self.mesh, axis=self.axis,
+                                 capacity=self.capacity, width=self.width,
+                                 aggregate_fn=self.aggregate_fn)
+
+
+class CheckpointExchange:
+    """``exchange=`` strategy: durable spill + gather via shared storage.
+
+    ``spill()`` may be called per epoch for fault tolerance (the serving
+    accountant does); ``reduce()`` publishes the final state and merges
+    every host's LATEST shard. ``resumed`` exposes the host's previous
+    spill (if any) for *accumulating* callers that replay only the work
+    after it; deterministic re-runs (the profiler) must ignore it — they
+    regenerate the full shard and republish LATEST idempotently.
+    """
+
+    def __init__(self, path: str, host_id: int = 0, *,
+                 aggregate_fn: AggregateFn | None = None):
+        self.path = path
+        self.host_id = host_id
+        self.aggregate_fn = aggregate_fn
+        self.epoch = 0
+        prev = restore_shard(path, host_id, aggregate_fn=aggregate_fn)
+        self.resumed = prev[0] if prev is not None else None
+        if prev is not None:
+            self.epoch = prev[1]
+
+    def spill(self, agg) -> str:
+        self.epoch += 1
+        return spill_shard(self.path, self.host_id, self.epoch, agg)
+
+    def reduce(self, agg):
+        self.spill(agg)
+        return gather_shards(self.path, aggregate_fn=self.aggregate_fn)

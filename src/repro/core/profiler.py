@@ -141,6 +141,7 @@ class EnergyProfiler:
                                       sensor: str = "rapl",
                                       chunk_size: int = 65536,
                                       aggregate_fn: AggregateFn | None = None,
+                                      exchange=None,
                                       seed: int | None = None):
         """§4.4 combination attribution without materializing the stream.
 
@@ -148,6 +149,20 @@ class EnergyProfiler:
         StreamingCombinationAggregator (incremental combination interning),
         so fleet-scale combination spaces (10⁴–10⁵) stay bounded by
         O(chunk + distinct combinations).
+
+        ``exchange`` selects the cross-host shard-exchange strategy for
+        the final reduction (:mod:`repro.core.exchange`): a
+        ``CollectiveExchange`` all-reduces this host's aggregator over a
+        mesh axis, a ``CheckpointExchange`` spills it durably and merges
+        every published host shard — combination ids are deduped lazily
+        at merge in both cases. ``None`` keeps the single-host result.
+
+        Restart semantics: sampling here is deterministic in ``seed``,
+        so a restarted host re-produces its complete shard and the final
+        spill republishes LATEST idempotently — the previous spill is
+        deliberately NOT merged in (that would double-count every
+        sample). Incremental resume-from-spill is for accumulating
+        consumers (``PhaseEnergyAccountant``, direct ``restore_shard``).
         """
         agg = StreamingCombinationAggregator(aggregate_fn=aggregate_fn)
         agg.update_stream(iter_multiworker_chunks(
@@ -155,6 +170,8 @@ class EnergyProfiler:
             period=self.period, jitter=self.jitter,
             seed=self.seed if seed is None else seed,
             chunk_size=chunk_size))
+        if exchange is not None:
+            agg = exchange.reduce(agg)
         t_end = min(tl.t_exec for tl in timelines)
         return agg.estimates(t_end, timelines[0].names, alpha=self.alpha)
 

@@ -35,7 +35,7 @@ import numpy as np
 
 from repro.core import estimator as estimator_mod
 from repro.core.estimator import (AggregateFn, EstimateSet,
-                                  combination_names,
+                                  combination_names_from_matrix,
                                   estimates_from_statistics)
 
 __all__ = [
@@ -155,6 +155,47 @@ class CombinationInterner:
         """Combination tuples indexed by combination id."""
         return list(self._combos)
 
+    def combo_matrix(self) -> np.ndarray:
+        """The key table as an int64 [k, width] matrix (shard wire format).
+
+        This is what a shard serializes: its *local* id space is the row
+        order, and receivers dedupe lazily by interning the rows into
+        their own table (:meth:`intern_rows`) at merge time.
+        """
+        w = self._width if self._width is not None else 0
+        if not self._combos:
+            return np.empty((0, w), dtype=np.int64)
+        return np.asarray(self._combos, dtype=np.int64)
+
+    def intern_rows(self, mat: np.ndarray) -> np.ndarray:
+        """Intern each row of an int64 [k, width] matrix; returns ids [k].
+
+        The lazy cross-shard dedup primitive: another shard's key table
+        maps local id ``i`` → union id ``intern_rows(table)[i]``. Rows are
+        hashed as contiguous bytes (no per-row tuple boxing on re-intern).
+        """
+        mat = np.ascontiguousarray(np.asarray(mat), dtype=np.int64)
+        if mat.ndim != 2:
+            raise ValueError(f"expected [k, workers]; got shape {mat.shape}")
+        if len(mat):
+            if self._width is None:
+                self._width = mat.shape[1]
+            elif mat.shape[1] != self._width:
+                raise ValueError(f"worker count mismatch at merge: "
+                                 f"{mat.shape[1]} != {self._width}")
+        table = self._table
+        combos = self._combos
+        ids = np.empty(len(mat), dtype=np.int64)
+        for k in range(len(mat)):
+            key = mat[k].tobytes()
+            cid = table.get(key)
+            if cid is None:
+                cid = len(combos)
+                table[key] = cid
+                combos.append(tuple(int(v) for v in mat[k]))
+            ids[k] = cid
+        return ids
+
     def intern(self, combo: tuple[int, ...]) -> int:
         """Intern a single combination tuple; returns its id."""
         key = np.asarray(combo, dtype=np.int64).tobytes()
@@ -182,18 +223,7 @@ class CombinationInterner:
         # Hash the contiguous row bytes directly; the tuple form is only
         # materialized on first insertion (steady state re-interns cost a
         # dict lookup per distinct row, no boxing).
-        uniq = np.ascontiguousarray(uniq)
-        table = self._table
-        combos = self._combos
-        local_to_global = np.empty(len(uniq), dtype=np.int64)
-        for k in range(len(uniq)):
-            key = uniq[k].tobytes()
-            cid = table.get(key)
-            if cid is None:
-                cid = len(combos)
-                table[key] = cid
-                combos.append(tuple(int(v) for v in uniq[k]))
-            local_to_global[k] = cid
+        local_to_global = self.intern_rows(uniq)
         return local_to_global[inverse.reshape(-1)]
 
 
@@ -229,26 +259,43 @@ class StreamingCombinationAggregator:
             self.update(mat, pows)
         return self
 
-    def merge(self, other: "StreamingCombinationAggregator"
-              ) -> "StreamingCombinationAggregator":
-        remap = np.array([self.interner.intern(c)
-                          for c in other.interner.combos], dtype=np.int64)
+    def merge_table(self, combo_matrix: np.ndarray, counts: np.ndarray,
+                    psum: np.ndarray, psumsq: np.ndarray
+                    ) -> "StreamingCombinationAggregator":
+        """Fold a shard given by its raw key table + statistics.
+
+        The cross-host merge primitive (lazy id dedup): ``combo_matrix``
+        is the shard's local id space in row order, so its local id ``i``
+        remaps to ``intern_rows(combo_matrix)[i]`` in the union space.
+        Entry point for deserialized shards (:mod:`repro.core.exchange`);
+        :meth:`merge` routes through it. Unseen rows are appended in the
+        shard's local order, so any left-to-right reduction tree assigns
+        the same union ids as one aggregator fed the concatenated stream.
+        """
+        remap = self.interner.intern_rows(combo_matrix)
         if len(self.interner) > self.agg.num_regions:
             self.agg.grow(len(self.interner))
         if len(remap):
-            np.add.at(self.agg.counts, remap, other.agg.counts)
-            np.add.at(self.agg.psum, remap, other.agg.psum)
-            np.add.at(self.agg.psumsq, remap, other.agg.psumsq)
+            np.add.at(self.agg.counts, remap, np.asarray(counts, np.int64))
+            np.add.at(self.agg.psum, remap, np.asarray(psum, np.float64))
+            np.add.at(self.agg.psumsq, remap,
+                      np.asarray(psumsq, np.float64))
         return self
+
+    def merge(self, other: "StreamingCombinationAggregator"
+              ) -> "StreamingCombinationAggregator":
+        return self.merge_table(other.interner.combo_matrix(),
+                                other.agg.counts, other.agg.psum,
+                                other.agg.psumsq)
 
     def estimates(self, t_exec: float, names: Sequence[str], *,
                   alpha: float = 0.05
                   ) -> tuple[EstimateSet, list[tuple[int, ...]]]:
         """Finalize into (combination EstimateSet, combination tuples)."""
-        combos = self.interner.combos
-        est = self.agg.estimates(t_exec, combination_names(combos, names),
-                                 alpha=alpha)
-        return est, combos
+        comb_names = combination_names_from_matrix(
+            self.interner.combo_matrix(), names)
+        est = self.agg.estimates(t_exec, comb_names, alpha=alpha)
+        return est, self.interner.combos
 
 
 def stream_estimate(chunks: Iterable[tuple[np.ndarray, np.ndarray]],

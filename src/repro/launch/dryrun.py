@@ -204,6 +204,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = mem_compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax 0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
 
     n_tokens = shape.global_batch * (shape.seq_len if not shape.is_decode

@@ -4,28 +4,64 @@
 importing this module never touches jax device state. The dry-run launcher
 sets XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
 import; ordinary smoke tests and benches see 1 device.
+
+``jax.sharding.AxisType`` (and the matching ``axis_types=`` kwarg of
+``jax.make_mesh``) only exists from jax 0.5.x; on 0.4.x meshes are
+implicitly Auto-typed. :func:`axis_types_kwargs` returns the kwarg dict
+when supported and ``{}`` otherwise, and :func:`make_mesh_compat` is the
+version-portable constructor every caller (launchers, tests) should use.
 """
 
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
 
-__all__ = ["make_production_mesh", "make_small_mesh", "dp_axes_for"]
+__all__ = ["axis_types_kwargs", "make_mesh_compat", "make_production_mesh",
+           "make_small_mesh", "make_exchange_mesh", "dp_axes_for"]
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def axis_types_kwargs(n: int) -> dict:
+    """``axis_types=`` kwarg for ``jax.make_mesh``, empty pre-jax-0.5.
+
+    jax 0.4.x raises AttributeError for ``jax.sharding.AxisType`` (its
+    deprecation shim) and ``jax.make_mesh`` has no ``axis_types`` kwarg;
+    an Auto-typed mesh is the implicit (and only) behavior there, so
+    omitting the kwarg is semantically identical.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
+def make_mesh_compat(shape: Sequence[int], axes: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types on every jax version."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **axis_types_kwargs(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh_compat(shape, axes)
 
 
 def make_small_mesh(data: int = 1, model: int = 1):
     """Tiny mesh for CPU tests (device count permitting)."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return make_mesh_compat((data, model), ("data", "model"))
+
+
+def make_exchange_mesh(n_hosts: int | None = None, axis: str = "hosts"):
+    """1-D mesh for the shard-exchange collectives (core/exchange.py).
+
+    One position per participating host (in CI: per fake host device).
+    Defaults to all visible devices.
+    """
+    if n_hosts is None:
+        n_hosts = jax.device_count()
+    return make_mesh_compat((n_hosts,), (axis,))
 
 
 def dp_axes_for(mesh) -> tuple[str, ...]:

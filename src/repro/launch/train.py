@@ -19,6 +19,7 @@ from repro.configs.base import ShapeConfig
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.core import AttributionReport, EnergyProfiler
 from repro.data.pipeline import SyntheticTokens
+from repro.launch.mesh import make_mesh_compat
 from repro.optim.adamw import AdamWConfig
 from repro.sharding import params as sp
 from repro.sharding.rules import axis_rules, make_rules
@@ -31,8 +32,7 @@ def parse_mesh(spec: str | None):
         return None
     dims = tuple(int(x) for x in spec.split("x"))
     axes = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
-    return jax.make_mesh(dims, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    return make_mesh_compat(dims, axes)
 
 
 def main(argv=None):

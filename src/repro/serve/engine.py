@@ -41,16 +41,45 @@ class PhaseEnergyAccountant:
     sufficient statistics and discard them. Region ids come from the
     process-wide registry, so the accumulators grow only with the number
     of distinct phases, not with run length.
+
+    With ``spill_dir`` set, every ``spill_every``-th drain (one drain per
+    scheduler step) atomically publishes this host's shard via
+    :func:`repro.core.exchange.spill_shard`, so a fleet of serving hosts
+    can be reduced with ``gather_shards`` at any time — and a host killed
+    mid-run loses at most ``spill_every`` epochs of samples. Cross-host
+    region ids assume the hosts register serving phases in the same
+    order (they do: phase names are code paths, not data).
     """
 
     def __init__(self, *, period: float = 2e-3, jitter: float = 1e-4,
-                 seed: int = 0, sensor=None):
+                 seed: int = 0, sensor=None, spill_dir: str | None = None,
+                 host_id: int = 0, spill_every: int = 50):
         self.marker = RegionMarker()
         self.sampler = HostSampler(self.marker,
                                    sensor or available_host_sensor(),
                                    period=period, jitter=jitter, seed=seed)
         self.agg = StreamingAggregator(len(regions_mod.registry.names))
+        self.spill_dir = spill_dir
+        self.host_id = host_id
+        self.spill_every = spill_every
+        self._epoch = 0
+        self._elapsed_offset = 0.0
         self._ctx: contextlib.ExitStack | None = None
+        if spill_dir is not None:
+            # Restart-and-rejoin: a killed host resumes from its own
+            # LATEST shard instead of republishing a fresh low-epoch one
+            # over it (which would silently drop all pre-crash samples).
+            from repro.core.exchange import read_shard_meta, restore_shard
+            prev = restore_shard(spill_dir, host_id)
+            if prev is not None:
+                restored, self._epoch = prev
+                self.agg.merge(restored)
+                meta = read_shard_meta(spill_dir, host_id) or {}
+                # Pre-crash wall time rides in the shard meta; without it
+                # estimates() would divide merged counts by only this
+                # process's session time, inflating every p_hat.
+                self._elapsed_offset = float(
+                    meta.get("extra", {}).get("elapsed", 0.0))
 
     def __enter__(self) -> "PhaseEnergyAccountant":
         self._ctx = contextlib.ExitStack()
@@ -63,23 +92,53 @@ class PhaseEnergyAccountant:
         self._ctx.close()
         self._ctx = None
         self.drain()
+        if self.spill_dir is not None:
+            self.spill()
 
     def drain(self) -> int:
-        """Fold samples collected since the last drain; returns the count."""
+        """Fold samples collected since the last drain; returns the count.
+
+        Each call is one scheduler epoch; periodic durable spills happen
+        here when configured.
+        """
         rids, pows = self.sampler.drain()
         if len(rids):
             names = regions_mod.registry.names
             if len(names) > self.agg.num_regions:
                 self.agg.grow(len(names))
             self.agg.update(rids, pows)
+        self._epoch += 1
+        if (self.spill_dir is not None and self.spill_every > 0
+                and self._epoch % self.spill_every == 0):
+            self.spill()
         return len(rids)
+
+    @property
+    def elapsed(self) -> float:
+        """Accounted wall time: this session plus any resumed sessions."""
+        return self._elapsed_offset + self.sampler.elapsed
+
+    def spill(self) -> str:
+        """Durably publish this host's current shard (atomic, CRC'd)."""
+        from repro.core.exchange import spill_shard
+        return spill_shard(self.spill_dir, self.host_id, self._epoch,
+                           self.agg, extra_meta={"elapsed": self.elapsed})
 
     def estimates(self, alpha: float = 0.05) -> EstimateSet:
         """Per-phase estimates over everything drained so far."""
         if self.agg.n_total == 0:
             raise RuntimeError("no samples collected")
-        return self.agg.estimates(self.sampler.elapsed,
+        return self.agg.estimates(self.elapsed,
                                   regions_mod.registry.names, alpha=alpha)
+
+    @staticmethod
+    def gather_estimates(spill_dir: str, t_exec: float,
+                         alpha: float = 0.05) -> EstimateSet:
+        """Fleet view: merge every host's published shard and estimate."""
+        from repro.core.exchange import gather_shards
+        merged = gather_shards(spill_dir)
+        return merged.estimates(t_exec, regions_mod.registry.names,
+                                alpha=alpha)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,363 @@
+"""Cross-host shard exchange: spill/restore round trips (killed hosts,
+partial .tmp- dirs ignored), lazy interner dedup at merge vs single-host,
+collective path == checkpointed path, and the profiler/serve wiring."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import exchange as ex
+from repro.core.estimator import estimate_combinations
+from repro.core.profiler import EnergyProfiler
+from repro.core.streaming import (StreamingAggregator,
+                                  StreamingCombinationAggregator)
+from repro.core.timeline import RegionCost, synthesize
+
+
+def _dyadic_stream(n, R, seed, width=None):
+    """(ids-or-matrix, powers) with powers exactly representable (k/64),
+    so sums are bit-exact under any association order."""
+    rng = np.random.default_rng(seed)
+    pows = rng.integers(50 * 64, 200 * 64, n) / 64.0
+    if width is None:
+        return rng.integers(0, R, n).astype(np.int64), pows
+    return rng.integers(0, R, (n, width)).astype(np.int64), pows
+
+
+def _table_equal(a, b):
+    assert a.names == b.names
+    for col in ("region_ids", "n_samples", "p_hat", "t_hat", "t_lo", "t_hi",
+                "pow_hat", "pow_lo", "pow_hi", "e_hat", "e_lo", "e_hi",
+                "ci_valid"):
+        assert np.array_equal(getattr(a, col), getattr(b, col)), col
+
+
+# ---------------------------------------------------------------------------
+# Packed wire format
+# ---------------------------------------------------------------------------
+
+def test_pack_unpack_roundtrip_region():
+    ids, pows = _dyadic_stream(5000, 17, 0)
+    agg = StreamingAggregator(17).update(ids, pows)
+    back = ex.unpack_shard(ex.pack_shard(agg, capacity=32))
+    assert back.num_regions == 17
+    assert np.array_equal(back.counts, agg.counts)
+    assert np.array_equal(back.psum, agg.psum)
+    assert np.array_equal(back.psumsq, agg.psumsq)
+
+
+def test_pack_unpack_roundtrip_combination():
+    mat, pows = _dyadic_stream(3000, 5, 1, width=3)
+    cagg = StreamingCombinationAggregator().update(mat, pows)
+    back = ex.unpack_shard(ex.pack_shard(cagg, capacity=256))
+    assert back.interner.combos == cagg.interner.combos
+    assert np.array_equal(back.agg.counts, cagg.agg.counts)
+    assert np.array_equal(back.agg.psum, cagg.agg.psum)
+
+
+def test_pack_capacity_too_small_raises():
+    agg = StreamingAggregator(8)
+    with pytest.raises(ValueError):
+        ex.pack_shard(agg, capacity=4)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointed path: spill / restore / gather
+# ---------------------------------------------------------------------------
+
+def _host_shards(n_hosts, n=4000, R=6, width=2):
+    """Disjoint per-host chunks of one logical stream + the full stream."""
+    mats, powss = [], []
+    for h in range(n_hosts):
+        m, p = _dyadic_stream(n, R, seed=100 + h, width=width)
+        mats.append(m)
+        powss.append(p)
+    shards = [StreamingCombinationAggregator().update(m, p)
+              for m, p in zip(mats, powss)]
+    single = StreamingCombinationAggregator()
+    for m, p in zip(mats, powss):
+        single.update(m, p)
+    return shards, single, np.concatenate(mats), np.concatenate(powss)
+
+
+def test_gather_matches_single_host_bit_exact(tmp_path):
+    """3-host spill + tree-reduce gather == one aggregator over the
+    concatenated stream: same lazily-deduped ids, bit-identical stats."""
+    shards, single, all_mat, all_pows = _host_shards(3)
+    for h, s in enumerate(shards):
+        ex.spill_shard(str(tmp_path), h, epoch=1, agg=s)
+    merged = ex.gather_shards(str(tmp_path))
+    assert merged.interner.combos == single.interner.combos
+    assert np.array_equal(merged.agg.counts, single.agg.counts)
+    assert np.array_equal(merged.agg.psum, single.agg.psum)
+    assert np.array_equal(merged.agg.psumsq, single.agg.psumsq)
+
+    names = [f"r{i}" for i in range(6)]
+    est_m, combos_m = merged.estimates(2.0, names)
+    est_s, combos_s = single.estimates(2.0, names)
+    assert combos_m == combos_s
+    _table_equal(est_m.table, est_s.table)
+
+    # and against the one-shot np.unique path (different id order):
+    # identical rows after aligning by combination name.
+    est_o, _ = estimate_combinations(all_mat, all_pows, 2.0, names)
+    by_name_m = {est_m.table.names[i]: i for i in range(len(est_m.table))}
+    for j, nm in enumerate(est_o.table.names):
+        i = by_name_m[nm]
+        assert est_m.table.n_samples[i] == est_o.table.n_samples[j]
+        assert est_m.table.e_hat[i] == est_o.table.e_hat[j]
+        assert est_m.table.pow_hat[i] == est_o.table.pow_hat[j]
+
+
+def test_gather_ignores_killed_host_partial_tmp(tmp_path):
+    """A host that died mid-spill leaves only .tmp- litter: invisible."""
+    shards, _, _, _ = _host_shards(2)
+    for h, s in enumerate(shards):
+        ex.spill_shard(str(tmp_path), h, epoch=1, agg=s)
+    # host 2 crashed mid-write: partial tmp dir, no LATEST.
+    dead = tmp_path / "host_0002" / "epoch_000000001.tmp-deadbeef"
+    dead.mkdir(parents=True)
+    (dead / "arr_00000.npy").write_bytes(b"\x93NUMPY partial garbage")
+    # host 0 also has tmp litter next to its published epoch.
+    lit = tmp_path / "host_0000" / "epoch_000000002.tmp-cafef00d"
+    lit.mkdir()
+    assert ex.list_spilled_hosts(str(tmp_path)) == [0, 1]
+    merged = ex.gather_shards(str(tmp_path))
+    ref = StreamingCombinationAggregator()
+    ref.merge(shards[0]).merge(shards[1])
+    assert np.array_equal(merged.agg.counts, ref.agg.counts)
+
+
+def test_restore_shard_resume_and_restart_mid_run(tmp_path):
+    """Acceptance: one host dies after a spill, restarts from its LATEST,
+    replays its remaining chunks — gather is bit-exact vs single-host."""
+    shards, single, _, _ = _host_shards(3)
+    # hosts 0 and 2 complete normally
+    ex.spill_shard(str(tmp_path), 0, epoch=1, agg=shards[0])
+    ex.spill_shard(str(tmp_path), 2, epoch=1, agg=shards[2])
+
+    # host 1 processes its stream in two halves, spills after the first,
+    # then dies (in-memory aggregator lost).
+    mat, pows = _dyadic_stream(4000, 6, seed=101, width=2)
+    half = 2000
+    first = StreamingCombinationAggregator().update(mat[:half], pows[:half])
+    ex.spill_shard(str(tmp_path), 1, epoch=1, agg=first)
+    del first
+
+    # restart: resume from LATEST, replay the unspilled half, re-spill.
+    resumed, epoch = ex.restore_shard(str(tmp_path), 1)
+    assert epoch == 1
+    resumed.update(mat[half:], pows[half:])
+    ex.spill_shard(str(tmp_path), 1, epoch=2, agg=resumed)
+
+    merged = ex.gather_shards(str(tmp_path))
+    assert merged.interner.combos == single.interner.combos
+    assert np.array_equal(merged.agg.counts, single.agg.counts)
+    assert np.array_equal(merged.agg.psum, single.agg.psum)
+    assert np.array_equal(merged.agg.psumsq, single.agg.psumsq)
+
+
+def test_list_spilled_hosts_large_ids_numeric_order(tmp_path):
+    """Ids >= 10000 exceed the :04d zero-pad; they must still publish,
+    gather, and sort numerically (not lexicographically)."""
+    ids, pows = _dyadic_stream(200, 3, 0)
+    for h in (10000, 2, 9999):
+        ex.spill_shard(str(tmp_path), h, epoch=1,
+                       agg=StreamingAggregator(3).update(ids, pows))
+    assert ex.list_spilled_hosts(str(tmp_path)) == [2, 9999, 10000]
+    merged = ex.gather_shards(str(tmp_path))
+    assert merged.n_total == 3 * 200
+
+
+def test_restore_shard_absent_host(tmp_path):
+    assert ex.restore_shard(str(tmp_path), 7) is None
+    with pytest.raises(FileNotFoundError):
+        ex.gather_shards(str(tmp_path / "nothing"))
+
+
+def test_spill_gather_region_shards(tmp_path):
+    """Plain per-region shards (serve accountant format) round-trip too,
+    across hosts with different region counts."""
+    aggs, ref = [], StreamingAggregator(9)
+    for h, R in enumerate((5, 9, 7)):
+        ids, pows = _dyadic_stream(3000, R, seed=h)
+        a = StreamingAggregator(R).update(ids, pows)
+        ex.spill_shard(str(tmp_path), h, epoch=1, agg=a)
+        ref.merge(a)
+    merged = ex.gather_shards(str(tmp_path))
+    assert np.array_equal(merged.counts, ref.counts)
+    assert np.array_equal(merged.psum, ref.psum)
+    assert np.array_equal(merged.psumsq, ref.psumsq)
+
+
+# ---------------------------------------------------------------------------
+# Collective path
+# ---------------------------------------------------------------------------
+
+def test_collective_reduce_single_device_identity():
+    mat, pows = _dyadic_stream(2000, 4, 3, width=2)
+    cagg = StreamingCombinationAggregator().update(mat, pows)
+    merged = ex.collective_reduce([cagg])
+    assert merged.interner.combos == cagg.interner.combos
+    assert np.array_equal(merged.agg.counts, cagg.agg.counts)
+    assert np.array_equal(merged.agg.psum, cagg.agg.psum)
+
+    ids, pows = _dyadic_stream(2000, 11, 4)
+    agg = StreamingAggregator(11).update(ids, pows)
+    m2 = ex.collective_reduce([agg])
+    assert np.array_equal(m2.counts, agg.counts)
+    assert np.array_equal(m2.psumsq, agg.psumsq)
+
+
+_COLLECTIVE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    from repro.core import exchange as ex
+    from repro.core.streaming import (StreamingAggregator,
+                                      StreamingCombinationAggregator)
+
+    rng = np.random.default_rng(0)
+    def dyadic(n):
+        return rng.integers(50 * 64, 200 * 64, n) / 64.0
+
+    # 4 combination shards (host 2 idle: saw no traffic, width-0 key
+    # table): collective all-gather+merge == checkpointed spill+gather
+    # on the SAME shards, bit-exact.
+    cshards = []
+    for h in range(4):
+        c = StreamingCombinationAggregator()
+        if h != 2:
+            m = rng.integers(0, 5, (1500, 2)).astype(np.int64)
+            c.update(m, dyadic(1500))
+        cshards.append(c)
+    coll = ex.collective_reduce(cshards)
+
+    d = "/tmp/exchange_collective_vs_ckpt"
+    import shutil; shutil.rmtree(d, ignore_errors=True)
+    for h, s in enumerate(cshards):
+        ex.spill_shard(d, h, epoch=1, agg=s)
+    ckpt = ex.gather_shards(d)
+
+    assert coll.interner.combos == ckpt.interner.combos
+    assert np.array_equal(coll.agg.counts, ckpt.agg.counts)
+    assert np.array_equal(coll.agg.psum, ckpt.agg.psum)
+    assert np.array_equal(coll.agg.psumsq, ckpt.agg.psumsq)
+    print("COMBOK", len(coll.interner))
+
+    # 4 plain region shards (ragged R): psum all-reduce == in-process merge.
+    shards, ref = [], StreamingAggregator(8)
+    for h, R in enumerate((8, 5, 8, 3)):
+        ids = rng.integers(0, R, 2000).astype(np.int64)
+        a = StreamingAggregator(R).update(ids, dyadic(2000))
+        shards.append(a); ref.merge(a)
+    coll2 = ex.collective_reduce(shards)
+    assert np.array_equal(coll2.counts, ref.counts)
+    assert np.array_equal(coll2.psum, ref.psum)
+    assert np.array_equal(coll2.psumsq, ref.psumsq)
+    print("REGIONOK")
+""")
+
+
+@pytest.mark.slow
+def test_collective_equals_checkpointed_4hosts():
+    """4 fake hosts on a 4-device mesh: collective == checkpointed."""
+    res = subprocess.run([sys.executable, "-c", _COLLECTIVE_SCRIPT],
+                         capture_output=True, text=True, timeout=600,
+                         cwd="/root/repo")
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "COMBOK" in res.stdout and "REGIONOK" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# Profiler / serve wiring
+# ---------------------------------------------------------------------------
+
+def _timelines():
+    costs = [RegionCost("mem", flops=1e10, hbm_bytes=5e10, invocations=4),
+             RegionCost("alu", flops=6e11, hbm_bytes=2e9, invocations=4)]
+    return [synthesize(costs, steps=80, seed=s) for s in (0, 1)]
+
+
+def test_profiler_checkpoint_exchange_single_host(tmp_path):
+    tls = _timelines()
+    prof = EnergyProfiler(period=10e-3)
+    est_ref, combos_ref = prof.profile_multiworker_streaming(
+        tls, sensor="instant", chunk_size=256)
+    est_ex, combos_ex = prof.profile_multiworker_streaming(
+        tls, sensor="instant", chunk_size=256,
+        exchange=ex.CheckpointExchange(str(tmp_path), host_id=0))
+    assert combos_ex == combos_ref
+    _table_equal(est_ex.table, est_ref.table)
+    # the final shard was published durably
+    assert ex.list_spilled_hosts(str(tmp_path)) == [0]
+
+    # restart idempotency: a re-run against the same spill dir regenerates
+    # the same deterministic stream and republishes — it must NOT merge
+    # its own previous spill on top (that would double every count).
+    est_again, _ = prof.profile_multiworker_streaming(
+        tls, sensor="instant", chunk_size=256,
+        exchange=ex.CheckpointExchange(str(tmp_path), host_id=0))
+    assert est_again.n_total == est_ref.n_total
+    _table_equal(est_again.table, est_ref.table)
+
+
+def test_profiler_collective_exchange_single_host():
+    tls = _timelines()
+    prof = EnergyProfiler(period=10e-3)
+    est_ref, combos_ref = prof.profile_multiworker_streaming(
+        tls, sensor="instant", chunk_size=256)
+    est_ex, combos_ex = prof.profile_multiworker_streaming(
+        tls, sensor="instant", chunk_size=256,
+        exchange=ex.CollectiveExchange())
+    assert combos_ex == combos_ref
+    _table_equal(est_ex.table, est_ref.table)
+
+
+def test_accountant_periodic_spill(tmp_path):
+    """PhaseEnergyAccountant publishes its shard every spill_every drains
+    and once on exit; gather_estimates sees the fleet."""
+    import time
+
+    from repro.core import regions as regions_mod
+    from repro.serve.engine import PhaseEnergyAccountant
+
+    acct = PhaseEnergyAccountant(period=1e-3, jitter=1e-4,
+                                 spill_dir=str(tmp_path), host_id=3,
+                                 spill_every=5)
+    with acct:
+        for _ in range(12):
+            with regions_mod.region("serve/busy"):
+                t0 = time.monotonic()
+                while time.monotonic() - t0 < 2e-3:
+                    pass
+            acct.drain()
+    assert ex.list_spilled_hosts(str(tmp_path)) == [3]
+    restored, epoch = ex.restore_shard(str(tmp_path), 3)
+    assert epoch >= 10   # periodic spills happened, not just the exit one
+    assert np.array_equal(restored.counts[:acct.agg.num_regions]
+                          [:restored.num_regions],
+                          acct.agg.counts[:restored.num_regions])
+    if acct.agg.n_total:
+        est = PhaseEnergyAccountant.gather_estimates(
+            str(tmp_path), acct.sampler.elapsed)
+        assert est.n_total == acct.agg.n_total
+
+    # restart-and-rejoin: a new accountant on the same spill dir resumes
+    # from LATEST (pre-crash samples survive, epochs keep counting up,
+    # pre-crash wall time is carried) instead of republishing a fresh
+    # empty shard over it.
+    acct2 = PhaseEnergyAccountant(period=1e-3, jitter=1e-4,
+                                  spill_dir=str(tmp_path), host_id=3,
+                                  spill_every=5)
+    assert acct2.agg.n_total == acct.agg.n_total
+    assert acct2._epoch == epoch
+    assert np.array_equal(acct2.agg.counts[:restored.num_regions],
+                          restored.counts)
+    assert acct2._elapsed_offset == pytest.approx(acct.sampler.elapsed)
