@@ -1,0 +1,178 @@
+"""End-to-end sampling→attribution pipeline benchmark (device tentpole).
+
+Compares the two streaming backends of ``EnergyProfiler`` at equal sample
+volume (``ALEA_BENCH_N`` samples, default 10⁶; acceptance runs use 10⁷):
+
+* **host** — the chunked numpy path: ``iter_sample_chunks`` /
+  ``iter_multiworker_chunks`` feeding ``StreamingAggregator`` /
+  ``StreamingCombinationAggregator`` (per-chunk Python loop over W
+  workers, host sensor emulation, host interning);
+* **host_interp** — the same chunked host path with the PR-1 Pallas
+  chunk kernel plugged into the aggregate seam
+  (``chunked_aggregate_fn``), which on CPU runs in interpret mode — the
+  configuration CI actually exercises today. Interpret mode is orders
+  slower, so this arm is timed on a truncated stream (cf.
+  ``benchmarks/aggregation.py``) and reported as samples/sec;
+* **fused** — the device-resident pipeline
+  (:mod:`repro.core.device_pipeline`): one jitted chunk step doing time
+  generation, vmapped region lookup, sensor emulation and the attribution
+  reduction into a donated device carry (XLA-compiled on CPU here; the
+  Pallas kernel arm engages on real TPU).
+
+Worker configurations W ∈ {1, 16, 64} model §4.4 barrier-synchronized
+workers: one shared interval structure, per-worker sub-interval phase
+shifts, so the combination space stays bounded (≈ R² transition pairs ×
+W+1 crossing patterns) and the fused path reaches its steady state.
+Fused timings exclude compilation (one warmup pass); host numpy needs no
+warmup. Emits the usual CSV rows plus ``BENCH_pipeline.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.sampler import iter_multiworker_chunks, iter_sample_chunks
+from repro.core.sensors import RaplTraceSensor
+from repro.core.streaming import (StreamingAggregator,
+                                  StreamingCombinationAggregator)
+from repro.core.timeline import Timeline
+
+_JSON_PATH = pathlib.Path(__file__).with_name("BENCH_pipeline.json")
+WORKER_CONFIGS = (1, 16, 64)
+PERIOD = 1e-3          # RAPL-minimum sampling period → n ≈ t_end / PERIOD
+JITTER = 200e-6
+R = 16                 # regions per worker timeline
+CHUNK = 16384          # cache sweet spot for BOTH arms at W=16 on CPU
+SEED = 11
+
+
+def _worker_timelines(w: int, n_samples: int, seed: int = 0
+                      ) -> list[Timeline]:
+    """W phase-shifted copies of one interval structure (§4.4 workers)."""
+    t_end = n_samples * PERIOD
+    m = int(min(20_000, max(200, n_samples // 50)))
+    rng = np.random.default_rng(seed)
+    durs = rng.uniform(0.5, 1.5, m) * (t_end / m)
+    ids = rng.integers(0, R, m).astype(np.int32)
+    pows = 50.0 + 150.0 * rng.random(m)
+    names = tuple(f"bb_{i}" for i in range(R))
+    tls = []
+    for i in range(w):
+        # Sub-interval phase shift via a leading pad interval: workers
+        # stay within one interval of each other, so combinations are
+        # transition patterns, not the full R^W cross product.
+        off = (i / w) * 0.5 * (t_end / m) + 1e-9
+        tls.append(Timeline(
+            np.concatenate([[ids[0]], ids]),
+            np.concatenate([[off], durs]),
+            np.concatenate([[pows[0]], pows]), names))
+    return tls
+
+
+def _host_run(tls: list[Timeline], aggregate_fn=None,
+              max_chunks: int | None = None):
+    if len(tls) == 1:
+        chunks = iter_sample_chunks(
+            tls[0], RaplTraceSensor(tls[0]), period=PERIOD, jitter=JITTER,
+            seed=SEED, chunk_size=CHUNK)
+        agg = StreamingAggregator(R, aggregate_fn=aggregate_fn)
+    else:
+        chunks = iter_multiworker_chunks(
+            tls, lambda tl: RaplTraceSensor(tl), period=PERIOD,
+            jitter=JITTER, seed=SEED, chunk_size=CHUNK)
+        agg = StreamingCombinationAggregator(aggregate_fn=aggregate_fn)
+    for i, (rids, pows) in enumerate(chunks):
+        if max_chunks is not None and i >= max_chunks:
+            break
+        agg.update(rids, pows)
+    return agg.n_total
+
+
+def _fused_run(tls: list[Timeline], stats: dict | None = None):
+    from repro.core import device_pipeline as dp
+    spec = RaplTraceSensor.make_spec()
+    dtl = dp.DeviceTimeline.from_timelines(tls)
+    if len(tls) == 1:
+        res = dp.run_region_pipeline(dtl, spec, period=PERIOD,
+                                     jitter=JITTER, seed=SEED,
+                                     chunk_size=CHUNK)
+        return res.n
+    agg, n = dp.run_combo_pipeline(dtl, spec, period=PERIOD, jitter=JITTER,
+                                   seed=SEED, chunk_size=CHUNK, stats=stats)
+    return n
+
+
+def run(verbose: bool = True) -> list[str]:
+    n_target = int(os.environ.get("ALEA_BENCH_N", 1_000_000))
+    rows: list[tuple[str, float, str]] = []
+    record: dict = {"n_samples_target": n_target, "period": PERIOD,
+                    "chunk": CHUNK, "regions": R, "sensor": "rapl",
+                    "note": "fused timings exclude compilation "
+                            "(one warmup pass)",
+                    "workers": {}}
+
+    from repro.kernels.sample_attr.ops import chunked_aggregate_fn
+    interp_chunks = max(int(os.environ.get("ALEA_BENCH_INTERP_CHUNKS", 1)),
+                        1)
+
+    for w in WORKER_CONFIGS:
+        tls = _worker_timelines(w, n_target, seed=SEED)
+
+        t0 = time.perf_counter()
+        n_host = _host_run(tls)
+        host_dt = time.perf_counter() - t0
+
+        # CI-mode host path: PR-1 Pallas chunk kernel in the aggregate
+        # seam, interpret mode on CPU. Truncated — interpret is orders
+        # slower; per-sample rate extrapolates (chunks are homogeneous).
+        t0 = time.perf_counter()
+        n_interp = _host_run(tls, chunked_aggregate_fn(interpret=True),
+                             max_chunks=interp_chunks)
+        interp_dt = time.perf_counter() - t0
+        interp_rate = n_interp / interp_dt
+
+        _fused_run(tls)                      # warmup: compile + table fill
+        stats: dict = {}
+        t0 = time.perf_counter()
+        n_fused = _fused_run(tls, stats)
+        fused_dt = time.perf_counter() - t0
+        fused_rate = n_fused / fused_dt
+
+        speedup = host_dt / fused_dt
+        speedup_interp = fused_rate / interp_rate
+        record["workers"][f"W{w}"] = {
+            "n_samples": n_fused,
+            "host": {"sec": host_dt, "samples_per_sec": n_host / host_dt},
+            "host_interp": {"sec": interp_dt, "n_samples": n_interp,
+                            "samples_per_sec": interp_rate},
+            "fused": {"sec": fused_dt,
+                      "samples_per_sec": fused_rate,
+                      "speedup_vs_host": speedup,
+                      "speedup_vs_host_interp": speedup_interp,
+                      "miss_chunks": stats.get("miss_chunks"),
+                      "chunks": stats.get("chunks")},
+        }
+        rows.append((f"pipeline/host/W{w}", host_dt * 1e6,
+                     f"{n_host / host_dt / 1e6:.2f} Msamples/s"))
+        rows.append((f"pipeline/host_interp/W{w}", interp_dt * 1e6,
+                     f"{interp_rate / 1e6:.3f} Msamples/s n={n_interp}"))
+        rows.append((f"pipeline/fused/W{w}", fused_dt * 1e6,
+                     f"{fused_rate / 1e6:.2f} Msamples/s "
+                     f"{speedup:.1f}x host {speedup_interp:.0f}x interp"))
+
+    _JSON_PATH.write_text(json.dumps(record, indent=2))
+    if verbose:
+        for nm, us, d in rows:
+            print(f"{nm:32s} {us:14.1f}us {d}")
+        print(f"wrote {_JSON_PATH}")
+    return [csv_row(nm, us, d) for nm, us, d in rows]
+
+
+if __name__ == "__main__":
+    run()

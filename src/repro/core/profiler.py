@@ -111,27 +111,76 @@ class EnergyProfiler:
                                      stream.t_exec, names, alpha=self.alpha)
 
     # -- streaming (fleet-scale) mode ------------------------------------------
+    def _resolve_pipeline(self, pipeline: str, aggregate_fn) -> bool:
+        """True → fused device pipeline; False → host-numpy chunk loop.
+
+        ``auto`` prefers the device pipeline whenever JAX is importable
+        and no explicit per-chunk ``aggregate_fn`` was plugged in (a
+        custom kernel plug implies the host chunk seam), falling back to
+        the host path when the device path's preconditions don't hold
+        (no jax, or jitter > period breaks its monotone sample clock).
+        """
+        if pipeline not in ("auto", "device", "host"):
+            raise ValueError(f"pipeline must be auto|device|host; "
+                             f"got {pipeline!r}")
+        if pipeline == "host":
+            return False
+        if pipeline == "device" and aggregate_fn is not None:
+            raise ValueError(
+                "aggregate_fn plugs the host chunk seam and would be "
+                "silently ignored by the device pipeline; use "
+                "pipeline=\"host\" (or drop aggregate_fn)")
+        if pipeline == "auto" and (aggregate_fn is not None
+                                   or self.jitter > self.period):
+            return False
+        try:
+            import repro.core.device_pipeline  # noqa: F401
+        except ImportError:
+            if pipeline == "device":
+                raise
+            return False
+        return True
+
     def profile_timeline_streaming(self, tl: Timeline, *,
                                    sensor: str = "rapl",
                                    chunk_size: int = 65536,
                                    overhead_per_sample: float = 0.0,
                                    aggregate_fn: AggregateFn | None = None,
-                                   seed: int | None = None) -> EstimateSet:
+                                   seed: int | None = None,
+                                   pipeline: str = "auto") -> EstimateSet:
         """Constant-memory profiling: chunked sampling → StreamingAggregator.
 
         Equivalent estimates to :meth:`profile_timeline` (different jitter
         draws for the same seed) while holding O(chunk + R) sample state —
         the path for runs long enough that the stream won't fit in memory.
-        ``aggregate_fn`` plugs the Pallas chunked kernel in per block.
+
+        ``pipeline`` selects the backend: ``"device"`` runs the fused
+        device-resident pipeline (:mod:`repro.core.device_pipeline`) —
+        sample generation, region lookup, sensor emulation and the
+        attribution reduction in one jitted scan with a donated carry, no
+        per-chunk host transfers; ``"host"`` keeps the numpy reference
+        loop; ``"auto"`` (default) uses the device pipeline when JAX is
+        the substrate. ``aggregate_fn`` plugs a kernel into the *host*
+        chunk seam (and so implies the host path under ``auto``).
         """
+        use_seed = self.seed if seed is None else seed
+        if self._resolve_pipeline(pipeline, aggregate_fn):
+            from repro.core import device_pipeline as dp
+            res = dp.run_region_pipeline(
+                tl.to_device(), _SENSORS[sensor].make_spec(),
+                period=self.period, jitter=self.jitter, seed=use_seed,
+                chunk_size=chunk_size,
+                overhead_per_sample=overhead_per_sample)
+            agg = StreamingAggregator.from_statistics(res.counts, res.psum,
+                                                      res.psumsq)
+            return agg.estimates(res.t_exec, tl.names, alpha=self.alpha)
         sens = _SENSORS[sensor](tl)
         agg = StreamingAggregator(len(tl.names), aggregate_fn=aggregate_fn)
         n = 0
         for rids, pows in iter_sample_chunks(
                 tl, sens, period=self.period, jitter=self.jitter,
                 overhead_per_sample=overhead_per_sample,
-                seed=self.seed if seed is None else seed,
-                chunk_size=chunk_size):
+                seed=use_seed, chunk_size=chunk_size):
             agg.update(rids, pows)
             n += len(rids)
         t_exec = tl.t_exec + n * overhead_per_sample
@@ -142,13 +191,19 @@ class EnergyProfiler:
                                       chunk_size: int = 65536,
                                       aggregate_fn: AggregateFn | None = None,
                                       exchange=None,
-                                      seed: int | None = None):
+                                      seed: int | None = None,
+                                      pipeline: str = "auto"):
         """§4.4 combination attribution without materializing the stream.
 
         Chunked multi-worker sampling feeds a
         StreamingCombinationAggregator (incremental combination interning),
         so fleet-scale combination spaces (10⁴–10⁵) stay bounded by
-        O(chunk + distinct combinations).
+        O(chunk + distinct combinations). With ``pipeline="device"``
+        (the ``auto`` default when JAX is the substrate) the whole chunk
+        loop is the fused device pipeline: ``vmap`` over the batched
+        [W, m] timeline replaces the per-chunk Python loop over workers,
+        and chunks whose combinations are already in the device-resident
+        key table fold without any host transfer.
 
         ``exchange`` selects the cross-host shard-exchange strategy for
         the final reduction (:mod:`repro.core.exchange`): a
@@ -164,12 +219,19 @@ class EnergyProfiler:
         sample). Incremental resume-from-spill is for accumulating
         consumers (``PhaseEnergyAccountant``, direct ``restore_shard``).
         """
-        agg = StreamingCombinationAggregator(aggregate_fn=aggregate_fn)
-        agg.update_stream(iter_multiworker_chunks(
-            timelines, lambda tl: _SENSORS[sensor](tl),
-            period=self.period, jitter=self.jitter,
-            seed=self.seed if seed is None else seed,
-            chunk_size=chunk_size))
+        use_seed = self.seed if seed is None else seed
+        if self._resolve_pipeline(pipeline, aggregate_fn):
+            from repro.core import device_pipeline as dp
+            dtl = dp.DeviceTimeline.from_timelines(timelines)
+            agg, _n = dp.run_combo_pipeline(
+                dtl, _SENSORS[sensor].make_spec(), period=self.period,
+                jitter=self.jitter, seed=use_seed, chunk_size=chunk_size)
+        else:
+            agg = StreamingCombinationAggregator(aggregate_fn=aggregate_fn)
+            agg.update_stream(iter_multiworker_chunks(
+                timelines, lambda tl: _SENSORS[sensor](tl),
+                period=self.period, jitter=self.jitter,
+                seed=use_seed, chunk_size=chunk_size))
         if exchange is not None:
             agg = exchange.reduce(agg)
         t_end = min(tl.t_exec for tl in timelines)

@@ -27,6 +27,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro.core.sensors import DEFAULT_IDLE_POWER
 from repro.core.timeline import Timeline
 
 __all__ = ["SampleStream", "sample_timeline", "iter_sample_chunks",
@@ -56,7 +57,7 @@ def _sample_times(t_end: float, period: float, jitter: float,
 
 def sample_timeline(tl: Timeline, sensor, *, period: float,
                     jitter: float = 200e-6, overhead_per_sample: float = 0.0,
-                    idle_power: float = 70.0, seed: int = 0,
+                    idle_power: float = DEFAULT_IDLE_POWER, seed: int = 0,
                     deliberate_alias: bool = False) -> SampleStream:
     """One-pass systematic sampling of a synthesized timeline.
 
@@ -133,7 +134,7 @@ class _ChunkedTimes:
 def iter_sample_chunks(tl: Timeline, sensor, *, period: float,
                        jitter: float = 200e-6,
                        overhead_per_sample: float = 0.0,
-                       idle_power: float = 70.0, seed: int = 0,
+                       idle_power: float = DEFAULT_IDLE_POWER, seed: int = 0,
                        chunk_size: int = 65536):
     """Streaming counterpart of :func:`sample_timeline`.
 
@@ -288,9 +289,21 @@ class HostSampler:
         read = self.sensor.read
         append = self._buf.append
         marker = self.marker
+        uniform = self._rng.uniform
+        # Schedule against absolute deadlines: sleeping a fixed period
+        # *after* read()/append() return would stretch the effective
+        # period by the read cost every sample (systematic drift above
+        # the configured rate). If a read overruns its deadline entirely,
+        # rebase instead of bursting to catch up.
+        next_t = time.monotonic()
         while not self._stop.is_set():
             append(marker.value, float(read()))
-            time.sleep(self.period + float(self._rng.uniform(0, self.jitter)))
+            next_t += self.period + float(uniform(0, self.jitter))
+            delay = next_t - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+            else:
+                next_t = time.monotonic()
 
     def __enter__(self) -> "HostSampler":
         # CPython's default 5 ms GIL switch interval would let a CPU-bound

@@ -26,6 +26,7 @@ can refuse sampling faster than the instrument supports.
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import time
 
@@ -34,9 +35,34 @@ import numpy as np
 from repro.core.timeline import Timeline
 
 __all__ = [
+    "SensorSpec", "DEFAULT_IDLE_POWER",
     "InstantTraceSensor", "RaplTraceSensor", "Ina231TraceSensor",
     "RaplSensor", "ProcessActivitySensor", "available_host_sensor",
 ]
+
+# Near-idle package power blended into suspended-sample readings (§4.7);
+# shared by the host sampler and the device pipeline so both overhead
+# models emulate the same machine.
+DEFAULT_IDLE_POWER = 70.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SensorSpec:
+    """Declarative trace-sensor semantics (hashable jit-cache key).
+
+    The device-resident pipeline (:mod:`repro.core.device_pipeline`)
+    re-implements each trace sensor as a *pure function* of the timeline's
+    cumulative energy integral; this spec carries the parameters of that
+    function without binding to a host-side Timeline. ``kind`` selects the
+    emulation: ``instant`` (oracle P(t)), ``rapl`` (energy counter
+    differenced between consecutive samples, quantized to
+    ``update_period``), ``ina231`` (mean power over ``[t - window, t]``).
+    """
+
+    kind: str                    # "instant" | "rapl" | "ina231"
+    update_period: float = 0.0   # rapl counter quantum [s]
+    window: float = 0.0          # ina231 averaging window [s]
+    min_period: float = 0.0      # instrument's fastest supported period [s]
 
 
 class _TraceSensorBase:
@@ -62,6 +88,13 @@ class InstantTraceSensor(_TraceSensorBase):
     def read(self, t):
         return self.tl.power_at(t)
 
+    @classmethod
+    def make_spec(cls) -> SensorSpec:
+        return SensorSpec(kind="instant")
+
+    def spec(self) -> SensorSpec:
+        return self.make_spec()
+
 
 class RaplTraceSensor(_TraceSensorBase):
     """Integrating energy counter, differenced between consecutive samples.
@@ -71,10 +104,23 @@ class RaplTraceSensor(_TraceSensorBase):
     counter updating once per ``update_period`` (1 ms on Sandy Bridge).
     """
 
-    def __init__(self, timeline: Timeline, update_period: float = 1e-3):
+    DEFAULT_UPDATE_PERIOD = 1e-3    # Sandy Bridge counter refresh (§4.5)
+
+    def __init__(self, timeline: Timeline,
+                 update_period: float = DEFAULT_UPDATE_PERIOD):
         super().__init__(timeline)
         self.update_period = update_period
         self.min_period = update_period
+
+    @classmethod
+    def make_spec(cls, update_period: float | None = None) -> SensorSpec:
+        if update_period is None:
+            update_period = cls.DEFAULT_UPDATE_PERIOD
+        return SensorSpec(kind="rapl", update_period=update_period,
+                          min_period=update_period)
+
+    def spec(self) -> SensorSpec:
+        return self.make_spec(self.update_period)
 
     def read_many(self, times: np.ndarray) -> np.ndarray:
         """Vectorized differencing over an increasing sample-time array."""
@@ -94,10 +140,21 @@ class RaplTraceSensor(_TraceSensorBase):
 class Ina231TraceSensor(_TraceSensorBase):
     """Window-averaged power meter (TI INA231 semantics, §4.5)."""
 
-    def __init__(self, timeline: Timeline, window: float = 280e-6):
+    DEFAULT_WINDOW = 280e-6         # minimum feasible INA231 window (§4.5)
+
+    def __init__(self, timeline: Timeline, window: float = DEFAULT_WINDOW):
         super().__init__(timeline)
         self.window = window
         self.min_period = window
+
+    @classmethod
+    def make_spec(cls, window: float | None = None) -> SensorSpec:
+        if window is None:
+            window = cls.DEFAULT_WINDOW
+        return SensorSpec(kind="ina231", window=window, min_period=window)
+
+    def spec(self) -> SensorSpec:
+        return self.make_spec(self.window)
 
     def read(self, t):
         t = np.asarray(t, dtype=np.float64)

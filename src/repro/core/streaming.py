@@ -68,6 +68,23 @@ class StreamingAggregator:
         self.psum = np.zeros(num_regions, dtype=np.float64)
         self.psumsq = np.zeros(num_regions, dtype=np.float64)
 
+    @classmethod
+    def from_statistics(cls, counts, psum, psumsq, *,
+                        aggregate_fn: AggregateFn | None = None
+                        ) -> "StreamingAggregator":
+        """Wrap pre-aggregated sufficient statistics in an aggregator.
+
+        Entry point for the fused device pipeline
+        (:mod:`repro.core.device_pipeline`): its final carry lands here so
+        merge/exchange/estimates compose identically to host-folded runs.
+        """
+        counts = np.asarray(counts, dtype=np.int64)
+        agg = cls(len(counts), aggregate_fn=aggregate_fn)
+        agg.counts += counts
+        agg.psum += np.asarray(psum, dtype=np.float64)
+        agg.psumsq += np.asarray(psumsq, dtype=np.float64)
+        return agg
+
     @property
     def num_regions(self) -> int:
         return len(self.counts)
@@ -240,6 +257,18 @@ class StreamingCombinationAggregator:
     def __init__(self, *, aggregate_fn: AggregateFn | None = None):
         self.interner = CombinationInterner()
         self.agg = StreamingAggregator(0, aggregate_fn=aggregate_fn)
+
+    @classmethod
+    def from_table(cls, combo_matrix: np.ndarray, counts: np.ndarray,
+                   psum: np.ndarray, psumsq: np.ndarray, *,
+                   aggregate_fn: AggregateFn | None = None
+                   ) -> "StreamingCombinationAggregator":
+        """Build from a key table + statistics (device-pipeline results,
+        deserialized shards): ids are assigned in the table's row order,
+        so a table in interner order round-trips exactly."""
+        agg = cls(aggregate_fn=aggregate_fn)
+        agg.merge_table(combo_matrix, counts, psum, psumsq)
+        return agg
 
     @property
     def n_total(self) -> int:

@@ -111,6 +111,18 @@ class Timeline:
                         np.tile(self.durations, reps),
                         np.tile(self.powers, reps), self.names)
 
+    def to_device(self):
+        """Upload as a single-worker :class:`DeviceTimeline` substrate.
+
+        Entry to the fused device-resident sampling pipeline
+        (:mod:`repro.core.device_pipeline`): interval ends, the cumulative
+        energy integral, powers, and region ids become device arrays so an
+        arbitrarily long sampling run never touches these host arrays
+        again. Imported lazily so numpy-only consumers never pay for jax.
+        """
+        from repro.core.device_pipeline import DeviceTimeline
+        return DeviceTimeline.from_timelines([self])
+
 
 def ground_truth(tl: Timeline) -> dict[str, dict[str, float]]:
     """Exact per-region time/energy/power (the 'direct measurement').

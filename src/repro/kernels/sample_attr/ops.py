@@ -6,9 +6,18 @@ estimator's pluggable aggregation interface.
 
 Streaming path: ``chunked_aggregate_fn`` returns an AggregateFn whose
 underlying ``pallas_call`` jit is cached by (block_n, block_r, num_regions)
-via :func:`sample_attr_chunk` — chunks are padded host-side to a fixed
-capacity so every chunk of a stream hits the same compiled executable
-(one trace per configuration, not one per chunk length).
+via :func:`sample_attr_chunk` — short chunks are topped up in a
+preallocated scratch buffer (two small copies, no per-chunk allocation) so
+every chunk of a stream hits the same compiled executable (one trace per
+configuration, not one per chunk length).
+
+Fused device pipeline: :func:`make_carry_update` is the reduction seam of
+:mod:`repro.core.device_pipeline` — a traceable function folding one
+masked fixed-shape chunk *into* the pipeline's device-resident
+(counts, Σpow, Σpow²) carry. On TPU it routes through the Pallas one-hot
+matmul kernel (mask → ``-1`` ids, which match no one-hot column); on CPU
+it lowers to the equivalent scatter-add (compiled XLA, not interpret
+mode) with masked lanes dropped via an out-of-bounds index.
 """
 
 from __future__ import annotations
@@ -69,13 +78,18 @@ def chunked_aggregate_fn(chunk_capacity: int = 16 * DEFAULT_BLOCK_N, *,
                          interpret: bool | None = None):
     """AggregateFn for ``StreamingAggregator``: fixed-capacity Pallas chunks.
 
-    Chunks (≤ ``chunk_capacity`` samples) are padded host-side with
-    region_id = -1 (zero one-hot rows) to the fixed capacity, so every
-    update reuses one compiled kernel. Oversized chunks are folded in
-    capacity-sized slices.
+    Short chunks (< ``chunk_capacity`` samples) are topped up in a
+    preallocated scratch buffer with region_id = -1 (zero one-hot rows),
+    so every update reuses one compiled kernel without allocating — two
+    small copies into the scratch instead of four fresh arrays per chunk.
+    Oversized chunks are folded in capacity-sized slices. The returned
+    closure owns its scratch, so it is not safe to share one aggregate fn
+    across threads (each ``StreamingAggregator`` should get its own).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    scratch_ids = np.full(chunk_capacity, -1, np.int32)
+    scratch_pw = np.zeros(chunk_capacity, np.float32)
 
     def agg(region_ids, powers, num_regions):
         # Quantize the region axis to the next power of two (≥64) so a
@@ -92,13 +106,78 @@ def chunked_aggregate_fn(chunk_capacity: int = 16 * DEFAULT_BLOCK_N, *,
         for lo in range(0, len(ids), chunk_capacity):
             ids_c = ids[lo:lo + chunk_capacity]
             pw_c = pw[lo:lo + chunk_capacity]
-            pad = chunk_capacity - len(ids_c)
-            if pad:
-                ids_c = np.concatenate([ids_c, np.full(pad, -1, np.int32)])
-                pw_c = np.concatenate([pw_c, np.zeros(pad, np.float32)])
+            n_c = len(ids_c)
+            if n_c < chunk_capacity:
+                scratch_ids[:n_c] = ids_c
+                scratch_ids[n_c:] = -1
+                scratch_pw[:n_c] = pw_c
+                scratch_pw[n_c:] = 0.0
+                ids_c, pw_c = scratch_ids, scratch_pw
             c, s, sq = fn(ids_c, pw_c)
+            # np.asarray blocks until the kernel has consumed its inputs,
+            # so reusing the scratch on the next slice is safe.
             counts += np.asarray(c).astype(np.int64)[:num_regions]
             psum += np.asarray(s, np.float64)[:num_regions]
             psumsq += np.asarray(sq, np.float64)[:num_regions]
         return counts, psum, psumsq
     return agg
+
+
+def make_carry_update(num_regions: int, *, use_pallas: bool | None = None,
+                      block_n: int = DEFAULT_BLOCK_N,
+                      block_r: int | None = None):
+    """Traceable masked chunk→carry reduction for the fused device pipeline.
+
+    Returns ``update(counts, psum, psumsq, ids, pows, valid)`` folding one
+    fixed-shape chunk into the carry under a validity mask (lanes past the
+    profiled horizon contribute nothing). Carry dtypes are preserved —
+    int64/float64 accumulation on CPU (under x64), the kernel's float32
+    per-chunk statistics added into the wider carry on TPU.
+
+    ``use_pallas`` defaults to backend dispatch: the Pallas one-hot matmul
+    on TPU, an XLA scatter-add elsewhere (compiled, not interpret mode —
+    interpret would put a Python loop back on the per-chunk path).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+
+    if use_pallas:
+        def update(counts, psum, psumsq, ids, pows, valid):
+            ids_m = jnp.where(valid, ids, -1).astype(jnp.int32)
+            pw_m = jnp.where(valid, pows, 0.0).astype(jnp.float32)
+            c, s, sq = sample_attr_pallas(ids_m, pw_m, num_regions,
+                                          block_n=block_n, block_r=block_r,
+                                          interpret=False)
+            return (counts + c.astype(counts.dtype),
+                    psum + s.astype(psum.dtype),
+                    psumsq + sq.astype(psumsq.dtype))
+        return update
+
+    if num_regions <= 128:
+        # Small region spaces: the same one-hot matmul the Pallas kernel
+        # runs on the MXU, as one stacked [3, c] @ [c, R] GEMM — counts
+        # stay exact (integer-valued f64 sums), and XLA CPU parallelizes
+        # dots where scatter is a serial loop.
+        def update(counts, psum, psumsq, ids, pows, valid):
+            ids_m = jnp.where(valid, ids, -1)
+            onehot = (ids_m[:, None]
+                      == jnp.arange(num_regions)[None, :]).astype(psum.dtype)
+            # Mask pw explicitly: the all-zero one-hot row alone would
+            # turn a nonfinite masked-lane power into 0·inf = NaN.
+            pw = jnp.where(valid, pows, 0.0).astype(psum.dtype)
+            stats = jnp.stack([valid.astype(psum.dtype), pw, pw * pw]) @ \
+                onehot
+            return (counts + stats[0].astype(counts.dtype),
+                    psum + stats[1], psumsq + stats[2])
+        return update
+
+    def update(counts, psum, psumsq, ids, pows, valid):
+        # Invalid lanes scatter to index R, which is out of bounds for the
+        # [R] carry and dropped — no branch, no extra dump slot to slice.
+        idx = jnp.where(valid, ids, num_regions)
+        pw = pows.astype(psum.dtype)
+        counts = counts.at[idx].add(jnp.ones((), counts.dtype), mode="drop")
+        psum = psum.at[idx].add(pw, mode="drop")
+        psumsq = psumsq.at[idx].add(pw * pw, mode="drop")
+        return counts, psum, psumsq
+    return update

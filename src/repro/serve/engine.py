@@ -193,6 +193,11 @@ class Engine:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
     def add_request(self, req: Request) -> bool:
+        if len(req.prompt) == 0:
+            # Without at least one prompt token there are no logits to
+            # sample the first output token from (and the teacher-forced
+            # prefill loop below would leave `logits` unbound).
+            raise ValueError(f"request {req.rid}: empty prompt")
         slots = self._free_slots()
         if not slots:
             return False

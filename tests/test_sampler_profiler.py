@@ -159,6 +159,36 @@ def test_host_session_smoke():
     assert busy.p_hat > 0.2
 
 
+def test_host_sampler_period_tracks_deadline_despite_read_cost():
+    """Absolute-deadline scheduling: the achieved mean period tracks the
+    configured one even when read() itself costs a large fraction of the
+    period (naive sleep-after-read would stretch every period by the full
+    read cost — here +50%)."""
+    from repro.core.sampler import HostSampler, RegionMarker
+
+    period, read_cost = 20e-3, 10e-3
+
+    class SlowSensor:
+        min_period = 0.0
+
+        def read(self):
+            time.sleep(read_cost)
+            return 42.0
+
+    sampler = HostSampler(RegionMarker(), SlowSensor(), period=period,
+                          jitter=0.0)
+    with sampler:
+        time.sleep(1.0)
+    rids, _pows = sampler.drain()
+    n = len(rids)
+    assert n >= 5
+    achieved = sampler.elapsed / n
+    # Generous upper bound for loaded CI hosts; the pre-fix behavior sat
+    # at >= period + read_cost = 1.5x and must fail this.
+    assert achieved == pytest.approx(period, rel=0.35)
+    assert achieved < period + 0.8 * read_cost
+
+
 def test_process_activity_sensor_reacts():
     s = ProcessActivitySensor()
     s.read()

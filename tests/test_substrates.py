@@ -245,3 +245,18 @@ def test_engine_serves_requests():
     done = eng.run_until_drained(reqs)
     assert len(done) == 3
     assert all(len(r.out_tokens) == 4 for r in done)
+
+
+def test_engine_rejects_empty_prompt():
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    from repro.serve.engine import Engine, Request, ServeConfig
+    eng = Engine(cfg, params, ServeConfig(max_batch=2, max_len=64,
+                                          eos_token=-1))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.add_request(Request(rid=0, prompt=np.zeros(0, np.int32)))
+    # The engine stays usable: the bad request claimed no slot.
+    ok = eng.add_request(Request(rid=1,
+                                 prompt=np.array([1, 2, 3], np.int32),
+                                 max_new_tokens=2))
+    assert ok and eng.slot_req[0] is not None
