@@ -13,7 +13,7 @@ import sys
 def main() -> None:
     from benchmarks import (aggregation, exchange, kernels, kmeans_hotspot,
                             memory_power, ocean_finegrain, pipeline,
-                            sampling_period, validation)
+                            sampling_period, spill, validation)
     mods = [
         ("sampling_period (Fig 4/5)", sampling_period),
         ("validation (Fig 6 / §5)", validation),
@@ -23,6 +23,7 @@ def main() -> None:
         ("kernels (Pallas microbench)", kernels),
         ("aggregation (streaming engine)", aggregation),
         ("exchange (cross-host shard reduction)", exchange),
+        ("spill (full vs incremental delta publishing)", spill),
         ("pipeline (device-resident fused sampling)", pipeline),
     ]
     all_rows = ["name,us_per_call,derived"]

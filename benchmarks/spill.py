@@ -1,0 +1,129 @@
+"""Spill-path benchmark: full re-publish vs incremental delta spills.
+
+The serving accountant publishes its shard every epoch; the cost that
+matters for always-on fleet monitoring is *bytes written per epoch* at
+steady state (ALEA's ~1% overhead budget — see PAPERS: "What Is the Cost
+of Energy Monitoring?"). This benchmark drives one host through
+``ALEA_BENCH_SPILL_EPOCHS`` (default 10³) epochs over a combination
+table of ``ALEA_BENCH_SPILL_ROWS`` (default 10⁴) distinct rows, with a
+small per-epoch sample batch (the steady-state regime: most rows
+untouched each epoch), in both modes:
+
+* ``full`` — ``spill_shard`` rewrites the whole table every epoch;
+* ``delta`` — ``ShardSpiller`` publishes changed rows only, compacting
+  every 64 epochs.
+
+Emits CSV rows plus ``BENCH_spill.json`` with bytes/epoch (mean and
+delta-steady-state), wall time/epoch, and the full/delta ratios.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core import exchange as ex
+from repro.core.streaming import StreamingCombinationAggregator
+
+_JSON_PATH = pathlib.Path(__file__).with_name("BENCH_spill.json")
+
+COMPACT_EVERY = 64
+
+
+def _dir_bytes(d: str) -> int:
+    total = 0
+    for root, _dirs, files in os.walk(d):
+        for f in files:
+            total += os.path.getsize(os.path.join(root, f))
+    return total
+
+
+def _seed_aggregator(rows: int) -> StreamingCombinationAggregator:
+    """An aggregator pre-populated with exactly ``rows`` distinct
+    combination rows (the long-running-host steady state)."""
+    side = int(np.ceil(np.sqrt(rows)))
+    a, b = np.meshgrid(np.arange(side), np.arange(side))
+    mat = np.stack([a.ravel(), b.ravel()], 1)[:rows].astype(np.int64)
+    agg = StreamingCombinationAggregator()
+    agg.update(mat, np.full(rows, 100.0))
+    return agg
+
+
+def _run_mode(mode: str, epochs: int, rows: int, batch: int, seed: int):
+    """Returns (bytes_per_epoch list, total_seconds)."""
+    rng = np.random.default_rng(seed)
+    agg = _seed_aggregator(rows)
+    side = int(np.ceil(np.sqrt(rows)))
+    d = tempfile.mkdtemp(prefix=f"bench_spill_{mode}_")
+    per_epoch = []
+    try:
+        spiller = ex.ShardSpiller(d, 0, mode=mode,
+                                  compact_every=COMPACT_EVERY)
+        t0 = time.perf_counter()
+        for e in range(1, epochs + 1):
+            # steady state: a small batch touches ~batch distinct rows
+            mat = rng.integers(0, side, (batch, 2)).astype(np.int64)
+            pows = rng.integers(50 * 64, 200 * 64, batch) / 64.0
+            agg.update(mat, pows)
+            out = spiller.spill(agg, e)
+            per_epoch.append(_dir_bytes(out))
+        total = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    return per_epoch, total
+
+
+def run(verbose: bool = True) -> list[str]:
+    epochs = int(os.environ.get("ALEA_BENCH_SPILL_EPOCHS", 1000))
+    rows = int(os.environ.get("ALEA_BENCH_SPILL_ROWS", 10_000))
+    batch = int(os.environ.get("ALEA_BENCH_SPILL_BATCH", 256))
+
+    record: dict = {"epochs": epochs, "rows": rows,
+                    "batch_per_epoch": batch,
+                    "compact_every": COMPACT_EVERY}
+    out_rows: list[tuple[str, float, str]] = []
+    stats = {}
+    for mode in ("full", "delta"):
+        per_epoch, total = _run_mode(mode, epochs, rows, batch, seed=0)
+        arr = np.asarray(per_epoch, np.float64)
+        # delta steady state = the non-compaction epochs (bases recur
+        # every COMPACT_EVERY and are amortized into the mean)
+        steady = float(np.median(arr))
+        stats[mode] = {"bytes_per_epoch_mean": float(arr.mean()),
+                       "bytes_per_epoch_steady": steady,
+                       "bytes_total": float(arr.sum()),
+                       "sec_per_epoch": total / epochs,
+                       "sec_total": total}
+        out_rows.append((f"spill/{mode}", total / epochs * 1e6,
+                         f"{arr.mean() / 1024:.1f} KiB/epoch mean "
+                         f"{steady / 1024:.1f} KiB steady"))
+    record["full"] = stats["full"]
+    record["delta"] = stats["delta"]
+    record["ratio_bytes_mean"] = (stats["full"]["bytes_per_epoch_mean"]
+                                  / stats["delta"]["bytes_per_epoch_mean"])
+    record["ratio_bytes_steady_state"] = (
+        stats["full"]["bytes_per_epoch_steady"]
+        / stats["delta"]["bytes_per_epoch_steady"])
+    record["ratio_sec"] = (stats["full"]["sec_per_epoch"]
+                           / stats["delta"]["sec_per_epoch"])
+    out_rows.append(("spill/ratio_steady", 0.0,
+                     f"{record['ratio_bytes_steady_state']:.1f}x fewer "
+                     f"bytes/epoch (delta vs full)"))
+
+    _JSON_PATH.write_text(json.dumps(record, indent=2))
+    if verbose:
+        for nm, us, d_ in out_rows:
+            print(f"{nm:40s} {us:12.1f}us {d_}")
+        print(f"wrote {_JSON_PATH}")
+    return [csv_row(nm, us, d_) for nm, us, d_ in out_rows]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Fast syntax gate: fail on syntax-level breakage in seconds, before the
+# ~3-minute tier-1 pytest suite spins up.
+#
+#   scripts/lint.sh
+#
+# 1. python -m compileall — byte-compiles every file under src/ tests/
+#    benchmarks/ scripts/ examples/ (catches SyntaxError, including ones
+#    pytest would only hit on import of a late-collected module).
+# 2. pyflakes (if installed) — undefined names, unused/shadowed imports,
+#    f-string mistakes. Skipped with a notice when unavailable: the
+#    container image does not bake it in, and this gate must not
+#    install anything.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== compileall =="
+python -m compileall -q -f src tests benchmarks scripts examples
+
+if python -c "import pyflakes" 2>/dev/null; then
+    echo "== pyflakes =="
+    python -m pyflakes src tests benchmarks scripts examples
+else
+    echo "== pyflakes not installed; skipping (compileall gate only) =="
+fi
+
+echo "lint OK"

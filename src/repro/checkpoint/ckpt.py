@@ -40,7 +40,8 @@ import jax
 import numpy as np
 
 __all__ = ["save", "restore", "latest_step", "AsyncCheckpointer",
-           "write_manifest_dir", "read_manifest_dir", "publish_latest"]
+           "write_manifest_dir", "read_manifest_dir", "read_manifest_meta",
+           "publish_latest"]
 
 
 def _flatten(tree: Any):
@@ -104,10 +105,20 @@ def write_manifest_dir(final: str, arrays: Sequence[np.ndarray],
 
 def read_manifest_dir(d: str) -> tuple[list[np.ndarray], dict]:
     """Load (arrays, manifest) from a published dir, verifying every CRC."""
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = read_manifest_meta(d)
     arrays = [_read_leaf(d, meta) for meta in manifest["leaves"]]
     return arrays, manifest
+
+
+def read_manifest_meta(d: str) -> dict:
+    """Manifest JSON of a published dir alone — no array I/O.
+
+    The cheap half of the protocol: delta-chain walkers and shard-meta
+    readers (:mod:`repro.core.exchange`) inspect epoch linkage and caller
+    ``extra`` state without paying for (or CRC-checking) the leaves.
+    """
+    with open(os.path.join(d, "manifest.json")) as f:
+        return json.load(f)
 
 
 def publish_latest(path: str, step: int) -> None:

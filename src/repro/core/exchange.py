@@ -41,14 +41,41 @@ Shard manifest schema (see ROADMAP "exchange formats"): arrays
 combination shards, ``combos`` int64[cap, width]; manifest ``meta`` keys
 ``kind`` ("region"|"combination"), ``host_id``, ``epoch``, ``n_rows``
 (valid prefix — rows past it are padding for fixed-shape collectives).
+
+**Incremental (delta) spills.** Republishing the full shard every epoch
+costs O(rows) bandwidth per epoch — O(run length · rows) per host over a
+long-running serving fleet. :class:`ShardSpiller` instead publishes a
+full *base* epoch, then per-epoch :class:`ShardDelta` records holding
+only the rows that changed (sufficient-statistic rows mutate in place
+and new combination rows append monotonically, so an epoch's difference
+is a row-sparse overlay plus a combo-row suffix). Every
+``compact_every``-th publish it *compacts*: rewrites a fresh full base
+and garbage-collects the now-unreachable epoch dirs, keeping the host
+directory O(compact window). Readers (:class:`DeltaChain`, used by
+:func:`restore_shard` and so :func:`gather_shards`) walk LATEST's
+``delta_of`` back-pointers to the base and fold ``base + Σ deltas`` into
+a :class:`PackedShard` — hosts publishing full shards and hosts
+publishing deltas mix freely under one gather. Changed rows store their
+*replacement* values, not arithmetic differences: int64 differencing
+would round-trip, but float64 ``prev + (cur - prev)`` does not, and the
+gather must stay bit-exact against the full-spill path. A crash between
+a delta publish and its compaction is safe: LATEST still names a valid
+chain, and compaction GC runs only after the fresh base is durable.
+
+Delta manifest schema: arrays ``idx`` int64[k] (changed-row indices),
+``counts`` int64[k] / ``psum``/``psumsq`` float64[k] (replacement values
+at those rows) and, for combination shards, ``combos_new``
+int64[n_rows - prev_rows, width] (appended key rows); meta adds
+``delta_of`` (the epoch this delta builds on), ``base_epoch`` (the chain
+base, for validation), and ``prev_rows``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 import re
+import shutil
 from typing import Sequence
 
 import numpy as np
@@ -63,6 +90,8 @@ __all__ = [
     "collective_reduce", "spill_shard", "restore_shard",
     "read_shard_meta", "gather_shards", "list_spilled_hosts",
     "tree_reduce", "CollectiveExchange", "CheckpointExchange",
+    "ShardDelta", "compute_shard_delta", "apply_shard_delta",
+    "spill_shard_delta", "DeltaChain", "ShardSpiller",
 ]
 
 # \d+ not \d{4}: the :04d dir format zero-pads but never truncates, so
@@ -284,25 +313,21 @@ def collective_reduce(shards: Sequence[StreamingAggregator |
 
 # -- checkpointed path ---------------------------------------------------------
 
+_EPOCH_DIR_RE = re.compile(r"^epoch_(\d+)$")
+
+
 def _host_dir(path: str, host_id: int) -> str:
     return os.path.join(path, f"host_{host_id:04d}")
 
 
-def spill_shard(path: str, host_id: int, epoch: int,
-                agg: StreamingAggregator | StreamingCombinationAggregator,
-                *, extra_meta: dict | None = None) -> str:
-    """Atomically publish one host's shard at ``epoch``.
+def _epoch_dir(hd: str, epoch: int) -> str:
+    return os.path.join(hd, f"epoch_{epoch:09d}")
 
-    Reuses the checkpoint manifest+CRC+rename protocol: a shard is never
-    half-visible, and per-host ``LATEST`` is only advanced after the
-    epoch directory is durable. ``extra_meta`` (JSON-serializable) rides
-    along under the manifest's ``"extra"`` key — callers stash run-scope
-    state a restarted host needs (e.g. elapsed wall time). Returns the
-    published directory.
-    """
+
+def _spill_packed(path: str, host_id: int, epoch: int, shard: PackedShard,
+                  *, extra_meta: dict | None = None) -> str:
     hd = _host_dir(path, host_id)
     os.makedirs(hd, exist_ok=True)
-    shard = pack_shard(agg)
     arrays = [shard.counts, shard.psum, shard.psumsq]
     meta = {"kind": shard.kind, "host_id": host_id, "epoch": epoch,
             "n_rows": shard.n_rows,
@@ -313,14 +338,33 @@ def spill_shard(path: str, host_id: int, epoch: int,
         arrays.append(shard.combos)
         meta["schema"] = meta["schema"] + ["combos"]
         meta["width"] = int(shard.combos.shape[1])
-    final = os.path.join(hd, f"epoch_{epoch:09d}")
+    final = _epoch_dir(hd, epoch)
     ckpt.write_manifest_dir(final, arrays, meta=meta)
     ckpt.publish_latest(hd, epoch)
     return final
 
 
+def spill_shard(path: str, host_id: int, epoch: int,
+                agg: StreamingAggregator | StreamingCombinationAggregator,
+                *, extra_meta: dict | None = None) -> str:
+    """Atomically publish one host's full shard at ``epoch``.
+
+    Reuses the checkpoint manifest+CRC+rename protocol: a shard is never
+    half-visible, and per-host ``LATEST`` is only advanced after the
+    epoch directory is durable. ``extra_meta`` (JSON-serializable) rides
+    along under the manifest's ``"extra"`` key — callers stash run-scope
+    state a restarted host needs (e.g. elapsed wall time). Returns the
+    published directory. For per-epoch publishing use a
+    :class:`ShardSpiller`, which spills incremental deltas instead of
+    rewriting the full shard every time.
+    """
+    return _spill_packed(path, host_id, epoch, pack_shard(agg),
+                         extra_meta=extra_meta)
+
+
 def _load_shard(hd: str, epoch: int) -> PackedShard:
-    d = os.path.join(hd, f"epoch_{epoch:09d}")
+    """Load one *full* epoch dir (no chain resolution)."""
+    d = _epoch_dir(hd, epoch)
     arrays, manifest = ckpt.read_manifest_dir(d)
     named = dict(zip(manifest["schema"], arrays))
     return PackedShard(counts=named["counts"].astype(np.int64),
@@ -334,14 +378,29 @@ def restore_shard(path: str, host_id: int, *,
     """(aggregator, epoch) from a host's LATEST spill, or None if absent.
 
     A restarted host calls this to resume accumulating from its last
-    durable state instead of re-sampling from zero.
+    durable state instead of re-sampling from zero. If LATEST names a
+    delta epoch, the full chain ``base + Σ deltas`` is folded
+    transparently (:class:`DeltaChain`), so full-spilling and
+    delta-spilling hosts are indistinguishable to readers.
+
+    Concurrent-compaction race: the writer may publish a fresh base and
+    GC the chain this reader just resolved from a now-stale LATEST. The
+    fold then fails mid-walk — re-reading LATEST finds the new (full)
+    base, so a couple of retries make the read lock-free.
     """
     hd = _host_dir(path, host_id)
-    epoch = ckpt.latest_step(hd)
-    if epoch is None:
-        return None
-    shard = _load_shard(hd, epoch)
-    return unpack_shard(shard, aggregate_fn=aggregate_fn), epoch
+    last_err = None
+    for _attempt in range(3):
+        epoch = ckpt.latest_step(hd)
+        if epoch is None:
+            return None
+        try:
+            shard = DeltaChain(hd, epoch).fold()
+        except IOError as e:
+            last_err = e
+            continue
+        return unpack_shard(shard, aggregate_fn=aggregate_fn), epoch
+    raise last_err
 
 
 def read_shard_meta(path: str, host_id: int) -> dict | None:
@@ -353,9 +412,7 @@ def read_shard_meta(path: str, host_id: int) -> dict | None:
     epoch = ckpt.latest_step(hd)
     if epoch is None:
         return None
-    d = os.path.join(hd, f"epoch_{epoch:09d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        return json.load(f)
+    return ckpt.read_manifest_meta(_epoch_dir(hd, epoch))
 
 
 def list_spilled_hosts(path: str) -> list[int]:
@@ -412,6 +469,329 @@ def gather_shards(path: str, *, aggregate_fn: AggregateFn | None = None):
     return tree_reduce(aggs)
 
 
+# -- incremental (delta) spills ------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardDelta:
+    """Row-sparse difference between two published states of one shard.
+
+    ``idx`` lists the rows whose sufficient statistics changed since the
+    ``prev_rows``-row predecessor (including all appended rows); the
+    parallel ``counts``/``psum``/``psumsq`` arrays hold those rows'
+    *replacement* values. Replacement, not arithmetic difference, is what
+    keeps a folded chain bit-exact vs. a full spill: int64 differences
+    would round-trip, but float64 ``prev + (cur - prev)`` loses ulps.
+    ``combos_new`` carries the appended combination key rows
+    (``None`` for region shards) — the interner assigns ids in
+    first-appearance order and never reorders, so append-only suffices.
+    """
+
+    idx: np.ndarray               # int64 [k] changed-row indices
+    counts: np.ndarray            # int64 [k] replacement values at idx
+    psum: np.ndarray              # float64 [k]
+    psumsq: np.ndarray            # float64 [k]
+    n_rows: int                   # rows after applying
+    prev_rows: int                # rows in the state this builds on
+    combos_new: np.ndarray | None = None   # int64 [n_rows-prev_rows, width]
+
+    @property
+    def kind(self) -> str:
+        return KIND_REGION if self.combos_new is None else KIND_COMBINATION
+
+
+def compute_shard_delta(prev: PackedShard, cur: PackedShard) -> ShardDelta:
+    """Row-sparse delta taking ``prev`` to ``cur``.
+
+    Requires append-only evolution: ``cur``'s first ``prev.n_rows``
+    combination key rows must equal ``prev``'s (statistics may change
+    freely). Raises ``ValueError`` otherwise — writers fall back to a
+    fresh full base in that case.
+    """
+    if (prev.combos is None) != (cur.combos is None):
+        raise ValueError("shard kind changed between epochs")
+    n0, n1 = prev.n_rows, cur.n_rows
+    if n1 < n0:
+        raise ValueError(f"shard shrank: {n1} < {n0} rows")
+    if cur.combos is not None and n0:
+        if prev.combos.shape[1] != cur.combos.shape[1]:
+            raise ValueError("worker width changed between epochs")
+        if not np.array_equal(prev.combos[:n0], cur.combos[:n0]):
+            raise ValueError("combination key rows are not append-only")
+    changed = ((cur.counts[:n0] != prev.counts[:n0])
+               | (cur.psum[:n0] != prev.psum[:n0])
+               | (cur.psumsq[:n0] != prev.psumsq[:n0]))
+    idx = np.concatenate([np.flatnonzero(changed),
+                          np.arange(n0, n1)]).astype(np.int64)
+    combos_new = None
+    if cur.combos is not None:
+        combos_new = np.array(cur.combos[n0:n1], dtype=np.int64)
+    return ShardDelta(idx=idx,
+                      counts=np.asarray(cur.counts, np.int64)[idx],
+                      psum=np.asarray(cur.psum, np.float64)[idx],
+                      psumsq=np.asarray(cur.psumsq, np.float64)[idx],
+                      n_rows=n1, prev_rows=n0, combos_new=combos_new)
+
+
+def _grow_1d(arr: np.ndarray, n: int, dtype) -> np.ndarray:
+    out = np.zeros(n, dtype)
+    out[:len(arr)] = arr
+    return out
+
+
+def apply_shard_delta(shard: PackedShard, delta: ShardDelta) -> PackedShard:
+    """Fold one delta onto a folded shard state (chain-validating)."""
+    if delta.prev_rows != shard.n_rows:
+        raise IOError(f"delta chain mismatch: delta builds on "
+                      f"{delta.prev_rows} rows, folded state has "
+                      f"{shard.n_rows}")
+    if (shard.combos is None) != (delta.combos_new is None):
+        raise IOError(f"delta chain mismatch: {delta.kind} delta over a "
+                      f"{shard.kind} base")
+    n1 = delta.n_rows
+    if delta.idx.size and int(delta.idx.max()) >= n1:
+        # CRC only covers bytes; a structurally corrupt delta must fail
+        # with the same diagnostic class as every other malformation
+        # (restore_shard's retry loop catches IOError, not IndexError).
+        raise IOError(f"delta row index {int(delta.idx.max())} out of "
+                      f"bounds for {n1} rows")
+    counts = _grow_1d(shard.counts[:shard.n_rows], n1, np.int64)
+    psum = _grow_1d(shard.psum[:shard.n_rows], n1, np.float64)
+    psumsq = _grow_1d(shard.psumsq[:shard.n_rows], n1, np.float64)
+    counts[delta.idx] = delta.counts
+    psum[delta.idx] = delta.psum
+    psumsq[delta.idx] = delta.psumsq
+    combos = None
+    if shard.combos is not None:
+        new = delta.combos_new
+        if len(new) != n1 - shard.n_rows:
+            raise IOError(f"delta appends {len(new)} combo rows; header "
+                          f"says {n1 - shard.n_rows}")
+        if shard.n_rows == 0:
+            combos = np.array(new, dtype=np.int64)
+        elif len(new) == 0:
+            combos = shard.combos[:shard.n_rows]
+        else:
+            if new.shape[1] != shard.combos.shape[1]:
+                raise IOError("worker width changed mid-chain")
+            combos = np.vstack([shard.combos[:shard.n_rows], new])
+    return PackedShard(counts=counts, psum=psum, psumsq=psumsq,
+                       n_rows=n1, combos=combos)
+
+
+def spill_shard_delta(path: str, host_id: int, epoch: int,
+                      delta: ShardDelta, *, delta_of: int, base_epoch: int,
+                      extra_meta: dict | None = None) -> str:
+    """Atomically publish one incremental delta epoch.
+
+    Same manifest+CRC+rename protocol as full spills; the manifest links
+    the chain via ``delta_of`` (the epoch this builds on) and
+    ``base_epoch`` (the chain's full base, validated by readers).
+    """
+    hd = _host_dir(path, host_id)
+    os.makedirs(hd, exist_ok=True)
+    arrays = [delta.idx, delta.counts, delta.psum, delta.psumsq]
+    meta = {"kind": delta.kind, "host_id": host_id, "epoch": epoch,
+            "n_rows": delta.n_rows, "prev_rows": delta.prev_rows,
+            "delta_of": int(delta_of), "base_epoch": int(base_epoch),
+            "schema": ["idx", "counts", "psum", "psumsq"]}
+    if extra_meta:
+        meta["extra"] = dict(extra_meta)
+    if delta.combos_new is not None:
+        arrays.append(delta.combos_new)
+        meta["schema"] = meta["schema"] + ["combos_new"]
+        meta["width"] = int(delta.combos_new.shape[1])
+    final = _epoch_dir(hd, epoch)
+    ckpt.write_manifest_dir(final, arrays, meta=meta)
+    ckpt.publish_latest(hd, epoch)
+    return final
+
+
+def _load_delta(hd: str, epoch: int) -> ShardDelta:
+    d = _epoch_dir(hd, epoch)
+    arrays, manifest = ckpt.read_manifest_dir(d)
+    named = dict(zip(manifest["schema"], arrays))
+    return ShardDelta(idx=named["idx"].astype(np.int64),
+                      counts=named["counts"].astype(np.int64),
+                      psum=named["psum"], psumsq=named["psumsq"],
+                      n_rows=int(manifest["n_rows"]),
+                      prev_rows=int(manifest["prev_rows"]),
+                      combos_new=named.get("combos_new"))
+
+
+class DeltaChain:
+    """Reader for one host's published epoch chain.
+
+    Walks ``delta_of`` back-pointers from ``epoch`` (normally LATEST)
+    down to the full base, validating linkage as it goes: every link
+    must exist (a GC'd or never-published epoch breaks the chain), every
+    delta must name the same ``base_epoch``, and folding re-checks row
+    monotonicity and kind/width consistency. A chain rooted at a full
+    epoch of length 1 is the degenerate (pre-delta) format, so readers
+    handle both transparently.
+    """
+
+    def __init__(self, host_dir: str, epoch: int):
+        self.host_dir = host_dir
+        self.epoch = epoch
+        links: list[tuple[int, dict]] = []
+        e, seen = epoch, set()
+        while True:
+            if e in seen:
+                raise IOError(f"delta chain cycle at epoch {e} under "
+                              f"{host_dir}")
+            seen.add(e)
+            try:
+                meta = ckpt.read_manifest_meta(_epoch_dir(host_dir, e))
+            except FileNotFoundError:
+                raise IOError(
+                    f"broken delta chain under {host_dir}: epoch {e} is "
+                    f"missing (garbage-collected or never published)")
+            links.append((e, meta))
+            if meta.get("delta_of") is None:
+                break
+            e = int(meta["delta_of"])
+        self._links = links[::-1]          # base first, LATEST last
+        self.base_epoch = self._links[0][0]
+        kinds = {m.get("kind") for _, m in self._links}
+        if len(kinds) != 1:
+            raise IOError(f"mixed shard kinds in one chain: {sorted(kinds)}")
+        for e_, m in self._links[1:]:
+            if int(m.get("base_epoch", -1)) != self.base_epoch:
+                raise IOError(
+                    f"delta epoch {e_} names base "
+                    f"{m.get('base_epoch')}; chain resolves to "
+                    f"{self.base_epoch}")
+
+    @property
+    def epochs(self) -> list[int]:
+        """Chain epochs, base first."""
+        return [e for e, _ in self._links]
+
+    @property
+    def latest_meta(self) -> dict:
+        return self._links[-1][1]
+
+    def fold(self) -> PackedShard:
+        """``base + Σ deltas`` → the full shard state at ``self.epoch``."""
+        shard = _load_shard(self.host_dir, self._links[0][0])
+        for e, _meta in self._links[1:]:
+            shard = apply_shard_delta(shard, _load_delta(self.host_dir, e))
+        return shard
+
+
+def _copy_shard(s: PackedShard) -> PackedShard:
+    """Deep copy — spiller snapshots must not alias live accumulators."""
+    return PackedShard(
+        counts=np.array(s.counts, np.int64),
+        psum=np.array(s.psum, np.float64),
+        psumsq=np.array(s.psumsq, np.float64), n_rows=s.n_rows,
+        combos=None if s.combos is None else np.array(s.combos, np.int64))
+
+
+class ShardSpiller:
+    """Per-host durable publishing engine: incremental spills + compaction.
+
+    ``mode="delta"`` (default) publishes a full base first, then
+    row-sparse :class:`ShardDelta` epochs, and every ``compact_every``-th
+    publish rewrites a fresh base and garbage-collects the consumed
+    chain — steady-state spill bandwidth scales with rows *touched* per
+    epoch, and the host directory stays O(compact window) instead of
+    O(run length). ``mode="full"`` republishes the whole shard every
+    epoch (each publish also GCs the consumed predecessors — unlike the
+    bare :func:`spill_shard` free function, which leaves old epochs in
+    place). Readers retry around the GC window (see
+    :func:`restore_shard`), so neither mode blocks concurrent gathers.
+
+    Construction restores the on-disk chain (if any): ``resumed`` holds
+    the folded aggregator, ``resumed_meta`` the LATEST manifest, and
+    ``epoch`` the LATEST epoch — a host killed *anywhere* (mid-delta,
+    between a delta publish and its compaction, mid-compaction) resumes
+    from exactly what readers can see, so nothing is double-counted.
+    """
+
+    def __init__(self, path: str, host_id: int = 0, *, mode: str = "delta",
+                 compact_every: int = 16,
+                 aggregate_fn: AggregateFn | None = None):
+        if mode not in ("full", "delta"):
+            raise ValueError(f"unknown spill mode {mode!r}")
+        if compact_every < 1:
+            raise ValueError(f"compact_every must be >= 1; "
+                             f"got {compact_every}")
+        self.path = path
+        self.host_id = host_id
+        self.mode = mode
+        self.compact_every = compact_every
+        self._hd = _host_dir(path, host_id)
+        self.epoch = 0
+        self.resumed = None
+        self.resumed_meta: dict | None = None
+        self.resumed_dir: str | None = None    # LATEST epoch's directory
+        self._prev: PackedShard | None = None   # folded state at `epoch`
+        self._base_epoch: int | None = None
+        self._since_base = 0
+        latest = ckpt.latest_step(self._hd)
+        if latest is not None:
+            chain = DeltaChain(self._hd, latest)
+            self._prev = chain.fold()
+            self.epoch = latest
+            self._base_epoch = chain.base_epoch
+            self._since_base = len(chain.epochs) - 1
+            self.resumed = unpack_shard(self._prev,
+                                        aggregate_fn=aggregate_fn)
+            self.resumed_meta = chain.latest_meta
+            self.resumed_dir = _epoch_dir(self._hd, latest)
+
+    def spill(self, agg, epoch: int, extra_meta: dict | None = None) -> str:
+        """Publish ``agg``'s state as ``epoch`` (delta when profitable)."""
+        if self._prev is not None and epoch <= self.epoch:
+            raise ValueError(f"epoch {epoch} already published "
+                             f"(LATEST is {self.epoch})")
+        cur = _copy_shard(pack_shard(agg))
+        full = (self.mode == "full" or self._prev is None
+                or self._since_base + 1 >= self.compact_every)
+        delta = None
+        if not full:
+            try:
+                delta = compute_shard_delta(self._prev, cur)
+            except ValueError:
+                # Non-append-only evolution (kind/width change, shrink):
+                # a delta can't express it — publish a fresh base.
+                full = True
+        if full:
+            out = _spill_packed(self.path, self.host_id, epoch, cur,
+                                extra_meta=extra_meta)
+            self._gc_consumed(keep=epoch)
+            self._base_epoch = epoch
+            self._since_base = 0
+        else:
+            out = spill_shard_delta(self.path, self.host_id, epoch, delta,
+                                    delta_of=self.epoch,
+                                    base_epoch=self._base_epoch,
+                                    extra_meta=extra_meta)
+            self._since_base += 1
+        self._prev = cur
+        self.epoch = epoch
+        return out
+
+    def _gc_consumed(self, keep: int) -> None:
+        """Drop epoch dirs made unreachable by the fresh base ``keep``.
+
+        Runs only after ``keep`` is durable and LATEST points at it, so
+        a crash mid-GC leaves extra (ignored) dirs, never a broken
+        chain. ``.tmp-`` litter from crashed writers doesn't match the
+        epoch pattern and is left alone.
+        """
+        try:
+            names = os.listdir(self._hd)
+        except FileNotFoundError:
+            return
+        for name in names:
+            m = _EPOCH_DIR_RE.match(name)
+            if m and int(m.group(1)) != keep:
+                shutil.rmtree(os.path.join(self._hd, name),
+                              ignore_errors=True)
+
+
 # -- profiler strategies -------------------------------------------------------
 
 class CollectiveExchange:
@@ -445,23 +825,30 @@ class CheckpointExchange:
     every host's LATEST shard. ``resumed`` exposes the host's previous
     spill (if any) for *accumulating* callers that replay only the work
     after it; deterministic re-runs (the profiler) must ignore it — they
-    regenerate the full shard and republish LATEST idempotently.
+    regenerate the full shard and republish LATEST idempotently (in
+    delta mode, the republish is an empty delta epoch: the regenerated
+    state matches the restored chain row for row).
+
+    ``mode="delta"`` (default) publishes incremental epochs with
+    compaction every ``compact_every`` publishes; ``mode="full"``
+    rewrites the whole shard each epoch (see :class:`ShardSpiller`).
     """
 
     def __init__(self, path: str, host_id: int = 0, *,
-                 aggregate_fn: AggregateFn | None = None):
+                 aggregate_fn: AggregateFn | None = None,
+                 mode: str = "delta", compact_every: int = 16):
         self.path = path
         self.host_id = host_id
         self.aggregate_fn = aggregate_fn
-        self.epoch = 0
-        prev = restore_shard(path, host_id, aggregate_fn=aggregate_fn)
-        self.resumed = prev[0] if prev is not None else None
-        if prev is not None:
-            self.epoch = prev[1]
+        self._spiller = ShardSpiller(path, host_id, mode=mode,
+                                     compact_every=compact_every,
+                                     aggregate_fn=aggregate_fn)
+        self.resumed = self._spiller.resumed
+        self.epoch = self._spiller.epoch
 
     def spill(self, agg) -> str:
         self.epoch += 1
-        return spill_shard(self.path, self.host_id, self.epoch, agg)
+        return self._spiller.spill(agg, self.epoch)
 
     def reduce(self, agg):
         self.spill(agg)

@@ -216,8 +216,12 @@ class EnergyProfiler:
         so a restarted host re-produces its complete shard and the final
         spill republishes LATEST idempotently — the previous spill is
         deliberately NOT merged in (that would double-count every
-        sample). Incremental resume-from-spill is for accumulating
-        consumers (``PhaseEnergyAccountant``, direct ``restore_shard``).
+        sample). Under the checkpoint exchange's default delta mode the
+        idempotent republish is itself incremental: the regenerated
+        shard matches the restored chain row for row, so the new epoch
+        is an empty delta and gathers stay bit-exact. Incremental
+        resume-from-spill is for accumulating consumers
+        (``PhaseEnergyAccountant``, direct ``restore_shard``).
         """
         use_seed = self.seed if seed is None else seed
         if self._resolve_pipeline(pipeline, aggregate_fn):

@@ -193,26 +193,36 @@ def attention_prefill(p: Params, cfg: ModelConfig, x: jnp.ndarray,
 def attention_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
                      cache_k: jnp.ndarray, cache_v: jnp.ndarray,
                      cur_len: jnp.ndarray):
-    """One-token decode. x: [B,1,d]; cache_k/v: [B,KV,T,dh]; cur_len: [] int32
-    = number of valid positions already in the cache.
+    """One-token decode. x: [B,1,d]; cache_k/v: [B,KV,T,dh]; cur_len: [] or
+    [B] int32 = number of valid positions already in the cache, per row.
+
+    A scalar ``cur_len`` broadcasts to the whole batch (all rows at the
+    same depth — the dryrun/benchmark path). Continuous-batching callers
+    pass a [B] vector: each row's K/V is written at *its own* position
+    and attends under its own causal mask, so slots at different depths
+    share one decode step without corrupting each other's cache.
 
     Returns (y [B,1,d], new_cache_k, new_cache_v).
     """
     B, _, _ = x.shape
     T = cache_k.shape[2]
-    positions = jnp.broadcast_to(cur_len[None, None], (B, 1)).astype(jnp.int32)
+    cl = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
+    positions = cl[:, None]
     q, k, v = _project_qkv(p, cfg, x, positions)
 
-    # Write the new K/V at cur_len.
-    cache_k = jax.lax.dynamic_update_slice(
-        cache_k, k.astype(cache_k.dtype), (0, 0, cur_len, 0))
-    cache_v = jax.lax.dynamic_update_slice(
-        cache_v, v.astype(cache_v.dtype), (0, 0, cur_len, 0))
+    # Write each row's new K/V at that row's own position (a single
+    # scalar start index would leave gaps for shallow rows and overwrite
+    # live entries of deep ones under ragged slot lengths).
+    def _write_row(c, u, l):
+        return jax.lax.dynamic_update_slice(c, u, (0, l, 0))
+    cache_k = jax.vmap(_write_row)(cache_k, k.astype(cache_k.dtype), cl)
+    cache_v = jax.vmap(_write_row)(cache_v, v.astype(cache_v.dtype), cl)
     cache_k = constrain(cache_k, "batch", "kv_heads", "kv_seq", "head_dim")
     cache_v = constrain(cache_v, "batch", "kv_heads", "kv_seq", "head_dim")
 
     with region("attn_decode"):
-        valid = (jnp.arange(T)[None, None, None, :] <= cur_len)
+        valid = (jnp.arange(T)[None, None, None, :]
+                 <= cl[:, None, None, None])
         if cfg.decode_grouped and cfg.q_per_kv > 1:
             # Grouped form: contract q-groups directly against the raw
             # [B,KV,T,dh] cache — no head-repetition, so the cache is read

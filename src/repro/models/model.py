@@ -21,7 +21,8 @@ from repro.models.layers import (Params, embed_init, norm, norm_init,
                                  sinusoidal_positions)
 from repro.sharding.rules import constrain
 
-__all__ = ["init_params", "forward", "loss_fn", "init_cache", "decode_step"]
+__all__ = ["init_params", "forward", "loss_fn", "init_cache",
+           "decode_step", "reset_cache_slots"]
 
 
 def _compute_dtype(cfg: ModelConfig):
@@ -380,9 +381,61 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
+def _mask_cache(new: Params, old: Params, write_mask, batch_axis: int = 0):
+    """Keep ``old`` cache rows where ``write_mask`` [B] is False.
+
+    Slot-masked cache updates for continuous batching: a teacher-forced
+    prefill of one slot runs the whole-batch decode step, and without the
+    mask every *other* slot's KV entries (and recurrent SSM/xLSTM state,
+    which advances on every call regardless of position) would be
+    stomped at the prefilled positions.
+    """
+    if write_mask is None:
+        return new
+
+    def sel(n, o):
+        shape = [1] * n.ndim
+        shape[batch_axis] = n.shape[batch_axis]
+        return jnp.where(write_mask.reshape(shape), n, o)
+    return jax.tree.map(sel, new, old)
+
+
+def reset_cache_slots(cfg: ModelConfig, cache: Params,
+                      slot_mask: jax.Array) -> Params:
+    """Zero the cache state of every True row of ``slot_mask`` [B].
+
+    Slot admission for continuous batching: every cache family
+    initializes to zeros, so re-zeroing a slot's rows restores it to
+    init-time state. KV caches don't strictly need it (prefill rewrites
+    positions 0.. under a causal mask), but recurrent SSM/xLSTM state is
+    *input* to the next step — a reused slot would otherwise seed the
+    new request with its previous occupant's final state.
+    """
+    del cfg
+    # Every top-level cache group stacks layers ahead of batch; zamba2
+    # groups stack (n_groups, group_size) — two leading layer axes.
+    axis_by_key = {"groups": 2}
+
+    def zero(sub, batch_axis):
+        def sel(n):
+            shape = [1] * n.ndim
+            shape[batch_axis] = n.shape[batch_axis]
+            return jnp.where(slot_mask.reshape(shape),
+                             jnp.zeros((), n.dtype), n)
+        return jax.tree.map(sel, sub)
+    return {k: zero(v, axis_by_key.get(k, 1)) for k, v in cache.items()}
+
+
 def decode_step(p: Params, cfg: ModelConfig, tokens: jax.Array,
-                cache: Params, cur_len: jax.Array, *, unroll: bool = False):
+                cache: Params, cur_len: jax.Array, *,
+                write_mask: jax.Array | None = None, unroll: bool = False):
     """One decode step. tokens: [B,1] int32 (or embeds [B,1,d] for audio).
+
+    ``cur_len`` is [] or [B] int32 — per-row cache depth (scalar = every
+    row at the same depth). ``write_mask`` [B] bool, when given, confines
+    cache mutation to True rows (False rows' cache state — KV entries and
+    recurrent state — passes through untouched); logits are still
+    computed for every row.
 
     Returns (logits [B,1,V], new_cache).
     """
@@ -398,14 +451,14 @@ def decode_step(p: Params, cfg: ModelConfig, tokens: jax.Array,
         def body(h, inp):
             pl, cl = inp
             h, ncl = tb.tblock_decode(pl, cfg, h, cl, cur_len)
-            return h, ncl
+            return h, _mask_cache(ncl, cl, write_mask)
         x, nc = _scan(body, x, (p["blocks"], cache["blocks"]), unroll)
         new_cache = {"blocks": nc}
     elif cfg.family == "ssm":
         def body(h, inp):
             pl, cl = inp
             h, ncl = tb.xlstm_pair_decode(pl, cfg, h, cl, cur_len)
-            return h, ncl
+            return h, _mask_cache(ncl, cl, write_mask)
         x, nc = _scan(body, x, (p["pairs"], cache["pairs"]), unroll)
         new_cache = {"pairs": nc}
     else:                                                   # hybrid
@@ -415,14 +468,17 @@ def decode_step(p: Params, cfg: ModelConfig, tokens: jax.Array,
             pg, cg, ca = inp
             h, ncg = tb.zamba_group_decode(pg, cfg, h, cg)
             h, nca = tb.shared_attn_decode(shared, cfg, h, ca, cur_len)
-            return h, (ncg, nca)
+            # group caches stack layers ahead of batch: [gs, B, ...]
+            return h, (_mask_cache(ncg, cg, write_mask, batch_axis=1),
+                       _mask_cache(nca, ca, write_mask))
         x, (ncg, nca) = _scan(
             body, x, (p["groups"], cache["groups"], cache["shared_attn"]),
             unroll)
         new_cache = {"groups": ncg, "shared_attn": nca}
         if "tail" in cache:
             x, nct = tb.zamba_group_decode(p["tail"], cfg, x, cache["tail"])
-            new_cache["tail"] = nct
+            new_cache["tail"] = _mask_cache(nct, cache["tail"], write_mask,
+                                            batch_axis=1)
 
     x = norm(p["final_norm"], x, kind=cfg.norm_kind, eps=cfg.norm_eps)
     with region("lm_head"):

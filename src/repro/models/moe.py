@@ -66,6 +66,23 @@ def _expert_compute(up, gate, down, x_slab):
     return jnp.einsum("ecf,efd->ecd", h, down.astype(x_slab.dtype))
 
 
+def _dispatch_dense(up, gate, down, x, top_p, top_i):
+    """Dropless per-token dispatch: gather each token's top-k experts'
+    weights and run them directly — T·k expert-rows of compute instead
+    of the capacity path's E·T (which, at dropless capacity, runs every
+    expert over every token and zero-weights the misses). The gather
+    reads at most T·k experts' weights; decode-sized T makes that far
+    below the capacity path's all-E read.
+    """
+    gu = jnp.take(up, top_i, axis=0)          # [T, k, d, ff]
+    gg = jnp.take(gate, top_i, axis=0)
+    gd = jnp.take(down, top_i, axis=0)        # [T, k, ff, d]
+    h = jax.nn.silu(jnp.einsum("td,tkdf->tkf", x, gg.astype(x.dtype)))
+    h = h * jnp.einsum("td,tkdf->tkf", x, gu.astype(x.dtype))
+    h = h * top_p[..., None].astype(x.dtype)
+    return jnp.einsum("tkf,tkfd->td", h, gd.astype(x.dtype))
+
+
 def _dispatch_local(up, gate, down, x, top_p, top_i, *, e0: int,
                     n_local: int, n_total: int, capacity: int):
     """Capacity-gather dispatch for experts [e0, e0+n_local).
@@ -90,8 +107,22 @@ def _dispatch_local(up, gate, down, x, top_p, top_i, *, e0: int,
     return y
 
 
-def moe_ffn(p: Params, cfg: ModelConfig, x: jnp.ndarray):
-    """MoE FFN over x: [B,S,d] (or [T,d]). Returns (y, aux_loss)."""
+def moe_ffn(p: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+            dropless: bool = False):
+    """MoE FFN over x: [B,S,d] (or [T,d]). Returns (y, aux_loss).
+
+    ``dropless=True`` guarantees no token is ever dropped. Decode paths
+    use it: the capacity heuristic is a load-balancing device calibrated
+    for training-scale T, and at decode batch sizes it quantizes to ~1
+    slot — making each slot's output depend on which *other* requests
+    share the batch (a dropped token silently degrades to its residual).
+    Dropless dispatch keeps every row's computation row-local, so
+    continuous batching is token-exact against single-request decoding.
+    Local (unsharded) dropless routes through :func:`_dispatch_dense`
+    (T·k expert-rows); the expert-parallel path keeps the capacity
+    gather with capacity = local token count (dense gather would need
+    cross-shard expert weights).
+    """
     orig_shape = x.shape
     x2 = x.reshape(-1, orig_shape[-1])
     with region("moe_router"):
@@ -101,6 +132,11 @@ def moe_ffn(p: Params, cfg: ModelConfig, x: jnp.ndarray):
     rules = current_rules()
     expert_axis = None if rules is None else rules.mapping.get("experts")
     if expert_axis is None or rules.mesh is None:
+        if dropless:
+            with region("moe_ffn"):
+                y = _dispatch_dense(p["up"], p["gate"], p["down"], x2,
+                                    top_p, top_i)
+            return y.reshape(orig_shape), aux
         cap = max(int(cfg.capacity_factor * x2.shape[0] * cfg.top_k / E), 1)
         with region("moe_ffn"):
             y = _dispatch_local(p["up"], p["gate"], p["down"], x2,
@@ -121,7 +157,8 @@ def moe_ffn(p: Params, cfg: ModelConfig, x: jnp.ndarray):
         for a in ((batch_axes,) if isinstance(batch_axes, str) else batch_axes):
             dp *= mesh.shape[a]
     t_local = max(x2.shape[0] // dp, 1)
-    cap = max(int(cfg.capacity_factor * t_local * cfg.top_k / E), 1)
+    cap = t_local if dropless else max(
+        int(cfg.capacity_factor * t_local * cfg.top_k / E), 1)
 
     bspec = batch_axes if batch_axes is not None else None
     tok_spec = P(bspec, None)       # [T, d] with T sharded over DP axes

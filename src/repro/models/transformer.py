@@ -71,9 +71,12 @@ def tblock_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray, cache: Params,
         cache["k"], cache["v"], cur_len)
     x = x + h
     if cfg.family == "moe":
+        # Dropless at decode: capacity drops are batch-composition
+        # dependent, which would break continuous-batching equivalence
+        # with single-request runs (see moe_ffn docstring).
         y, _ = moe_mod.moe_ffn(p["moe"], cfg,
                                norm(p["ln2"], x, kind=cfg.norm_kind,
-                                    eps=cfg.norm_eps))
+                                    eps=cfg.norm_eps), dropless=True)
     else:
         y = mlp(p["mlp"], norm(p["ln2"], x, kind=cfg.norm_kind,
                                eps=cfg.norm_eps),

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
@@ -43,17 +44,23 @@ class PhaseEnergyAccountant:
     of distinct phases, not with run length.
 
     With ``spill_dir`` set, every ``spill_every``-th drain (one drain per
-    scheduler step) atomically publishes this host's shard via
-    :func:`repro.core.exchange.spill_shard`, so a fleet of serving hosts
-    can be reduced with ``gather_shards`` at any time — and a host killed
-    mid-run loses at most ``spill_every`` epochs of samples. Cross-host
+    scheduler step) atomically publishes this host's shard via a
+    :class:`repro.core.exchange.ShardSpiller`, so a fleet of serving
+    hosts can be reduced with ``gather_shards`` at any time — and a host
+    killed mid-run loses at most ``spill_every`` epochs of samples.
+    ``spill_mode="delta"`` (the default) publishes only the rows whose
+    statistics changed since the last publish plus a periodic compacted
+    base (``compact_every``), so steady-state spill bandwidth is O(rows
+    touched per epoch), not O(distinct phases) — always-on fleet
+    monitoring stays within ALEA's overhead budget. Cross-host
     region ids assume the hosts register serving phases in the same
     order (they do: phase names are code paths, not data).
     """
 
     def __init__(self, *, period: float = 2e-3, jitter: float = 1e-4,
                  seed: int = 0, sensor=None, spill_dir: str | None = None,
-                 host_id: int = 0, spill_every: int = 50):
+                 host_id: int = 0, spill_every: int = 50,
+                 spill_mode: str = "delta", compact_every: int = 16):
         self.marker = RegionMarker()
         self.sampler = HostSampler(self.marker,
                                    sensor or available_host_sensor(),
@@ -63,18 +70,27 @@ class PhaseEnergyAccountant:
         self.host_id = host_id
         self.spill_every = spill_every
         self._epoch = 0
+        self._last_spill_epoch: int | None = None
+        self._last_spill_path: str | None = None
         self._elapsed_offset = 0.0
+        self._spiller = None
         self._ctx: contextlib.ExitStack | None = None
         if spill_dir is not None:
             # Restart-and-rejoin: a killed host resumes from its own
             # LATEST shard instead of republishing a fresh low-epoch one
             # over it (which would silently drop all pre-crash samples).
-            from repro.core.exchange import read_shard_meta, restore_shard
-            prev = restore_shard(spill_dir, host_id)
-            if prev is not None:
-                restored, self._epoch = prev
-                self.agg.merge(restored)
-                meta = read_shard_meta(spill_dir, host_id) or {}
+            from repro.core.exchange import ShardSpiller
+            self._spiller = ShardSpiller(spill_dir, host_id,
+                                         mode=spill_mode,
+                                         compact_every=compact_every)
+            if self._spiller.resumed is not None:
+                self.agg.merge(self._spiller.resumed)
+                self._epoch = self._spiller.epoch
+                # The restored epoch is already durable: spill() before
+                # the next drain must be a no-op, not a republish.
+                self._last_spill_epoch = self._epoch
+                self._last_spill_path = self._spiller.resumed_dir
+                meta = self._spiller.resumed_meta or {}
                 # Pre-crash wall time rides in the shard meta; without it
                 # estimates() would divide merged counts by only this
                 # process's session time, inflating every p_hat.
@@ -92,8 +108,8 @@ class PhaseEnergyAccountant:
         self._ctx.close()
         self._ctx = None
         self.drain()
-        if self.spill_dir is not None:
-            self.spill()
+        if self._spiller is not None:
+            self.spill()        # no-op if drain() already published
 
     def drain(self) -> int:
         """Fold samples collected since the last drain; returns the count.
@@ -119,10 +135,20 @@ class PhaseEnergyAccountant:
         return self._elapsed_offset + self.sampler.elapsed
 
     def spill(self) -> str:
-        """Durably publish this host's current shard (atomic, CRC'd)."""
-        from repro.core.exchange import spill_shard
-        return spill_shard(self.spill_dir, self.host_id, self._epoch,
-                           self.agg, extra_meta={"elapsed": self.elapsed})
+        """Durably publish this host's current shard (atomic, CRC'd).
+
+        Idempotent within a drain epoch: a second call before the next
+        :meth:`drain` (e.g. a shutdown hook racing the periodic spill)
+        returns the already-published directory instead of pushing the
+        same epoch through the manifest protocol twice.
+        """
+        if self._last_spill_epoch == self._epoch:
+            return self._last_spill_path
+        out = self._spiller.spill(self.agg, self._epoch,
+                                  extra_meta={"elapsed": self.elapsed})
+        self._last_spill_epoch = self._epoch
+        self._last_spill_path = out
+        return out
 
     def estimates(self, alpha: float = 0.05) -> EstimateSet:
         """Per-phase estimates over everything drained so far."""
@@ -139,6 +165,19 @@ class PhaseEnergyAccountant:
         merged = gather_shards(spill_dir)
         return merged.estimates(t_exec, regions_mod.registry.names,
                                 alpha=alpha)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_fns(cfg: ModelConfig):
+    """(masked decode step, slot-state reset), shared across Engines.
+
+    Keyed on the (frozen, hashable) model config so engines over the
+    same architecture reuse one trace/compile per shape.
+    """
+    decode = jax.jit(
+        lambda p, t, c, l, m: M.decode_step(p, cfg, t, c, l, write_mask=m))
+    reset = jax.jit(lambda c, m: M.reset_cache_slots(cfg, c, m))
+    return decode, reset
 
 
 @dataclasses.dataclass
@@ -176,17 +215,15 @@ class Engine:
         self.slot_len = np.zeros(B, np.int32)
         self.sample = sample or (lambda logits: jnp.argmax(logits, -1))
 
-        self._decode = jax.jit(
-            lambda p, t, c, l: M.decode_step(p, cfg, t, c, l))
-
-        def _prefill_one(p, tokens, cache, slot):
-            """Sequential prefill through decode steps for one slot.
-
-            Simple and always-correct (slot-local cache update); the pjit'd
-            bulk prefill path (M.prefill) serves the large-shape cells.
-            """
-            return None
-        self._prefill_one = _prefill_one
+        # Cache-position contract: every decode step takes a [B] per-slot
+        # position vector — each slot's K/V is written at its OWN length
+        # (a single scalar would leave gaps for short slots and overwrite
+        # live entries of long ones under ragged continuous batching) —
+        # plus a [B] write mask confining cache mutation to the slot
+        # being prefilled (prefill) / the active slots (decode steps, so
+        # free slots' recurrent SSM/xLSTM state doesn't advance on
+        # garbage tokens between requests).
+        self._decode_masked, self._reset_slots = _jitted_fns(cfg)
 
     # -- host scheduler --------------------------------------------------------
     def _free_slots(self) -> list[int]:
@@ -198,19 +235,45 @@ class Engine:
             # sample the first output token from (and the teacher-forced
             # prefill loop below would leave `logits` unbound).
             raise ValueError(f"request {req.rid}: empty prompt")
+        if len(req.prompt) + 1 > self.scfg.max_len:
+            # The cache ring holds max_len positions; the prompt plus at
+            # least the first generated token must fit or the decode
+            # write would run past the ring.
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} "
+                f"does not fit max_len {self.scfg.max_len} "
+                f"(need len(prompt) + 1 <= max_len)")
         slots = self._free_slots()
         if not slots:
             return False
         s = slots[0]
         self.slot_req[s] = req
+        mask = np.zeros(len(self.slot_req), bool)
+        mask[s] = True
+        # Zero the claimed slot's cache state: recurrent SSM/xLSTM state
+        # is *input* to the next step, so a reused slot would otherwise
+        # seed this request with its previous occupant's final state
+        # (KV rows are rewritten by prefill anyway).
+        self.cache = self._reset_slots(self.cache, jnp.asarray(mask))
         # Prefill via teacher-forced decode steps on this slot (host loop;
-        # fine at example scale).
+        # fine at example scale). Writes are masked to slot s: the decode
+        # step runs the whole batch, and without the mask every
+        # concurrently-active slot's cache (KV at position t, and any
+        # recurrent state) would be stomped at each prompt position.
+        cur = self.slot_len.astype(np.int32).copy()
         with regions_mod.region("serve/prefill"):
             for t, tok in enumerate(req.prompt):
                 self.tokens[s, 0] = tok
-                logits, self.cache = self._decode(
-                    self.params, jnp.asarray(self.tokens), self.cache,
-                    jnp.int32(t))
+                cur[s] = t
+                # Hand jax a FRESH host buffer each step: the host→device
+                # transfer is async, and this loop mutates
+                # self.tokens/cur in place while earlier decode steps may
+                # still be in flight — a shared buffer hands those steps
+                # the *next* iteration's values (observed as
+                # nondeterministic prefill logits on CPU).
+                logits, self.cache = self._decode_masked(
+                    self.params, jnp.asarray(self.tokens.copy()),
+                    self.cache, jnp.asarray(cur.copy()), jnp.asarray(mask))
         self.slot_len[s] = len(req.prompt)
         self.tokens[s, 0] = int(np.asarray(
             self.sample(logits[s:s + 1, -1, :]))[0])
@@ -221,11 +284,16 @@ class Engine:
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return []
-        cur = int(self.slot_len.max())
+        # Mask writes to active slots: free slots must not advance their
+        # recurrent state on the garbage tokens left in their rows.
+        mask = np.asarray([r is not None for r in self.slot_req])
         with regions_mod.region("serve/decode"):
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(self.tokens), self.cache,
-                jnp.int32(cur))
+            # Fresh host buffers (see prefill loop): the scheduler
+            # mutates self.tokens/slot_len right after this dispatch.
+            logits, self.cache = self._decode_masked(
+                self.params, jnp.asarray(self.tokens.copy()), self.cache,
+                jnp.asarray(self.slot_len.astype(np.int32)),
+                jnp.asarray(mask))
         nxt = np.asarray(self.sample(logits[:, -1, :]))
         finished = []
         for s in active:

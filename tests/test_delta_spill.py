@@ -1,0 +1,306 @@
+"""Incremental (delta) spills + compaction: chain fold correctness,
+crash/restart stories, mixed full/delta gathers, and the profiler /
+serving-accountant wiring."""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import exchange as ex
+from repro.core.profiler import EnergyProfiler
+from repro.core.streaming import (StreamingAggregator,
+                                  StreamingCombinationAggregator)
+from repro.core.timeline import RegionCost, synthesize
+
+
+def _dyadic(rng, n):
+    """Powers exactly representable (k/64): sums bit-exact under any
+    association order."""
+    return rng.integers(50 * 64, 200 * 64, n) / 64.0
+
+
+def _epoch_dirs(path, host_id):
+    hd = os.path.join(path, f"host_{host_id:04d}")
+    return sorted(n for n in os.listdir(hd) if n.startswith("epoch_")
+                  and ".tmp" not in n)
+
+
+# ---------------------------------------------------------------------------
+# Delta primitives
+# ---------------------------------------------------------------------------
+
+def test_compute_apply_roundtrip_combination():
+    rng = np.random.default_rng(0)
+    agg = StreamingCombinationAggregator()
+    agg.update(rng.integers(0, 4, (500, 2)).astype(np.int64),
+               _dyadic(rng, 500))
+    prev = ex.pack_shard(agg)
+    prev = ex._copy_shard(prev)
+    agg.update(rng.integers(0, 6, (300, 2)).astype(np.int64),
+               _dyadic(rng, 300))
+    cur = ex.pack_shard(agg)
+    delta = ex.compute_shard_delta(prev, cur)
+    assert delta.n_rows == cur.n_rows and delta.prev_rows == prev.n_rows
+    # sparse: only touched rows ride along
+    assert len(delta.idx) <= cur.n_rows
+    back = ex.apply_shard_delta(prev, delta)
+    assert back.n_rows == cur.n_rows
+    assert np.array_equal(back.counts, cur.counts[:cur.n_rows])
+    assert np.array_equal(back.psum, cur.psum[:cur.n_rows])
+    assert np.array_equal(back.psumsq, cur.psumsq[:cur.n_rows])
+    assert np.array_equal(back.combos, cur.combos[:cur.n_rows])
+
+
+def test_apply_rejects_chain_mismatch():
+    rng = np.random.default_rng(1)
+    a = StreamingAggregator(4).update(
+        rng.integers(0, 4, 100).astype(np.int64), _dyadic(rng, 100))
+    s0 = ex._copy_shard(ex.pack_shard(a))
+    a.update(rng.integers(0, 4, 100).astype(np.int64), _dyadic(rng, 100))
+    delta = ex.compute_shard_delta(s0, ex.pack_shard(a))
+    wrong = ex.PackedShard(counts=np.zeros(7, np.int64),
+                           psum=np.zeros(7), psumsq=np.zeros(7), n_rows=7)
+    with pytest.raises(IOError, match="chain mismatch"):
+        ex.apply_shard_delta(wrong, delta)
+
+
+def test_compute_delta_rejects_non_append_only():
+    rng = np.random.default_rng(2)
+    a = StreamingCombinationAggregator().update(
+        rng.integers(0, 3, (50, 2)).astype(np.int64), _dyadic(rng, 50))
+    b = StreamingCombinationAggregator().update(
+        rng.integers(3, 6, (50, 2)).astype(np.int64), _dyadic(rng, 50))
+    pa, pb = ex.pack_shard(a), ex.pack_shard(b)
+    if pa.n_rows and pb.n_rows:
+        with pytest.raises(ValueError):
+            ex.compute_shard_delta(pa, pb)
+
+
+# ---------------------------------------------------------------------------
+# Spiller: chains, compaction, GC
+# ---------------------------------------------------------------------------
+
+def test_delta_gather_bit_exact_vs_full_4hosts(tmp_path):
+    """Acceptance: a delta-spilled 4-host run gathers bit-exactly vs the
+    same run with full spills (int64 counts, float64 sums)."""
+    d_delta = str(tmp_path / "delta")
+    d_full = str(tmp_path / "full")
+    rng = np.random.default_rng(3)
+    for h in range(4):
+        sp = ex.ShardSpiller(d_delta, h, mode="delta", compact_every=6)
+        agg = StreamingCombinationAggregator()
+        for e in range(1, 21):
+            agg.update(rng.integers(0, 5, (40, 2)).astype(np.int64),
+                       _dyadic(rng, 40))
+            sp.spill(agg, e)
+            ex.spill_shard(d_full, h, e, agg)
+    ga = ex.gather_shards(d_delta)
+    gb = ex.gather_shards(d_full)
+    assert ga.interner.combos == gb.interner.combos
+    assert np.array_equal(ga.agg.counts, gb.agg.counts)
+    assert np.array_equal(ga.agg.psum, gb.agg.psum)
+    assert np.array_equal(ga.agg.psumsq, gb.agg.psumsq)
+
+
+def test_mixed_full_and_delta_hosts_gather(tmp_path):
+    """Readers must transparently merge hosts publishing full shards with
+    hosts publishing delta chains."""
+    rng = np.random.default_rng(4)
+    ref = StreamingCombinationAggregator()
+    for h, mode in enumerate(("full", "delta", "delta")):
+        sp = ex.ShardSpiller(str(tmp_path), h, mode=mode, compact_every=4)
+        agg = StreamingCombinationAggregator()
+        for e in range(1, 8):
+            mat = rng.integers(0, 4, (30, 2)).astype(np.int64)
+            pows = _dyadic(rng, 30)
+            agg.update(mat, pows)
+            sp.spill(agg, e)
+        ref.merge(agg)
+    merged = ex.gather_shards(str(tmp_path))
+    assert merged.interner.combos == ref.interner.combos
+    assert np.array_equal(merged.agg.counts, ref.agg.counts)
+    assert np.array_equal(merged.agg.psum, ref.agg.psum)
+
+
+def test_compaction_gc_keeps_directory_bounded(tmp_path):
+    rng = np.random.default_rng(5)
+    sp = ex.ShardSpiller(str(tmp_path), 0, mode="delta", compact_every=5)
+    agg = StreamingAggregator(6)
+    for e in range(1, 26):
+        agg.update(rng.integers(0, 6, 20).astype(np.int64),
+                   _dyadic(rng, 20))
+        sp.spill(agg, e)
+        assert len(_epoch_dirs(str(tmp_path), 0)) <= 5
+    # the live chain alone survives; it folds to the live aggregator
+    restored, epoch = ex.restore_shard(str(tmp_path), 0)
+    assert epoch == 25
+    assert np.array_equal(restored.counts, agg.counts)
+    assert np.array_equal(restored.psum, agg.psum)
+
+
+def test_killed_host_mid_delta_leaves_only_tmp_litter(tmp_path):
+    """A writer killed mid-delta leaves a ``.tmp-`` dir; readers ignore
+    it and fold the intact chain."""
+    rng = np.random.default_rng(6)
+    sp = ex.ShardSpiller(str(tmp_path), 0, mode="delta", compact_every=10)
+    agg = StreamingCombinationAggregator()
+    for e in range(1, 4):
+        agg.update(rng.integers(0, 4, (25, 2)).astype(np.int64),
+                   _dyadic(rng, 25))
+        sp.spill(agg, e)
+    # crash mid-write of epoch 4's delta: partial tmp dir, LATEST at 3
+    hd = tmp_path / "host_0000"
+    dead = hd / "epoch_000000004.tmp-deadbeef"
+    dead.mkdir()
+    (dead / "arr_00000.npy").write_bytes(b"\x93NUMPY partial")
+    restored, epoch = ex.restore_shard(str(tmp_path), 0)
+    assert epoch == 3
+    assert np.array_equal(restored.agg.counts, agg.agg.counts)
+    merged = ex.gather_shards(str(tmp_path))
+    assert np.array_equal(merged.agg.counts, agg.agg.counts)
+
+
+def test_crash_between_delta_and_compaction_no_double_count(tmp_path):
+    """Acceptance: a host killed between a delta publish and compaction
+    restarts from the on-disk chain and re-gathers without
+    double-counting."""
+    rng = np.random.default_rng(7)
+    ref = StreamingCombinationAggregator()
+
+    sp = ex.ShardSpiller(str(tmp_path), 0, mode="delta", compact_every=4)
+    agg = StreamingCombinationAggregator()
+    chunks = [(rng.integers(0, 5, (30, 2)).astype(np.int64),
+               _dyadic(rng, 30)) for _ in range(10)]
+    # epochs 1..6: base at 1, deltas 2-4... then die at epoch 6 — a delta
+    # epoch, published but not yet compacted (in-memory spiller lost).
+    for e in range(1, 7):
+        agg.update(*chunks[e - 1])
+        sp.spill(agg, e)
+    del sp
+
+    # restart: resume the folded chain, replay post-spill work only.
+    sp2 = ex.ShardSpiller(str(tmp_path), 0, mode="delta", compact_every=4)
+    assert sp2.epoch == 6
+    agg2 = StreamingCombinationAggregator().merge(sp2.resumed)
+    for e in range(7, 11):
+        agg2.update(*chunks[e - 1])
+        sp2.spill(agg2, e)
+
+    for mat, pows in chunks:
+        ref.update(mat, pows)
+    merged = ex.gather_shards(str(tmp_path))
+    assert merged.interner.combos == ref.interner.combos
+    assert np.array_equal(merged.agg.counts, ref.agg.counts)
+    assert np.array_equal(merged.agg.psum, ref.agg.psum)
+    assert np.array_equal(merged.agg.psumsq, ref.agg.psumsq)
+
+
+def test_broken_chain_raises(tmp_path):
+    rng = np.random.default_rng(8)
+    sp = ex.ShardSpiller(str(tmp_path), 0, mode="delta", compact_every=99)
+    agg = StreamingAggregator(4)
+    for e in range(1, 5):
+        agg.update(rng.integers(0, 4, 10).astype(np.int64),
+                   _dyadic(rng, 10))
+        sp.spill(agg, e)
+    # delete a mid-chain delta: the chain is unreadable and must say so
+    import shutil
+    shutil.rmtree(tmp_path / "host_0000" / "epoch_000000002")
+    with pytest.raises(IOError, match="chain"):
+        ex.restore_shard(str(tmp_path), 0)
+
+
+# ---------------------------------------------------------------------------
+# Profiler / accountant wiring
+# ---------------------------------------------------------------------------
+
+def _timelines():
+    costs = [RegionCost("mem", flops=1e10, hbm_bytes=5e10, invocations=4),
+             RegionCost("alu", flops=6e11, hbm_bytes=2e9, invocations=4)]
+    return [synthesize(costs, steps=60, seed=s) for s in (0, 1)]
+
+
+def test_profiler_delta_exchange_restart_idempotent(tmp_path):
+    """A deterministic profiler re-run against the same delta spill dir
+    republishes as an (empty) delta epoch — same estimates, no
+    double-counting."""
+    tls = _timelines()
+    prof = EnergyProfiler(period=10e-3)
+    est_ref, combos_ref = prof.profile_multiworker_streaming(
+        tls, sensor="instant", chunk_size=256)
+    est1, combos1 = prof.profile_multiworker_streaming(
+        tls, sensor="instant", chunk_size=256,
+        exchange=ex.CheckpointExchange(str(tmp_path), host_id=0,
+                                       mode="delta"))
+    assert combos1 == combos_ref
+    assert est1.n_total == est_ref.n_total
+
+    est2, combos2 = prof.profile_multiworker_streaming(
+        tls, sensor="instant", chunk_size=256,
+        exchange=ex.CheckpointExchange(str(tmp_path), host_id=0,
+                                       mode="delta"))
+    assert combos2 == combos_ref
+    assert est2.n_total == est_ref.n_total
+    assert np.array_equal(est2.table.e_hat, est_ref.table.e_hat)
+    # the second publish was an incremental epoch on the same chain
+    restored, epoch = ex.restore_shard(str(tmp_path), 0)
+    assert epoch == 2
+
+
+def test_accountant_exit_publishes_each_epoch_once(tmp_path):
+    """__exit__ must not re-publish the epoch drain() just spilled."""
+    from repro.core import regions as regions_mod
+    from repro.serve.engine import PhaseEnergyAccountant
+
+    acct = PhaseEnergyAccountant(period=1e-3, jitter=1e-4,
+                                 spill_dir=str(tmp_path), host_id=0,
+                                 spill_every=1)
+    published = []
+    orig = acct._spiller.spill
+
+    def counting_spill(agg, epoch, extra_meta=None):
+        published.append(epoch)
+        return orig(agg, epoch, extra_meta=extra_meta)
+    acct._spiller.spill = counting_spill
+
+    with acct:
+        for _ in range(3):
+            with regions_mod.region("serve/busy"):
+                t0 = time.monotonic()
+                while time.monotonic() - t0 < 2e-3:
+                    pass
+            acct.drain()
+    # every drain spilled (spill_every=1) incl. the exit drain; no epoch
+    # may appear twice (the pre-fix behaviour published the last twice).
+    assert len(published) == len(set(published))
+    assert ex.restore_shard(str(tmp_path), 0)[1] == max(published)
+
+
+def test_accountant_delta_restart_resume(tmp_path):
+    """Accountant spill_mode='delta' (default): restart resumes the
+    folded chain, epochs keep counting, elapsed time is carried."""
+    from repro.core import regions as regions_mod
+    from repro.serve.engine import PhaseEnergyAccountant
+
+    acct = PhaseEnergyAccountant(period=1e-3, jitter=1e-4,
+                                 spill_dir=str(tmp_path), host_id=1,
+                                 spill_every=2, compact_every=3)
+    with acct:
+        for _ in range(7):
+            with regions_mod.region("serve/busy"):
+                t0 = time.monotonic()
+                while time.monotonic() - t0 < 2e-3:
+                    pass
+            acct.drain()
+    restored, epoch = ex.restore_shard(str(tmp_path), 1)
+    assert np.array_equal(restored.counts[:acct.agg.num_regions],
+                          acct.agg.counts[:restored.num_regions])
+
+    acct2 = PhaseEnergyAccountant(period=1e-3, jitter=1e-4,
+                                  spill_dir=str(tmp_path), host_id=1,
+                                  spill_every=2, compact_every=3)
+    assert acct2.agg.n_total == acct.agg.n_total
+    assert acct2._epoch == epoch
+    assert acct2._elapsed_offset == pytest.approx(acct.elapsed)
