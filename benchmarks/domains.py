@@ -1,0 +1,131 @@
+"""Multi-domain (power-rail) attribution benchmark.
+
+Measures the cost of the domain axis through the fused device pipeline:
+the same profiling run at D = 1 (scalar, the pre-rail graph) and D = 3
+(package/HBM/ICI rails — per-rail sensor emulation vmapped over the
+domain axis plus the dedicated total channel in the carry). Reported as
+samples/sec for the single-worker region path and the W=4 combination
+path; the acceptance gate is D=3 staying within 2× of D=1 (the rail
+bank triples the energy-interpolation work but shares the interval
+lookup, time generation and table search, so the slowdown must stay far
+below 3×). Also reports the per-domain energy split of the §6
+memory_power-style workload, reproduced *directly* from rail
+attribution rather than inferred from activity coefficients. Emits the
+usual CSV rows plus ``BENCH_domains.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.sensors import RaplTraceSensor
+from repro.core.timeline import RegionCost, ground_truth, synthesize
+
+_JSON_PATH = pathlib.Path(__file__).with_name("BENCH_domains.json")
+PERIOD = 1e-3
+JITTER = 200e-6
+CHUNK = 16384
+SEED = 11
+
+# §6-flavoured region mix: compute-bound, memory-bound, link-bound.
+COSTS = [
+    RegionCost("mxu_gemm", flops=3e12, hbm_bytes=1.2e9, invocations=4),
+    RegionCost("hbm_stream", flops=4e10, hbm_bytes=6.4e9, invocations=3),
+    RegionCost("allreduce", flops=2e9, hbm_bytes=2e8, ici_bytes=8e8,
+               invocations=2),
+    RegionCost("host_wait", flops=1e9, hbm_bytes=1e7, invocations=1),
+]
+
+
+def _timelines(n_samples: int, domains: bool, w: int = 1):
+    t_end = n_samples * PERIOD
+    # scale steps so the horizon covers the target sample volume
+    one = synthesize(COSTS, steps=1, seed=SEED, domains=domains)
+    steps = max(int(t_end / one.t_exec) + 1, 1)
+    return [synthesize(COSTS, steps=steps, seed=SEED + i, domains=domains)
+            for i in range(w)]
+
+
+def _fused_run(tls):
+    from repro.core import device_pipeline as dp
+    dtl = dp.DeviceTimeline.from_timelines(tls)
+    spec = RaplTraceSensor.make_spec(domains=dtl.domains)
+    if len(tls) == 1:
+        res = dp.run_region_pipeline(dtl, spec, period=PERIOD,
+                                     jitter=JITTER, seed=SEED,
+                                     chunk_size=CHUNK)
+        return res.n
+    agg, n = dp.run_combo_pipeline(dtl, spec, period=PERIOD,
+                                   jitter=JITTER, seed=SEED,
+                                   chunk_size=CHUNK)
+    return n
+
+
+def run(verbose: bool = True) -> list[str]:
+    n_target = int(os.environ.get("ALEA_BENCH_N", 200_000))
+    rows: list[tuple[str, float, str]] = []
+    record: dict = {"n_samples_target": n_target, "period": PERIOD,
+                    "chunk": CHUNK, "sensor": "rapl",
+                    "note": "fused timings exclude compilation "
+                            "(one warmup pass)",
+                    "configs": {}}
+
+    rates: dict[tuple[int, int], float] = {}
+    for w in (1, 4):
+        for d, use_domains in ((1, False), (3, True)):
+            tls = _timelines(n_target // w, use_domains, w)
+            _fused_run(tls)                  # warmup: compile + tables
+            t0 = time.perf_counter()
+            n = _fused_run(tls)
+            dt = time.perf_counter() - t0
+            rate = n / dt
+            rates[(w, d)] = rate
+            record["configs"][f"W{w}_D{d}"] = {
+                "n_samples": n, "sec": dt, "samples_per_sec": rate}
+            rows.append((f"domains/fused/W{w}_D{d}", dt * 1e6,
+                         f"{rate / 1e6:.2f} Msamples/s"))
+    for w in (1, 4):
+        ratio = rates[(w, 1)] / rates[(w, 3)]
+        record["configs"][f"W{w}_D3"]["slowdown_vs_d1"] = ratio
+        rows.append((f"domains/slowdown/W{w}", 0.0,
+                     f"D3 {ratio:.2f}x slower than D1 (gate: < 2x)"))
+
+    # §6 compute-vs-memory split, measured directly from rail
+    # attribution (no EPI/activity inference) — cf. memory_power.py.
+    tl = _timelines(n_target, True)[0]
+    from repro.core.profiler import EnergyProfiler
+    est = EnergyProfiler(period=PERIOD, jitter=JITTER, seed=SEED) \
+        .profile_timeline_streaming(tl, sensor="rapl", chunk_size=CHUNK)
+    truth = ground_truth(tl)
+    split = {}
+    for name in ("mxu_gemm", "hbm_stream"):
+        r = next(r for r in est.regions if r.name == name)
+        e = r.energy_by_domain()
+        gt = truth[name]["energy_rails"]
+        split[name] = {
+            "measured": e,
+            "truth": gt,
+            "hbm_share": e["hbm"] / r.e_hat,
+        }
+        rows.append((f"domains/split/{name}", 0.0,
+                     f"hbm {e['hbm']:.2f}J/{r.e_hat:.2f}J "
+                     f"({e['hbm'] / r.e_hat * 100:.0f}%) "
+                     f"truth {gt['hbm']:.2f}J"))
+    record["memory_power_split"] = split
+
+    _JSON_PATH.write_text(json.dumps(record, indent=2))
+    if verbose:
+        for nm, us, d in rows:
+            print(f"{nm:32s} {us:14.1f}us {d}")
+        print(f"wrote {_JSON_PATH}")
+    return [csv_row(nm, us, d) for nm, us, d in rows]
+
+
+if __name__ == "__main__":
+    run()

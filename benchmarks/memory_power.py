@@ -20,6 +20,15 @@ Findings reproduced:
       overestimate ~1.3–1.5×;
   (3) §6.2 contention: package power of memory-bound regions grows
       superlinearly with co-running workers.
+
+Note — per-domain attribution now measures this split *directly*: the
+profiler threads a power-rail axis (package/HBM/ICI) end to end, so a
+multi-domain run reports each block's energy per rail instead of
+inferring the compute-vs-memory decomposition from activity
+coefficients as this table does. ``benchmarks/domains.py``
+(→ ``BENCH_domains.json``) reproduces the §6 compute-vs-memory split
+from rail attribution on a synthesized workload and benchmarks the cost
+of the domain axis (D=3 vs D=1 fused-pipeline throughput).
 """
 
 from __future__ import annotations
@@ -68,10 +77,15 @@ def run(verbose: bool = True) -> list[str]:
     f3 = "mem-region package power: " + " ".join(workers_rows)
     rows.append(("memory_power/contention", 0.0, f3))
 
+    f4 = ("per-domain attribution measures this split directly now — "
+          "see domains benchmark (BENCH_domains.json)")
+    rows.append(("memory_power/direct_measurement_note", 0.0, f4))
+
     if verbose:
         print(f1)
         print(f2)
         print(f3)
+        print(f4)
     return [f"{n},{us:.1f},{d}" for n, us, d in rows]
 
 

@@ -11,9 +11,9 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (aggregation, exchange, kernels, kmeans_hotspot,
-                            memory_power, ocean_finegrain, pipeline,
-                            sampling_period, spill, validation)
+    from benchmarks import (aggregation, domains, exchange, kernels,
+                            kmeans_hotspot, memory_power, ocean_finegrain,
+                            pipeline, sampling_period, spill, validation)
     mods = [
         ("sampling_period (Fig 4/5)", sampling_period),
         ("validation (Fig 6 / §5)", validation),
@@ -25,6 +25,7 @@ def main() -> None:
         ("exchange (cross-host shard reduction)", exchange),
         ("spill (full vs incremental delta publishing)", spill),
         ("pipeline (device-resident fused sampling)", pipeline),
+        ("domains (multi-rail attribution, D=1 vs D=3)", domains),
     ]
     all_rows = ["name,us_per_call,derived"]
     for title, mod in mods:

@@ -44,6 +44,64 @@ class AttributionReport:
                          f"{r.pow_hi:.6g},{r.e_hat:.6g},{r.e_lo:.6g},{r.e_hi:.6g}")
         return "\n".join(lines)
 
+    def domain_table(self, top: int | None = None) -> str:
+        """Per-block × per-domain energy breakdown (multi-rail runs).
+
+        The §6 compute-vs-memory question answered directly: each row
+        shows a region's energy split across measured power rails plus
+        the share of its energy on each — no indirect memory_power
+        inference needed.
+        """
+        tbl = self.estimates.table
+        if tbl.domains is None:
+            raise ValueError(
+                "single-rail estimates have no domain breakdown; profile "
+                "with a multi-domain timeline/sensor bank")
+        order = np.argsort(-tbl.e_hat, kind="stable")
+        if top:
+            order = order[:top]
+        hdr = f"{'region':28s} {'ê [J]':>11s}"
+        for d in tbl.domains:
+            hdr += f" {'ê_' + d + ' [J]':>14s} {'%':>5s}"
+        lines = [hdr, "-" * len(hdr)]
+        for i in order:
+            i = int(i)
+            row = f"{tbl.names[i]:28s} {tbl.e_hat[i]:11.2f}"
+            for j in range(len(tbl.domains)):
+                share = (tbl.e_rails[i, j] / tbl.e_hat[i] * 100.0
+                         if tbl.e_hat[i] > 0 else 0.0)
+                row += f" {tbl.e_rails[i, j]:14.2f} {share:5.1f}"
+            lines.append(row)
+        totals = self.estimates.energy_by_domain()
+        tot = f"{'TOTAL':28s} {self.estimates.total_energy:11.2f}"
+        te = self.estimates.total_energy
+        for d in tbl.domains:
+            share = totals[d] / te * 100.0 if te > 0 else 0.0
+            tot += f" {totals[d]:14.2f} {share:5.1f}"
+        lines.append(tot)
+        return "\n".join(lines)
+
+    def domain_csv(self) -> str:
+        """CSV of the per-block × per-domain energy decomposition."""
+        tbl = self.estimates.table
+        if tbl.domains is None:
+            raise ValueError("single-rail estimates have no domain "
+                             "breakdown")
+        cols = []
+        for d in tbl.domains:
+            cols += [f"pow_{d}", f"e_{d}", f"e_{d}_lo", f"e_{d}_hi"]
+        lines = ["region,n,e_hat," + ",".join(cols)]
+        for i in range(len(tbl)):
+            vals = []
+            for j in range(len(tbl.domains)):
+                vals += [f"{tbl.pow_rails[i, j]:.6g}",
+                         f"{tbl.e_rails[i, j]:.6g}",
+                         f"{tbl.e_rails_lo[i, j]:.6g}",
+                         f"{tbl.e_rails_hi[i, j]:.6g}"]
+            lines.append(f"{tbl.names[i]},{int(tbl.n_samples[i])},"
+                         f"{tbl.e_hat[i]:.6g}," + ",".join(vals))
+        return "\n".join(lines)
+
 
 @dataclasses.dataclass(frozen=True)
 class ValidationResult:

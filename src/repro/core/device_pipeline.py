@@ -55,6 +55,17 @@ CPU. The numpy reference (:func:`reference_region_pipeline` /
 :func:`reference_combo_pipeline`) consumes the same
 :func:`chunk_sample_times` and mirrors the sensor math in float64 — the
 oracle the equivalence tests pin the fused path against.
+
+**Power-rail domain axis.** Multi-domain timelines (``Timeline.domains``
+— package/HBM/ICI rails) thread end to end: the substrate carries
+per-rail energy integrals, the sensor bank is vmapped over the domain
+axis (one interval lookup serves every rail — they share the clock),
+and the carry accumulates a ``[rows, C]`` channel matrix (the D rails
+plus a dedicated total channel; Σpow² of the total is not derivable
+from per-rail Σpow², see :func:`num_channels`). Scalar timelines keep
+1-D statistics through the *verbatim* pre-rail computation graph —
+the D=1 bit-exactness contract, pinned by golden-value tests
+(``tests/test_domains.py``).
 """
 
 from __future__ import annotations
@@ -71,16 +82,18 @@ from jax import lax
 from jax.experimental import enable_x64
 
 from repro.core.sensors import (DEFAULT_IDLE_POWER, SensorSpec,
-                                _TraceSensorBase)
+                                _TraceSensorBase, idle_channel)
 from repro.core.streaming import (CombinationInterner,
-                                  StreamingCombinationAggregator)
+                                  StreamingCombinationAggregator,
+                                  channels_for)
 from repro.core.timeline import Timeline
 from repro.kernels.sample_attr.ops import make_carry_update
 
 __all__ = [
     "DeviceTimeline", "PipelineResult", "chunk_sample_times",
-    "num_chunks", "run_region_pipeline", "run_combo_pipeline",
-    "reference_region_pipeline", "reference_combo_pipeline",
+    "num_chunks", "num_channels", "run_region_pipeline",
+    "run_combo_pipeline", "reference_region_pipeline",
+    "reference_combo_pipeline",
 ]
 
 DEFAULT_CHUNK = 65536
@@ -111,6 +124,18 @@ class DeviceTimeline:
     each worker's valid interval count so lookups clip per worker exactly
     like the host path clips to its own length.
 
+    The power substrate is per-rail: for multi-domain timelines
+    ``powers``/``eint`` carry a domain axis ``[W, D, ·]`` (package/HBM/
+    ICI rails). Scalar (D=1) timelines keep the flat ``[W, ·]`` layout —
+    deliberately: the jitted pipeline branches on the array rank at
+    trace time and runs the *identical* pre-rail computation graph for
+    scalar substrates, which is what makes D=1 outputs bit-exact (XLA's
+    whole-graph fusion reassociates float reductions at the ulp level
+    if the same math merely flows through differently-shaped arrays).
+    Interval *structure* (ends/bounds/region ids and the grid
+    accelerator) never has a domain axis: all rails of a worker share
+    one clock, so one interval lookup serves every channel.
+
     ``grid``/``cell``/``grid_k`` form the lookup accelerator: per worker,
     ``grid[g] = #(ends ≤ g·cell)`` on a uniform time grid, with ``grid_k``
     the maximum interval count of any cell. An interval lookup is then one
@@ -124,8 +149,8 @@ class DeviceTimeline:
 
     ends: jax.Array        # f64 [W, M]   interval end times, +inf padded
     bounds: jax.Array      # f64 [W, M+1] [0, ends...], +inf padded
-    eint: jax.Array        # f64 [W, M+1] cumulative energy at bounds
-    powers: jax.Array      # f64 [W, M]   interval powers, 0 padded
+    eint: jax.Array        # f64 [W, M+1] (D=1) | [W, D, M+1] rail energy
+    powers: jax.Array      # f64 [W, M] (D=1) | [W, D, M] rail powers, 0 pad
     region_ids: jax.Array  # i32 [W, M]   region per interval, 0 padded
     m_true: jax.Array      # i32 [W]      valid interval count per worker
     grid: jax.Array        # i32 [W, G+2] #(ends ≤ g·cell) per grid point
@@ -134,30 +159,43 @@ class DeviceTimeline:
     t_end: float           # profiled horizon: min worker t_exec
     num_regions: int
     names: tuple[str, ...]
+    domains: tuple[str, ...] = ("total",)   # rail axis names
 
     @property
     def num_workers(self) -> int:
         return self.ends.shape[0]
+
+    @property
+    def num_domains(self) -> int:
+        return len(self.domains)
 
     @classmethod
     def from_timelines(cls, timelines: list[Timeline]) -> "DeviceTimeline":
         if not timelines:
             raise ValueError("need at least one timeline")
         names = timelines[0].names
+        domains = timelines[0].domain_names
         for tl in timelines:
             if tl.names != names:
                 raise ValueError("workers must share a region name space")
+            if tl.domain_names != domains:
+                raise ValueError(
+                    f"workers must share a power-rail domain axis; got "
+                    f"{tl.domain_names} vs {domains}")
             if len(tl.region_ids) == 0:
                 raise ValueError("empty timeline")
             if tl.t_exec <= 0.0:
                 raise ValueError("zero-length timeline")
         W = len(timelines)
+        D = len(domains)
         M = max(len(tl.region_ids) for tl in timelines)
         G = int(min(_GRID_OVERSAMPLE * M, _GRID_MAX))
         ends = np.full((W, M), np.inf)
         bounds = np.full((W, M + 1), np.inf)
-        eint = np.zeros((W, M + 1))
-        powers = np.zeros((W, M))
+        # Scalar timelines keep the flat pre-rail layout (see class
+        # docstring: the bit-exactness contract hangs on it).
+        eint = np.zeros((W, M + 1) if D == 1 else (W, D, M + 1))
+        powers = np.zeros((W, M) if D == 1 else (W, D, M))
         rids = np.zeros((W, M), np.int32)
         m_true = np.array([len(tl.region_ids) for tl in timelines], np.int32)
         grid = np.zeros((W, G + 2), np.int32)
@@ -168,8 +206,12 @@ class DeviceTimeline:
             ends[w, :m] = tl.ends
             bounds[w, 0] = 0.0
             bounds[w, 1:m + 1] = tl.ends
-            eint[w, 1:m + 1] = tl.energy_integral()
-            powers[w, :m] = tl.powers
+            if D == 1:
+                eint[w, 1:m + 1] = tl.energy_integral()
+                powers[w, :m] = tl.powers
+            else:
+                eint[w, :, 1:m + 1] = tl.rail_energy_integral().T
+                powers[w, :, :m] = tl.rails().T
             rids[w, :m] = tl.region_ids
             cell[w] = tl.t_exec / G
             # Same f64 products the device guard computes (g · cell), so
@@ -187,7 +229,8 @@ class DeviceTimeline:
                        grid=jnp.asarray(grid), cell=jnp.asarray(cell),
                        grid_k=grid_k,
                        t_end=float(min(tl.t_exec for tl in timelines)),
-                       num_regions=len(names), names=names)
+                       num_regions=len(names), names=names,
+                       domains=domains)
 
     def arrays(self):
         return (self.ends, self.bounds, self.eint, self.powers,
@@ -196,13 +239,52 @@ class DeviceTimeline:
 
 @dataclasses.dataclass(frozen=True)
 class PipelineResult:
-    """Final sufficient statistics of one fused run (host numpy)."""
+    """Final sufficient statistics of one fused run (host numpy).
+
+    ``psum``/``psumsq`` are the scalar (rail-summed) statistics — for
+    D=1 runs the single rail itself, bit-identical to the pre-rail
+    pipeline. ``rail_psum``/``rail_psumsq`` carry the per-domain
+    decomposition ``[R, D]`` aligned with ``domains``.
+    """
 
     counts: np.ndarray     # int64 [R]
     psum: np.ndarray       # float64 [R]
     psumsq: np.ndarray     # float64 [R]
     n: int                 # total valid samples
     t_exec: float          # measured horizon incl. suspension overhead
+    rail_psum: np.ndarray | None = None     # float64 [R, D]
+    rail_psumsq: np.ndarray | None = None   # float64 [R, D]
+    domains: tuple[str, ...] = ("total",)
+
+
+def num_channels(num_domains: int) -> int:
+    """Statistic channels for a D-rail run — delegates to the one
+    channel-layout rule (:func:`repro.core.streaming.channels_for`):
+    the rails plus, when D > 1, a dedicated total-power channel (Σpow²
+    of the total is not derivable from per-rail Σpow²). At D = 1 the
+    single rail is the total, bit-identical to the pre-rail carry."""
+    return channels_for(num_domains)
+
+
+def _result_from_channels(counts, chan_psum, chan_psumsq, n, t_exec,
+                          domains) -> PipelineResult:
+    """Split a channel carry into (rail, scalar-total) statistics.
+
+    Accepts the scalar-path 1-D carry (D = 1) or the [R, C] channel
+    carry; the last channel is the total (at D = 1 it is also the only
+    rail), so ``psum``/``psumsq`` are exactly the scalar accumulators."""
+    chan_psum = np.asarray(chan_psum, np.float64)
+    chan_psumsq = np.asarray(chan_psumsq, np.float64)
+    if chan_psum.ndim == 1:
+        chan_psum = chan_psum[:, None]
+        chan_psumsq = chan_psumsq[:, None]
+    d = len(domains)
+    return PipelineResult(counts=np.asarray(counts, np.int64),
+                          psum=chan_psum[:, -1], psumsq=chan_psumsq[:, -1],
+                          n=n, t_exec=t_exec,
+                          rail_psum=chan_psum[:, :d],
+                          rail_psumsq=chan_psumsq[:, :d],
+                          domains=tuple(domains))
 
 
 # ---------------------------------------------------------------------------
@@ -284,20 +366,39 @@ def _energy_at_cnt(bounds_w, eint_w, powers_w, m_w, x, cnt):
 
 def _sensor_powers(spec: SensorSpec, arrs, t, cnt_t, valid, prev,
                    k_max: int):
-    """Per-worker sensor readings [W, c] + updated RAPL prev-sample carry.
+    """Per-worker sensor readings + updated RAPL prev-sample carry.
 
-    ``cnt_t`` is the region lookup's per-worker ``#(ends ≤ t)`` [W, c],
-    reused here (instant power and the INA231 window share the index).
-    ``prev`` is a single f64 scalar (< 0 means "no sample taken yet"):
-    all workers share the sample clock, so the RAPL differencing chain
-    has one prev time regardless of W.
+    Scalar substrates (``powers`` [W, M]) return [W, c] — the verbatim
+    pre-rail computation graph, which is what keeps D=1 outputs
+    bit-identical. Multi-rail substrates (``powers`` [W, D, M]) return
+    [W, D, c]: the sensor bank is vmapped over the domain axis — every
+    rail applies the same instrument semantics to its own energy
+    integral, sharing the worker's interval lookup (``cnt_t`` [W, c]:
+    rails share the clock and the interval structure, so one count
+    serves all channels). ``prev`` is a single f64 scalar (< 0 means
+    "no sample taken yet"): all workers and rails share the sample
+    clock, so the RAPL differencing chain has one prev time regardless
+    of W or D.
     """
     ends, bounds, eint, powers, rids, m_true, grid, cell = arrs
+    scalar = powers.ndim == 2
     count = jax.vmap(_count_le, in_axes=(0, 0, 0, None, None))
-    e_at = jax.vmap(_energy_at_cnt, in_axes=(0, 0, 0, 0, None, 0))
+    if scalar:
+        e_at = jax.vmap(_energy_at_cnt, in_axes=(0, 0, 0, 0, None, 0))
+    else:
+        # Inner vmap batches the domain axis of eint/powers (bounds,
+        # valid length and the sample count are per worker, shared by
+        # its rails); outer vmap batches workers.
+        e_at_d = jax.vmap(_energy_at_cnt,
+                          in_axes=(None, 0, 0, None, None, None))
+        e_at = jax.vmap(e_at_d, in_axes=(0, 0, 0, 0, None, 0))
     if spec.kind == "instant":
-        def one(p_w, m_w, cnt_w):
-            return p_w[jnp.clip(cnt_w, 0, m_w - 1)]
+        if scalar:
+            def one(p_w, m_w, cnt_w):
+                return p_w[jnp.clip(cnt_w, 0, m_w - 1)]
+        else:
+            def one(p_w, m_w, cnt_w):
+                return p_w[:, jnp.clip(cnt_w, 0, m_w - 1)]
         return jax.vmap(one)(powers, m_true, cnt_t), prev
     if spec.kind == "rapl":
         up = spec.update_period
@@ -311,7 +412,7 @@ def _sensor_powers(spec: SensorSpec, arrs, t, cnt_t, valid, prev,
                    count(ends, grid, cell, tq, k_max))
         e_p0 = e_at(bounds, eint, powers, m_true, prev0[None],
                     count(ends, grid, cell, prev0[None], k_max))
-        e_prev = jnp.concatenate([e_p0, e_q[:, :-1]], axis=1)
+        e_prev = jnp.concatenate([e_p0, e_q[..., :-1]], axis=-1)
         prev_vec = jnp.concatenate([prev0[None], tq[:-1]])
         dt = jnp.maximum(tq - prev_vec, up)
         new_prev = jnp.max(jnp.where(valid, tq, -jnp.inf))
@@ -328,8 +429,11 @@ def _sensor_powers(spec: SensorSpec, arrs, t, cnt_t, valid, prev,
 
 def _chunk_samples(arrs, spec: SensorSpec, root, k, c: int, period, jitter,
                    t_end, prev, k_max: int):
-    """One fused chunk: times → region ids [W, c] → summed power [c].
+    """One fused chunk: times → region ids [W, c] → channel powers.
 
+    Scalar substrates produce the summed power [c] (the pre-rail graph);
+    multi-rail substrates produce the [C, c] channel matrix — the
+    worker-summed rails plus the total (see :func:`num_channels`).
     Masking happens here, in the kernel's input domain: lanes past the
     horizon are flagged invalid and their times clipped to ``t_end`` so
     the sensor math stays finite (they contribute nothing downstream).
@@ -345,13 +449,16 @@ def _chunk_samples(arrs, spec: SensorSpec, root, k, c: int, period, jitter,
         return r_w[jnp.clip(cnt_w, 0, m_w - 1)]
     rid_mat = jax.vmap(lookup)(rids, m_true, cnt_t)
     pows, prev = _sensor_powers(spec, arrs, t, cnt_t, valid, prev, k_max)
-    return rid_mat, pows.sum(axis=0), valid, prev
+    chan = pows.sum(axis=0)                  # [c] scalar | [D, c] rails
+    if chan.ndim == 2:
+        chan = jnp.concatenate([chan, chan.sum(axis=0, keepdims=True)])
+    return rid_mat, chan, valid, prev
 
 
 def _check_sampling_args(spec: SensorSpec, period: float, jitter: float):
-    if period < spec.min_period:
+    if period < spec.effective_min_period():
         raise ValueError(f"sampling period {period} below sensor minimum "
-                         f"{spec.min_period}")
+                         f"{spec.effective_min_period()}")
     if jitter > period:
         raise ValueError(
             f"device pipeline requires jitter <= period for a monotone "
@@ -359,15 +466,42 @@ def _check_sampling_args(spec: SensorSpec, period: float, jitter: float):
             f"period={period}")
 
 
+def _check_spec_domains(spec: SensorSpec, dtl: "DeviceTimeline"):
+    """The sensor bank must have one channel per timeline rail."""
+    if spec.num_domains != dtl.num_domains:
+        raise ValueError(
+            f"sensor bank has {spec.num_domains} channel(s) "
+            f"{spec.domains} but the timeline carries "
+            f"{dtl.num_domains} power rail(s) {dtl.domains}")
+
+
 # ---------------------------------------------------------------------------
 # Single-worker region pipeline: whole run in one jitted scan.
 # ---------------------------------------------------------------------------
+
+
+def _blend_idle(chan, frac, idle_power, idle_ch: int):
+    """§4.7 suspension overhead: blend toward idle proportionally to the
+    per-period suspension fraction (frac = 0 → identity). On the scalar
+    graph this is the pre-rail formula verbatim; on the channel matrix
+    the idle power lands on the package rail (``idle_ch``, located by
+    name via :func:`repro.core.sensors.idle_channel` — a suspended chip
+    burns near-idle power in the package, not on HBM/ICI rails) and on
+    the total channel so the scalar statistics see the same blend as
+    before."""
+    if chan.ndim == 1:
+        return (1.0 - frac) * chan + frac * idle_power
+    chan = (1.0 - frac) * chan
+    chan = chan.at[idle_ch].add(frac * idle_power)
+    return chan.at[-1].add(frac * idle_power)
 
 
 @functools.lru_cache(maxsize=None)
 def _region_run_fn(chunk_size: int, spec: SensorSpec, num_regions: int,
                    use_pallas: bool, grid_k: int):
     update = make_carry_update(num_regions, use_pallas=use_pallas)
+    n_chan = num_channels(spec.num_domains)
+    idle_ch = idle_channel(spec.domains)
 
     def run(ends, bounds, eint, powers, rids, m_true, grid, cell, root,
             period, jitter, t_end, frac, idle_power, n_chunks):
@@ -375,19 +509,19 @@ def _region_run_fn(chunk_size: int, spec: SensorSpec, num_regions: int,
 
         def body(k, carry):
             counts, psum, psumsq, n, prev = carry
-            rid_mat, total, valid, prev = _chunk_samples(
+            rid_mat, chan, valid, prev = _chunk_samples(
                 arrs, spec, root, k, chunk_size, period, jitter, t_end,
                 prev, grid_k)
-            # §4.7 suspension overhead: blend toward idle proportionally
-            # to the per-period suspension fraction (frac = 0 → identity).
-            total = (1.0 - frac) * total + frac * idle_power
+            chan = _blend_idle(chan, frac, idle_power, idle_ch)
             counts, psum, psumsq = update(counts, psum, psumsq,
-                                          rid_mat[0], total, valid)
+                                          rid_mat[0], chan, valid)
             return (counts, psum, psumsq, n + jnp.sum(valid), prev)
 
+        stat_shape = (num_regions,) if n_chan == 1 \
+            else (num_regions, n_chan)
         carry0 = (jnp.zeros(num_regions, jnp.int64),
-                  jnp.zeros(num_regions, jnp.float64),
-                  jnp.zeros(num_regions, jnp.float64),
+                  jnp.zeros(stat_shape, jnp.float64),
+                  jnp.zeros(stat_shape, jnp.float64),
                   jnp.zeros((), jnp.int64),
                   -jnp.ones((), jnp.float64))
         counts, psum, psumsq, n, _ = lax.fori_loop(0, n_chunks, body, carry0)
@@ -412,6 +546,7 @@ def run_region_pipeline(dtl: DeviceTimeline, spec: SensorSpec, *,
     :func:`reference_region_pipeline` is the exact numpy mirror.
     """
     _check_sampling_args(spec, period, jitter)
+    _check_spec_domains(spec, dtl)
     if dtl.num_workers != 1:
         raise ValueError(f"region pipeline is single-worker; got "
                          f"W={dtl.num_workers} (use run_combo_pipeline)")
@@ -431,11 +566,9 @@ def run_region_pipeline(dtl: DeviceTimeline, spec: SensorSpec, *,
         n = int(n)
     if n == 0:
         raise ValueError("run too short for sampling period")
-    return PipelineResult(
-        counts=np.asarray(counts, np.int64),
-        psum=np.asarray(psum, np.float64),
-        psumsq=np.asarray(psumsq, np.float64), n=n,
-        t_exec=dtl.t_end + n * overhead_per_sample)
+    return _result_from_channels(counts, psum, psumsq, n,
+                                 dtl.t_end + n * overhead_per_sample,
+                                 dtl.domains)
 
 
 # ---------------------------------------------------------------------------
@@ -518,7 +651,7 @@ def _combo_step_fn(chunk_size: int, spec: SensorSpec, grid_k: int,
         counts, psum, psumsq, n, prev = carry
         prev_in = prev      # pre-chunk sensor state, for miss replay
         arrs = (ends, bounds, eint, powers, rids, m_true, grid, cell)
-        rid_mat, total, valid, prev = _chunk_samples(
+        rid_mat, chan, valid, prev = _chunk_samples(
             arrs, spec, root, k, chunk_size, period, jitter, t_end, prev,
             grid_k)
         cap = counts.shape[0]
@@ -538,8 +671,12 @@ def _combo_step_fn(chunk_size: int, spec: SensorSpec, grid_k: int,
         fold = valid & found & ~any_miss
         idx = jnp.where(fold, table_ids[pos], cap)
         counts = counts.at[idx].add(jnp.ones((), counts.dtype), mode="drop")
-        psum = psum.at[idx].add(total, mode="drop")
-        psumsq = psumsq.at[idx].add(total * total, mode="drop")
+        if psum.ndim == 1:      # scalar substrate: the pre-rail graph
+            psum = psum.at[idx].add(chan, mode="drop")
+            psumsq = psumsq.at[idx].add(chan * chan, mode="drop")
+        else:
+            psum = psum.at[idx].add(chan.T, mode="drop")
+            psumsq = psumsq.at[idx].add((chan * chan).T, mode="drop")
         carry = (counts, psum, psumsq, n + jnp.sum(fold), prev)
         return carry, any_miss, prev_in
 
@@ -554,21 +691,26 @@ def _chunk_recompute_fn(chunk_size: int, spec: SensorSpec, grid_k: int):
     def recompute(ends, bounds, eint, powers, rids, m_true, grid, cell,
                   root, k, period, jitter, t_end, prev):
         arrs = (ends, bounds, eint, powers, rids, m_true, grid, cell)
-        rid_mat, total, valid, _ = _chunk_samples(
+        rid_mat, chan, valid, _ = _chunk_samples(
             arrs, spec, root, k, chunk_size, period, jitter, t_end, prev,
             grid_k)
-        return rid_mat, total, valid
+        return rid_mat, chan, valid
     return jax.jit(recompute)
 
 
 def _combo_fold(carry, idx, pows, valid):
     """Fixed-shape host-assisted fold for miss chunks: encoded combination
     ids (padded with the out-of-bounds cap index) scatter into the donated
-    carry exactly like the on-device path would have."""
+    carry exactly like the on-device path would have. ``pows`` is [c]
+    (scalar substrate) or the [C, c] channel matrix."""
     counts, psum, psumsq, n, prev = carry
     counts = counts.at[idx].add(jnp.ones((), counts.dtype), mode="drop")
-    psum = psum.at[idx].add(pows, mode="drop")
-    psumsq = psumsq.at[idx].add(pows * pows, mode="drop")
+    if psum.ndim == 1:
+        psum = psum.at[idx].add(pows, mode="drop")
+        psumsq = psumsq.at[idx].add(pows * pows, mode="drop")
+    else:
+        psum = psum.at[idx].add(pows.T, mode="drop")
+        psumsq = psumsq.at[idx].add((pows * pows).T, mode="drop")
     return (counts, psum, psumsq, n + jnp.sum(valid), prev)
 
 
@@ -616,16 +758,21 @@ def run_combo_pipeline(dtl: DeviceTimeline, spec: SensorSpec, *,
     steady-state zero-transfer claim is ``miss_chunks ≪ chunks``).
     """
     _check_sampling_args(spec, period, jitter)
+    _check_spec_domains(spec, dtl)
     W = dtl.num_workers
     miss_chunks = 0
+    n_chan = num_channels(dtl.num_domains)
     pack = _pack_spec(dtl.num_regions, W)
     interner = CombinationInterner()
     with enable_x64():
         step = _combo_step_fn(chunk_size, spec, dtl.grid_k, pack)
         cap = _TABLE_MIN
+        stat_shape = (cap,) if n_chan == 1 else (cap, n_chan)
         table, table_ids, n_rows = _build_table(interner, cap, W, pack)
-        carry = (jnp.zeros(cap, jnp.int64), jnp.zeros(cap, jnp.float64),
-                 jnp.zeros(cap, jnp.float64), jnp.zeros((), jnp.int64),
+        carry = (jnp.zeros(cap, jnp.int64),
+                 jnp.zeros(stat_shape, jnp.float64),
+                 jnp.zeros(stat_shape, jnp.float64),
+                 jnp.zeros((), jnp.int64),
                  -jnp.ones((), jnp.float64))
         root = jax.random.PRNGKey(seed)
         period_j = jnp.float64(period)
@@ -651,13 +798,16 @@ def run_combo_pipeline(dtl: DeviceTimeline, spec: SensorSpec, *,
             if len(interner) > cap:
                 new_cap = 1 << (len(interner) - 1).bit_length()
                 pad = new_cap - cap
+                pad_stat = (pad,) if n_chan == 1 else (pad, n_chan)
                 counts, psum, psumsq, n, prev = carry
                 carry = (jnp.concatenate([counts,
                                           jnp.zeros(pad, counts.dtype)]),
                          jnp.concatenate([psum,
-                                          jnp.zeros(pad, psum.dtype)]),
+                                          jnp.zeros(pad_stat,
+                                                    psum.dtype)]),
                          jnp.concatenate([psumsq,
-                                          jnp.zeros(pad, psumsq.dtype)]),
+                                          jnp.zeros(pad_stat,
+                                                    psumsq.dtype)]),
                          n, prev)
                 cap = new_cap
             table, table_ids, n_rows = _build_table(interner, cap, W, pack)
@@ -677,7 +827,8 @@ def run_combo_pipeline(dtl: DeviceTimeline, spec: SensorSpec, *,
     if n == 0:
         raise ValueError("run too short for sampling period")
     agg = StreamingCombinationAggregator.from_table(
-        interner.combo_matrix(), counts, psum, psumsq)
+        interner.combo_matrix(), counts, psum, psumsq,
+        domains=dtl.domains)
     return agg, n
 
 
@@ -696,15 +847,19 @@ def _ref_times(seed: int, k: int, period: float, jitter: float,
 
 
 def _ref_reader(spec: SensorSpec, tl: Timeline):
-    """Per-run chunk reader ``(t, valid, prev) -> (powers, new_prev)``.
+    """Per-run chunk reader ``(t, valid, prev) -> (rails [n, D], new_prev)``.
 
     Sensors/precomputations are built once per run (not per chunk); the
     RAPL prev-sample state is carried by the caller because it crosses
-    chunk boundaries. The INA231 branch reuses the real host sensor
-    (stateless window semantics) so the oracle can't drift from the
-    instrument model."""
+    chunk boundaries. The instant/INA231 branches reuse the real trace
+    sensors' ``read_rails`` (stateless semantics) so the oracle can't
+    drift from the instrument model. For scalar (D=1) timelines the
+    single rail column is bit-identical to the old scalar reader.
+    """
     if spec.kind == "instant":
-        return lambda t, valid, prev: (tl.power_at(t), prev)
+        from repro.core.sensors import InstantTraceSensor
+        sens = InstantTraceSensor(tl)
+        return lambda t, valid, prev: (sens.read_rails(t), prev)
     if spec.kind == "rapl":
         base = _TraceSensorBase(tl)
         up = spec.update_period
@@ -715,15 +870,23 @@ def _ref_reader(spec: SensorSpec, tl: Timeline):
             prev_vec = np.where(prev_vec < 0.0, np.maximum(tq - up, 0.0),
                                 prev_vec)
             dt = np.maximum(tq - prev_vec, up)
-            p = (base._energy_at(tq) - base._energy_at(prev_vec)) / dt
+            p = (base._energy_rails_at(tq)
+                 - base._energy_rails_at(prev_vec)) / dt[:, None]
             new_prev = float(tq[valid][-1]) if valid.any() else prev
             return p, new_prev
         return read
     if spec.kind == "ina231":
         from repro.core.sensors import Ina231TraceSensor
         sens = Ina231TraceSensor(tl, window=spec.window)
-        return lambda t, valid, prev: (sens.read(t), prev)
+        return lambda t, valid, prev: (sens.read_rails(t), prev)
     raise ValueError(f"unknown trace sensor kind: {spec.kind!r}")
+
+
+def _ref_channels(rails: np.ndarray) -> np.ndarray:
+    """[n, D] rails → [n, C] channels (total appended when D > 1)."""
+    if rails.shape[1] == 1:
+        return rails
+    return np.concatenate([rails, rails.sum(axis=1, keepdims=True)], axis=1)
 
 
 def reference_region_pipeline(tl: Timeline, spec: SensorSpec, *,
@@ -740,13 +903,19 @@ def reference_region_pipeline(tl: Timeline, spec: SensorSpec, *,
     to float64 elementwise-rounding differences.
     """
     _check_sampling_args(spec, period, jitter)
+    if spec.num_domains != tl.num_domains:
+        raise ValueError(
+            f"sensor bank has {spec.num_domains} channel(s) but the "
+            f"timeline carries {tl.num_domains} power rail(s)")
     R = len(tl.names)
+    C = num_channels(tl.num_domains)
+    idle_ch = idle_channel(tl.domain_names)
     reader = _ref_reader(spec, tl)
     frac = min(overhead_per_sample / period, 1.0) \
         if overhead_per_sample > 0.0 else 0.0
     counts = np.zeros(R, np.int64)
-    psum = np.zeros(R, np.float64)
-    psumsq = np.zeros(R, np.float64)
+    psum = np.zeros((R, C), np.float64)
+    psumsq = np.zeros((R, C), np.float64)
     prev = -1.0
     t_end = tl.t_exec
     n = 0
@@ -755,17 +924,23 @@ def reference_region_pipeline(tl: Timeline, spec: SensorSpec, *,
         valid = t_raw < t_end
         t = np.minimum(t_raw, t_end)
         rids = tl.region_at(t)
-        pows, prev = reader(t, valid, prev)
-        pows = (1.0 - frac) * pows + frac * idle_power
-        rv, pv = rids[valid], pows[valid]
+        rails, prev = reader(t, valid, prev)
+        chan = (1.0 - frac) * _ref_channels(rails)
+        chan[:, idle_ch] += frac * idle_power
+        if C > 1:
+            chan[:, -1] += frac * idle_power
+        rv, pv = rids[valid], chan[valid]
         counts += np.bincount(rv, minlength=R).astype(np.int64)
-        psum += np.bincount(rv, weights=pv, minlength=R)
-        psumsq += np.bincount(rv, weights=pv * pv, minlength=R)
+        for j in range(C):
+            psum[:, j] += np.bincount(rv, weights=pv[:, j], minlength=R)
+            psumsq[:, j] += np.bincount(rv, weights=pv[:, j] * pv[:, j],
+                                        minlength=R)
         n += int(valid.sum())
     if n == 0:
         raise ValueError("run too short for sampling period")
-    return PipelineResult(counts=counts, psum=psum, psumsq=psumsq, n=n,
-                          t_exec=t_end + n * overhead_per_sample)
+    return _result_from_channels(counts, psum, psumsq, n,
+                                 t_end + n * overhead_per_sample,
+                                 tl.domain_names)
 
 
 def reference_combo_pipeline(timelines: list[Timeline], spec_fn, *,
@@ -781,11 +956,16 @@ def reference_combo_pipeline(timelines: list[Timeline], spec_fn, *,
     device path's miss fallback does, so combination ids line up 1:1.
     """
     specs = [spec_fn(tl) for tl in timelines]
-    for s in specs:
+    for s, tl in zip(specs, timelines):
         _check_sampling_args(s, period, jitter)
+        if s.num_domains != tl.num_domains:
+            raise ValueError("sensor bank / timeline rail count mismatch")
+    domains = timelines[0].domain_names
+    if any(tl.domain_names != domains for tl in timelines):
+        raise ValueError("workers must share a power-rail domain axis")
     readers = [_ref_reader(s, tl) for s, tl in zip(specs, timelines)]
     t_end = min(tl.t_exec for tl in timelines)
-    agg = StreamingCombinationAggregator()
+    agg = StreamingCombinationAggregator(domains=domains)
     prev = -1.0
     n = 0
     for k in range(num_chunks(t_end, period, chunk_size)):
@@ -793,13 +973,15 @@ def reference_combo_pipeline(timelines: list[Timeline], spec_fn, *,
         valid = t_raw < t_end
         t = np.minimum(t_raw, t_end)
         rid_mat = np.stack([tl.region_at(t) for tl in timelines], axis=1)
-        total = np.zeros(len(t), np.float64)
+        rails = np.zeros((len(t), len(domains)), np.float64)
         new_prev = prev
         for reader in readers:
             p, new_prev = reader(t, valid, prev)
-            total += p
+            rails += p
         prev = new_prev
-        agg.update(rid_mat[valid].astype(np.int64), total[valid])
+        pv = rails[valid]
+        agg.update(rid_mat[valid].astype(np.int64),
+                   pv[:, 0] if len(domains) == 1 else pv)
         n += int(valid.sum())
     if n == 0:
         raise ValueError("run too short for sampling period")

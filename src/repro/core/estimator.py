@@ -88,7 +88,12 @@ def z_quantile(alpha: float) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class RegionEstimate:
-    """Per-region (or per-combination) ALEA estimates with CIs."""
+    """Per-region (or per-combination) ALEA estimates with CIs.
+
+    ``pow_rails``/``e_rails`` carry the per-domain decomposition (aligned
+    with ``domains``) when the profiling run measured multiple power
+    rails; single-rail runs leave them ``None`` — nothing else changes.
+    """
 
     region_id: int
     name: str
@@ -104,10 +109,19 @@ class RegionEstimate:
     e_lo: float               # Eq. 16 lower
     e_hi: float               # Eq. 16 upper
     ci_valid: bool            # Wald validity: n·p̂>5 and n·(1-p̂)>5 (§4.3)
+    domains: tuple[str, ...] | None = None
+    pow_rails: tuple[float, ...] | None = None   # Eq. 6 per rail [W]
+    e_rails: tuple[float, ...] | None = None     # Eq. 7 per rail [J]
 
     @property
     def t_ci_halfwidth(self) -> float:
         return 0.5 * (self.t_hi - self.t_lo)
+
+    def energy_by_domain(self) -> Mapping[str, float]:
+        """Per-domain energy split of this region (empty if single-rail)."""
+        if self.domains is None:
+            return {}
+        return dict(zip(self.domains, self.e_rails))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,12 +148,26 @@ class EstimateTable:
     e_lo: np.ndarray
     e_hi: np.ndarray
     ci_valid: np.ndarray      # bool [k]
+    # Per-domain decomposition (multi-rail runs only; None otherwise).
+    domains: tuple[str, ...] | None = None
+    pow_rails: np.ndarray | None = None      # float64 [k, D]
+    pow_rails_lo: np.ndarray | None = None   # per-rail power CI (Eq. 12-14)
+    pow_rails_hi: np.ndarray | None = None
+    e_rails: np.ndarray | None = None        # float64 [k, D]
+    e_rails_lo: np.ndarray | None = None     # per-rail Eq. 16 product CI
+    e_rails_hi: np.ndarray | None = None
 
     def __len__(self) -> int:
         return len(self.region_ids)
 
     def row(self, i: int) -> RegionEstimate:
         """Materialize one row as a RegionEstimate view."""
+        rails = {}
+        if self.domains is not None:
+            rails = dict(
+                domains=self.domains,
+                pow_rails=tuple(float(x) for x in self.pow_rails[i]),
+                e_rails=tuple(float(x) for x in self.e_rails[i]))
         return RegionEstimate(
             region_id=int(self.region_ids[i]), name=self.names[i],
             n_samples=int(self.n_samples[i]), p_hat=float(self.p_hat[i]),
@@ -147,7 +175,8 @@ class EstimateTable:
             t_hi=float(self.t_hi[i]), pow_hat=float(self.pow_hat[i]),
             pow_lo=float(self.pow_lo[i]), pow_hi=float(self.pow_hi[i]),
             e_hat=float(self.e_hat[i]), e_lo=float(self.e_lo[i]),
-            e_hi=float(self.e_hi[i]), ci_valid=bool(self.ci_valid[i]))
+            e_hi=float(self.e_hi[i]), ci_valid=bool(self.ci_valid[i]),
+            **rails)
 
     def rows(self) -> tuple[RegionEstimate, ...]:
         return tuple(self.row(i) for i in range(len(self)))
@@ -204,6 +233,18 @@ class EstimateSet:
     def total_time(self) -> float:
         return float(self.table.t_hat.sum())
 
+    @property
+    def domains(self) -> tuple[str, ...] | None:
+        """Power-rail domain names of a multi-rail run, else None."""
+        return self.table.domains
+
+    def energy_by_domain(self) -> Mapping[str, float]:
+        """Whole-run energy per power rail (empty for single-rail runs)."""
+        if self.table.domains is None:
+            return {}
+        return {d: float(self.table.e_rails[:, j].sum())
+                for j, d in enumerate(self.table.domains)}
+
     def dominant(self, k: int = 1) -> tuple[RegionEstimate, ...]:
         """Top-k regions by estimated energy (hotspot analysis, §7.1)."""
         idx = np.argsort(-self.table.e_hat, kind="stable")[:k]
@@ -232,12 +273,18 @@ def aggregate_samples_np(region_ids: np.ndarray, powers: np.ndarray,
 
 def _build_estimates(counts: np.ndarray, psum: np.ndarray, psumsq: np.ndarray,
                      names: Sequence[str], t_exec: float, alpha: float,
-                     drop_empty: bool) -> EstimateSet:
+                     drop_empty: bool, rail_psum: np.ndarray | None = None,
+                     rail_psumsq: np.ndarray | None = None,
+                     domains: Sequence[str] | None = None) -> EstimateSet:
     """Vectorized Eq. 4-16 over the per-region sufficient statistics.
 
     Pure numpy column math — no per-region Python loop — so multi-worker
     runs with 10⁴–10⁵ combinations build in array time. Returns an
-    EstimateSet backed by a columnar EstimateTable.
+    EstimateSet backed by a columnar EstimateTable. ``rail_psum``/
+    ``rail_psumsq`` [R, D] extend the table with the per-domain
+    decomposition: the same Eq. 6/7/12-16 column math applies per rail
+    (the time proportion — and so the Wald interval — is shared, since
+    all rails ride one sample clock).
     """
     counts = np.asarray(counts, dtype=np.int64)
     psum = np.asarray(psum, dtype=np.float64)
@@ -252,6 +299,9 @@ def _build_estimates(counts: np.ndarray, psum: np.ndarray, psumsq: np.ndarray,
         keep = counts > 0
         rids, counts = rids[keep], counts[keep]
         psum, psumsq = psum[keep], psumsq[keep]
+        if rail_psum is not None:
+            rail_psum = rail_psum[keep]
+            rail_psumsq = rail_psumsq[keep]
 
     p_hat = counts / n
     # Eq. 8/9: Wald interval on the Bernoulli proportion.
@@ -259,17 +309,32 @@ def _build_estimates(counts: np.ndarray, psum: np.ndarray, psumsq: np.ndarray,
     p_lo = np.maximum(p_hat - z * se_p, 0.0)
     p_hi = np.minimum(p_hat + z * se_p, 1.0)
     t_hat = p_hat * t_exec
-    # Eq. 6 and 12-14: mean power and its normal CI.
-    nz = counts > 0
-    pow_hat = np.divide(psum, counts, out=np.zeros_like(psum), where=nz)
-    gt1 = counts > 1
-    var = np.divide(psumsq - counts * pow_hat * pow_hat,
-                    np.maximum(counts - 1, 1),
-                    out=np.zeros_like(psum), where=gt1)
-    se_pow = np.sqrt(np.maximum(var, 0.0) / np.maximum(counts, 1))
-    pow_lo = pow_hat - z * se_pow
-    pow_hi = pow_hat + z * se_pow
+
+    def power_ci(s, sq, cnt):
+        """Eq. 6 and 12-14 column math (shared by total and rails)."""
+        nz = cnt > 0
+        hat = np.divide(s, cnt, out=np.zeros_like(s), where=nz)
+        gt1 = cnt > 1
+        var = np.divide(sq - cnt * hat * hat, np.maximum(cnt - 1, 1),
+                        out=np.zeros_like(s), where=gt1)
+        se = np.sqrt(np.maximum(var, 0.0) / np.maximum(cnt, 1))
+        return hat, hat - z * se, hat + z * se
+
+    pow_hat, pow_lo, pow_hi = power_ci(psum, psumsq,
+                                       counts.astype(np.float64))
     e_hat = pow_hat * t_hat                      # Eq. 7
+    rails = {}
+    if rail_psum is not None:
+        cnt_d = counts.astype(np.float64)[:, None]
+        pr_hat, pr_lo, pr_hi = power_ci(
+            np.asarray(rail_psum, np.float64),
+            np.asarray(rail_psumsq, np.float64), cnt_d)
+        rails = dict(
+            domains=tuple(domains),
+            pow_rails=pr_hat, pow_rails_lo=pr_lo, pow_rails_hi=pr_hi,
+            e_rails=pr_hat * t_hat[:, None],
+            e_rails_lo=(p_lo * t_exec)[:, None] * pr_lo,   # Eq. 16 per rail
+            e_rails_hi=(p_hi * t_exec)[:, None] * pr_hi)
     n_names = len(names)
     table = EstimateTable(
         region_ids=rids,
@@ -287,6 +352,7 @@ def _build_estimates(counts: np.ndarray, psum: np.ndarray, psumsq: np.ndarray,
         e_lo=p_lo * t_exec * pow_lo,             # Eq. 16
         e_hi=p_hi * t_exec * pow_hi,
         ci_valid=(n * p_hat > 5.0) & (n * (1.0 - p_hat) > 5.0),
+        **rails,
     )
     return EstimateSet(table=table, n_total=n, t_exec=float(t_exec),
                        alpha=alpha)
@@ -295,17 +361,29 @@ def _build_estimates(counts: np.ndarray, psum: np.ndarray, psumsq: np.ndarray,
 def estimates_from_statistics(counts: np.ndarray, psum: np.ndarray,
                               psumsq: np.ndarray, t_exec: float,
                               names: Sequence[str], *, alpha: float = 0.05,
-                              drop_empty: bool = True) -> EstimateSet:
+                              drop_empty: bool = True,
+                              rail_psum: np.ndarray | None = None,
+                              rail_psumsq: np.ndarray | None = None,
+                              domains: Sequence[str] | None = None
+                              ) -> EstimateSet:
     """Build estimates directly from pre-aggregated sufficient statistics.
 
     Entry point for the streaming path: a
     :class:`repro.core.streaming.StreamingAggregator` (or any multi-host
     shard reduction) hands its merged (counts, Σpow, Σpow²) here without
-    ever materializing the raw sample stream.
+    ever materializing the raw sample stream. ``rail_psum``/``rail_psumsq``
+    + ``domains`` add the per-domain columns for multi-rail runs.
     """
+    if not (rail_psum is None) == (rail_psumsq is None) == (domains is None):
+        raise ValueError("rail_psum, rail_psumsq and domains must be "
+                         "passed together")
     return _build_estimates(np.asarray(counts), np.asarray(psum),
                             np.asarray(psumsq), list(names), t_exec, alpha,
-                            drop_empty)
+                            drop_empty,
+                            rail_psum=None if rail_psum is None
+                            else np.asarray(rail_psum),
+                            rail_psumsq=None if rail_psumsq is None
+                            else np.asarray(rail_psumsq), domains=domains)
 
 
 def estimate_regions(region_ids: np.ndarray, powers: np.ndarray,

@@ -36,11 +36,20 @@ module moves it across hosts, two ways:
   the same union ids as a single aggregator fed the concatenated stream
   — id assignment is reduction-shape independent.
 
-Shard manifest schema (see ROADMAP "exchange formats"): arrays
-``counts`` int64[cap], ``psum``/``psumsq`` float64[cap] and, for
-combination shards, ``combos`` int64[cap, width]; manifest ``meta`` keys
-``kind`` ("region"|"combination"), ``host_id``, ``epoch``, ``n_rows``
-(valid prefix — rows past it are padding for fixed-shape collectives).
+Shard manifest schema v2 (see ROADMAP "exchange formats"): arrays
+``counts`` int64[cap], ``psum``/``psumsq`` float64 — 1-D [cap] for
+single-domain shards (byte-identical to the schema-v1 layout) or
+[cap, C] channel matrices for multi-domain shards (the power-rail
+``domains`` plus the total channel, cf.
+:func:`repro.core.streaming.channels_for`) — and, for combination
+shards, ``combos`` int64[cap, width]; manifest ``meta`` keys ``kind``
+("region"|"combination"), ``host_id``, ``epoch``, ``n_rows`` (valid
+prefix — rows past it are padding for fixed-shape collectives),
+``schema_version`` (2) and ``domains`` (the rail axis). Readers accept
+legacy v1 epochs (no ``domains`` key, 1-D statistics) transparently —
+they normalize to the single-domain in-memory form — so pre-rail spill
+directories keep gathering, including mixed with v2 delta-publishing
+hosts; merges refuse mismatched domain axes loudly.
 
 **Incremental (delta) spills.** Republishing the full shard every epoch
 costs O(rows) bandwidth per epoch — O(run length · rows) per host over a
@@ -76,6 +85,7 @@ import dataclasses
 import os
 import re
 import shutil
+import weakref
 from typing import Sequence
 
 import numpy as np
@@ -83,7 +93,8 @@ import numpy as np
 from repro.checkpoint import ckpt
 from repro.core.estimator import AggregateFn
 from repro.core.streaming import (StreamingAggregator,
-                                  StreamingCombinationAggregator)
+                                  StreamingCombinationAggregator,
+                                  channels_for)
 
 __all__ = [
     "PackedShard", "pack_shard", "unpack_shard",
@@ -113,13 +124,33 @@ class PackedShard:
     stack into one mesh-reducible array. ``combos`` is the host-local
     combination key table (None for plain region shards) — receivers
     dedupe it lazily at merge via ``CombinationInterner.intern_rows``.
+
+    Schema v2: ``psum``/``psumsq`` carry the channel axis ``[cap, C]``
+    (``domains`` rails plus, for D > 1, the total channel — see
+    :func:`repro.core.streaming.channels_for`). Single-domain shards
+    have C = 1, and serialize 1-D exactly like schema v1 — readers
+    normalize either layout into this in-memory form.
     """
 
     counts: np.ndarray            # int64 [cap]
-    psum: np.ndarray              # float64 [cap]
-    psumsq: np.ndarray            # float64 [cap]
+    psum: np.ndarray              # float64 [cap, C]
+    psumsq: np.ndarray            # float64 [cap, C]
     n_rows: int
     combos: np.ndarray | None = None   # int64 [cap, width] or None
+    domains: tuple[str, ...] = ("total",)
+
+    def __post_init__(self):
+        # 1-D statistics are the scalar (v1-layout) form; normalize to
+        # the one-channel matrix so every consumer sees [cap, C].
+        if self.psum.ndim == 1:
+            object.__setattr__(self, "psum", self.psum[:, None])
+        if self.psumsq.ndim == 1:
+            object.__setattr__(self, "psumsq", self.psumsq[:, None])
+        c = channels_for(self.domains)
+        if self.psum.shape[1] != c or self.psumsq.shape[1] != c:
+            raise ValueError(
+                f"shard has {self.psum.shape[1]} channels; domain axis "
+                f"{self.domains} requires {c}")
 
     @property
     def kind(self) -> str:
@@ -128,6 +159,10 @@ class PackedShard:
     @property
     def capacity(self) -> int:
         return len(self.counts)
+
+    @property
+    def num_channels(self) -> int:
+        return self.psum.shape[1]
 
 
 def _pad(arr: np.ndarray, cap: int) -> np.ndarray:
@@ -152,14 +187,16 @@ def pack_shard(agg: StreamingAggregator | StreamingCombinationAggregator,
         cap = n_rows if capacity is None else capacity
         return PackedShard(
             counts=_pad(agg.agg.counts[:n_rows], cap),
-            psum=_pad(agg.agg.psum[:n_rows], cap),
-            psumsq=_pad(agg.agg.psumsq[:n_rows], cap),
-            n_rows=n_rows, combos=_pad(combos, cap))
+            psum=_pad(agg.agg.chan_psum[:n_rows], cap),
+            psumsq=_pad(agg.agg.chan_psumsq[:n_rows], cap),
+            n_rows=n_rows, combos=_pad(combos, cap),
+            domains=agg.domains)
     n_rows = agg.num_regions
     cap = n_rows if capacity is None else capacity
     return PackedShard(counts=_pad(agg.counts, cap),
-                       psum=_pad(agg.psum, cap),
-                       psumsq=_pad(agg.psumsq, cap), n_rows=n_rows)
+                       psum=_pad(agg.chan_psum, cap),
+                       psumsq=_pad(agg.chan_psumsq, cap), n_rows=n_rows,
+                       domains=agg.domains)
 
 
 def unpack_shard(shard: PackedShard, *,
@@ -168,12 +205,11 @@ def unpack_shard(shard: PackedShard, *,
     """Reconstruct a live aggregator from a packed shard."""
     k = shard.n_rows
     if shard.combos is None:
-        agg = StreamingAggregator(k, aggregate_fn=aggregate_fn)
-        agg.counts += np.asarray(shard.counts[:k], np.int64)
-        agg.psum += np.asarray(shard.psum[:k], np.float64)
-        agg.psumsq += np.asarray(shard.psumsq[:k], np.float64)
-        return agg
-    cagg = StreamingCombinationAggregator(aggregate_fn=aggregate_fn)
+        return StreamingAggregator.from_statistics(
+            shard.counts[:k], shard.psum[:k], shard.psumsq[:k],
+            aggregate_fn=aggregate_fn, domains=shard.domains)
+    cagg = StreamingCombinationAggregator(aggregate_fn=aggregate_fn,
+                                          domains=shard.domains)
     cagg.merge_table(shard.combos[:k], shard.counts[:k],
                      shard.psum[:k], shard.psumsq[:k])
     return cagg
@@ -250,6 +286,10 @@ def collective_reduce(shards: Sequence[StreamingAggregator |
     kinds = {p.kind for p in packed}
     if len(kinds) != 1:
         raise ValueError(f"mixed shard kinds: {sorted(kinds)}")
+    domain_axes = {p.domains for p in packed}
+    if len(domain_axes) != 1:
+        raise ValueError(f"mixed shard domain axes: {sorted(domain_axes)}")
+    domains = domain_axes.pop()
     if KIND_COMBINATION in kinds:
         # A host that saw no traffic has a width-0 key table; its combos
         # must still stack to the fleet's fixed [cap, width] shape (its
@@ -286,7 +326,8 @@ def collective_reduce(shards: Sequence[StreamingAggregator |
             # n_rows; the merged statistics span the full capacity.
             return unpack_shard(
                 PackedShard(counts=np.asarray(c), psum=np.asarray(s),
-                            psumsq=np.asarray(q), n_rows=capacity),
+                            psumsq=np.asarray(q), n_rows=capacity,
+                            domains=domains),
                 aggregate_fn=aggregate_fn)
 
         combos = _stack_global(mesh, axis, [p.combos for p in packed])
@@ -303,7 +344,8 @@ def collective_reduce(shards: Sequence[StreamingAggregator |
 
         g = smap(_gather)(combos, counts, psum, psumsq, n_rows)
         g_combos, g_counts, g_psum, g_psumsq, g_rows = map(np.asarray, g)
-        merged = StreamingCombinationAggregator(aggregate_fn=aggregate_fn)
+        merged = StreamingCombinationAggregator(aggregate_fn=aggregate_fn,
+                                                domains=domains)
         for h in range(n_hosts):
             k = int(g_rows[h, 0])
             merged.merge_table(g_combos[h, :k], g_counts[h, :k],
@@ -324,14 +366,42 @@ def _epoch_dir(hd: str, epoch: int) -> str:
     return os.path.join(hd, f"epoch_{epoch:09d}")
 
 
+def _wire_stats(arr: np.ndarray) -> np.ndarray:
+    """[cap, C] channel matrix → wire layout: single-channel shards write
+    the 1-D array schema v1 wrote (same data bytes; v1 readers could even
+    consume them), multi-channel shards write [cap, C]."""
+    return arr[:, 0] if arr.shape[1] == 1 else arr
+
+
+def _unwire_stats(arr: np.ndarray, domains: tuple[str, ...]) -> np.ndarray:
+    """Wire layout → [cap, C]: v1 shards (and v2 single-domain shards)
+    store 1-D arrays; reshape to the one-channel matrix."""
+    arr = np.asarray(arr, np.float64)
+    if arr.ndim == 1:
+        arr = arr[:, None]
+    c = channels_for(domains)
+    if arr.shape[1] != c:
+        raise IOError(f"shard statistics have {arr.shape[1]} channels; "
+                      f"domain axis {domains} requires {c}")
+    return arr
+
+
+def _meta_domains(manifest: dict) -> tuple[str, ...]:
+    """Domain axis of an epoch dir; schema v1 manifests (no ``domains``
+    key) are single-domain by construction."""
+    return tuple(manifest.get("domains", ("total",)))
+
+
 def _spill_packed(path: str, host_id: int, epoch: int, shard: PackedShard,
                   *, extra_meta: dict | None = None) -> str:
     hd = _host_dir(path, host_id)
     os.makedirs(hd, exist_ok=True)
-    arrays = [shard.counts, shard.psum, shard.psumsq]
+    arrays = [shard.counts, _wire_stats(shard.psum),
+              _wire_stats(shard.psumsq)]
     meta = {"kind": shard.kind, "host_id": host_id, "epoch": epoch,
             "n_rows": shard.n_rows,
-            "schema": ["counts", "psum", "psumsq"]}
+            "schema": ["counts", "psum", "psumsq"],
+            "schema_version": 2, "domains": list(shard.domains)}
     if extra_meta:
         meta["extra"] = dict(extra_meta)
     if shard.combos is not None:
@@ -363,14 +433,21 @@ def spill_shard(path: str, host_id: int, epoch: int,
 
 
 def _load_shard(hd: str, epoch: int) -> PackedShard:
-    """Load one *full* epoch dir (no chain resolution)."""
+    """Load one *full* epoch dir (no chain resolution).
+
+    Accepts both wire schemas: v1 (1-D psum/psumsq, no ``domains`` meta)
+    and v2 ([cap, C] channel matrices + ``domains``) normalize into the
+    same in-memory :class:`PackedShard`.
+    """
     d = _epoch_dir(hd, epoch)
     arrays, manifest = ckpt.read_manifest_dir(d)
     named = dict(zip(manifest["schema"], arrays))
+    domains = _meta_domains(manifest)
     return PackedShard(counts=named["counts"].astype(np.int64),
-                       psum=named["psum"], psumsq=named["psumsq"],
+                       psum=_unwire_stats(named["psum"], domains),
+                       psumsq=_unwire_stats(named["psumsq"], domains),
                        n_rows=int(manifest["n_rows"]),
-                       combos=named.get("combos"))
+                       combos=named.get("combos"), domains=domains)
 
 
 def restore_shard(path: str, host_id: int, *,
@@ -488,11 +565,18 @@ class ShardDelta:
 
     idx: np.ndarray               # int64 [k] changed-row indices
     counts: np.ndarray            # int64 [k] replacement values at idx
-    psum: np.ndarray              # float64 [k]
-    psumsq: np.ndarray            # float64 [k]
+    psum: np.ndarray              # float64 [k, C]
+    psumsq: np.ndarray            # float64 [k, C]
     n_rows: int                   # rows after applying
     prev_rows: int                # rows in the state this builds on
     combos_new: np.ndarray | None = None   # int64 [n_rows-prev_rows, width]
+    domains: tuple[str, ...] = ("total",)
+
+    def __post_init__(self):
+        if self.psum.ndim == 1:
+            object.__setattr__(self, "psum", self.psum[:, None])
+        if self.psumsq.ndim == 1:
+            object.__setattr__(self, "psumsq", self.psumsq[:, None])
 
     @property
     def kind(self) -> str:
@@ -509,6 +593,8 @@ def compute_shard_delta(prev: PackedShard, cur: PackedShard) -> ShardDelta:
     """
     if (prev.combos is None) != (cur.combos is None):
         raise ValueError("shard kind changed between epochs")
+    if prev.domains != cur.domains:
+        raise ValueError("shard domain axis changed between epochs")
     n0, n1 = prev.n_rows, cur.n_rows
     if n1 < n0:
         raise ValueError(f"shard shrank: {n1} < {n0} rows")
@@ -518,8 +604,8 @@ def compute_shard_delta(prev: PackedShard, cur: PackedShard) -> ShardDelta:
         if not np.array_equal(prev.combos[:n0], cur.combos[:n0]):
             raise ValueError("combination key rows are not append-only")
     changed = ((cur.counts[:n0] != prev.counts[:n0])
-               | (cur.psum[:n0] != prev.psum[:n0])
-               | (cur.psumsq[:n0] != prev.psumsq[:n0]))
+               | (cur.psum[:n0] != prev.psum[:n0]).any(axis=1)
+               | (cur.psumsq[:n0] != prev.psumsq[:n0]).any(axis=1))
     idx = np.concatenate([np.flatnonzero(changed),
                           np.arange(n0, n1)]).astype(np.int64)
     combos_new = None
@@ -529,11 +615,18 @@ def compute_shard_delta(prev: PackedShard, cur: PackedShard) -> ShardDelta:
                       counts=np.asarray(cur.counts, np.int64)[idx],
                       psum=np.asarray(cur.psum, np.float64)[idx],
                       psumsq=np.asarray(cur.psumsq, np.float64)[idx],
-                      n_rows=n1, prev_rows=n0, combos_new=combos_new)
+                      n_rows=n1, prev_rows=n0, combos_new=combos_new,
+                      domains=cur.domains)
 
 
 def _grow_1d(arr: np.ndarray, n: int, dtype) -> np.ndarray:
     out = np.zeros(n, dtype)
+    out[:len(arr)] = arr
+    return out
+
+
+def _grow_2d(arr: np.ndarray, n: int, dtype) -> np.ndarray:
+    out = np.zeros((n, arr.shape[1]), dtype)
     out[:len(arr)] = arr
     return out
 
@@ -547,6 +640,9 @@ def apply_shard_delta(shard: PackedShard, delta: ShardDelta) -> PackedShard:
     if (shard.combos is None) != (delta.combos_new is None):
         raise IOError(f"delta chain mismatch: {delta.kind} delta over a "
                       f"{shard.kind} base")
+    if shard.domains != delta.domains:
+        raise IOError(f"delta chain mismatch: domain axis {delta.domains} "
+                      f"delta over a {shard.domains} base")
     n1 = delta.n_rows
     if delta.idx.size and int(delta.idx.max()) >= n1:
         # CRC only covers bytes; a structurally corrupt delta must fail
@@ -555,8 +651,8 @@ def apply_shard_delta(shard: PackedShard, delta: ShardDelta) -> PackedShard:
         raise IOError(f"delta row index {int(delta.idx.max())} out of "
                       f"bounds for {n1} rows")
     counts = _grow_1d(shard.counts[:shard.n_rows], n1, np.int64)
-    psum = _grow_1d(shard.psum[:shard.n_rows], n1, np.float64)
-    psumsq = _grow_1d(shard.psumsq[:shard.n_rows], n1, np.float64)
+    psum = _grow_2d(shard.psum[:shard.n_rows], n1, np.float64)
+    psumsq = _grow_2d(shard.psumsq[:shard.n_rows], n1, np.float64)
     counts[delta.idx] = delta.counts
     psum[delta.idx] = delta.psum
     psumsq[delta.idx] = delta.psumsq
@@ -575,7 +671,7 @@ def apply_shard_delta(shard: PackedShard, delta: ShardDelta) -> PackedShard:
                 raise IOError("worker width changed mid-chain")
             combos = np.vstack([shard.combos[:shard.n_rows], new])
     return PackedShard(counts=counts, psum=psum, psumsq=psumsq,
-                       n_rows=n1, combos=combos)
+                       n_rows=n1, combos=combos, domains=shard.domains)
 
 
 def spill_shard_delta(path: str, host_id: int, epoch: int,
@@ -589,11 +685,13 @@ def spill_shard_delta(path: str, host_id: int, epoch: int,
     """
     hd = _host_dir(path, host_id)
     os.makedirs(hd, exist_ok=True)
-    arrays = [delta.idx, delta.counts, delta.psum, delta.psumsq]
+    arrays = [delta.idx, delta.counts, _wire_stats(delta.psum),
+              _wire_stats(delta.psumsq)]
     meta = {"kind": delta.kind, "host_id": host_id, "epoch": epoch,
             "n_rows": delta.n_rows, "prev_rows": delta.prev_rows,
             "delta_of": int(delta_of), "base_epoch": int(base_epoch),
-            "schema": ["idx", "counts", "psum", "psumsq"]}
+            "schema": ["idx", "counts", "psum", "psumsq"],
+            "schema_version": 2, "domains": list(delta.domains)}
     if extra_meta:
         meta["extra"] = dict(extra_meta)
     if delta.combos_new is not None:
@@ -610,12 +708,14 @@ def _load_delta(hd: str, epoch: int) -> ShardDelta:
     d = _epoch_dir(hd, epoch)
     arrays, manifest = ckpt.read_manifest_dir(d)
     named = dict(zip(manifest["schema"], arrays))
+    domains = _meta_domains(manifest)
     return ShardDelta(idx=named["idx"].astype(np.int64),
                       counts=named["counts"].astype(np.int64),
-                      psum=named["psum"], psumsq=named["psumsq"],
+                      psum=_unwire_stats(named["psum"], domains),
+                      psumsq=_unwire_stats(named["psumsq"], domains),
                       n_rows=int(manifest["n_rows"]),
                       prev_rows=int(manifest["prev_rows"]),
-                      combos_new=named.get("combos_new"))
+                      combos_new=named.get("combos_new"), domains=domains)
 
 
 class DeltaChain:
@@ -685,7 +785,8 @@ def _copy_shard(s: PackedShard) -> PackedShard:
         counts=np.array(s.counts, np.int64),
         psum=np.array(s.psum, np.float64),
         psumsq=np.array(s.psumsq, np.float64), n_rows=s.n_rows,
-        combos=None if s.combos is None else np.array(s.combos, np.int64))
+        combos=None if s.combos is None else np.array(s.combos, np.int64),
+        domains=s.domains)
 
 
 class ShardSpiller:
@@ -701,6 +802,21 @@ class ShardSpiller:
     bare :func:`spill_shard` free function, which leaves old epochs in
     place). Readers retry around the GC window (see
     :func:`restore_shard`), so neither mode blocks concurrent gathers.
+
+    Changed-row detection is O(rows touched), not O(rows): once a spiller
+    has published an aggregator instance, subsequent deltas come from the
+    aggregator's generation-stamped touched-row tracking
+    (``rows_touched_since`` — a superset of the rows whose values
+    changed, stamped as updates/merges land; reads are non-destructive,
+    so several spillers can publish one aggregator to different
+    destinations, each against its own watermark), so no host-side
+    snapshot of the packed shard is retained or diffed. The exact array
+    diff (:func:`compute_shard_delta` against the restored chain) is
+    used only for the *first* publish of an aggregator instance this
+    spiller hasn't tracked (e.g. after a restore) — which keeps a
+    restarted deterministic profiler's idempotent republish an *empty*
+    delta — and aggregators without touch tracking fall back to the
+    per-epoch snapshot diff.
 
     Construction restores the on-disk chain (if any): ``resumed`` holds
     the folded aggregator, ``resumed_meta`` the LATEST manifest, and
@@ -726,13 +842,25 @@ class ShardSpiller:
         self.resumed = None
         self.resumed_meta: dict | None = None
         self.resumed_dir: str | None = None    # LATEST epoch's directory
-        self._prev: PackedShard | None = None   # folded state at `epoch`
+        self._published = False
+        # Exact-diff base for the first publish of an agg instance this
+        # spiller hasn't tracked (restored chains); dropped as soon as
+        # dirty tracking takes over — never refreshed per epoch.
+        self._prev: PackedShard | None = None
+        self._prev_rows = 0                    # rows at `epoch`
+        # Weakly held tracked-aggregator identity: a weakref (not id())
+        # so a recycled address can never make a fresh aggregator pass
+        # as tracked, and the spiller never extends the agg's lifetime.
+        self._agg_ref = None
+        self._seen_gen = 0      # touch-clock watermark of the last publish
         self._base_epoch: int | None = None
         self._since_base = 0
         latest = ckpt.latest_step(self._hd)
         if latest is not None:
             chain = DeltaChain(self._hd, latest)
             self._prev = chain.fold()
+            self._prev_rows = self._prev.n_rows
+            self._published = True
             self.epoch = latest
             self._base_epoch = chain.base_epoch
             self._since_base = len(chain.epochs) - 1
@@ -741,22 +869,53 @@ class ShardSpiller:
             self.resumed_meta = chain.latest_meta
             self.resumed_dir = _epoch_dir(self._hd, latest)
 
+    def _dirty_delta(self, dirty: np.ndarray,
+                     cur: PackedShard) -> ShardDelta:
+        """Delta from the aggregator's touched-row set (no prev arrays).
+
+        Valid only for the instance this spiller last published (row
+        prefix continuity is then structural: statistics rows mutate in
+        place and combination keys only append).
+        """
+        n0, n1 = self._prev_rows, cur.n_rows
+        idx = np.concatenate([dirty[dirty < n0],
+                              np.arange(n0, n1)]).astype(np.int64)
+        combos_new = None
+        if cur.combos is not None:
+            combos_new = np.array(cur.combos[n0:n1], dtype=np.int64)
+        return ShardDelta(idx=idx,
+                          counts=np.asarray(cur.counts, np.int64)[idx],
+                          psum=np.asarray(cur.psum, np.float64)[idx],
+                          psumsq=np.asarray(cur.psumsq, np.float64)[idx],
+                          n_rows=n1, prev_rows=n0,
+                          combos_new=combos_new, domains=cur.domains)
+
     def spill(self, agg, epoch: int, extra_meta: dict | None = None) -> str:
         """Publish ``agg``'s state as ``epoch`` (delta when profitable)."""
-        if self._prev is not None and epoch <= self.epoch:
+        if self._published and epoch <= self.epoch:
             raise ValueError(f"epoch {epoch} already published "
                              f"(LATEST is {self.epoch})")
-        cur = _copy_shard(pack_shard(agg))
-        full = (self.mode == "full" or self._prev is None
+        cur = pack_shard(agg)
+        trackable = hasattr(agg, "rows_touched_since")
+        tracked = (trackable and self._agg_ref is not None
+                   and self._agg_ref() is agg)
+        full = (self.mode == "full" or not self._published
                 or self._since_base + 1 >= self.compact_every)
         delta = None
+        gen = agg.touch_generation() if trackable else 0
         if not full:
-            try:
-                delta = compute_shard_delta(self._prev, cur)
-            except ValueError:
-                # Non-append-only evolution (kind/width change, shrink):
-                # a delta can't express it — publish a fresh base.
-                full = True
+            if tracked and cur.n_rows >= self._prev_rows:
+                delta = self._dirty_delta(
+                    agg.rows_touched_since(self._seen_gen), cur)
+            elif self._prev is not None:
+                try:
+                    delta = compute_shard_delta(self._prev, cur)
+                except ValueError:
+                    delta = None
+            # Non-append-only evolution (kind/width/domain change,
+            # shrink) or an untracked aggregator instance: a delta
+            # can't express it — publish a fresh base.
+            full = delta is None
         if full:
             out = _spill_packed(self.path, self.host_id, epoch, cur,
                                 extra_meta=extra_meta)
@@ -764,12 +923,25 @@ class ShardSpiller:
             self._base_epoch = epoch
             self._since_base = 0
         else:
-            out = spill_shard_delta(self.path, self.host_id, epoch, delta,
-                                    delta_of=self.epoch,
+            out = spill_shard_delta(self.path, self.host_id, epoch,
+                                    delta, delta_of=self.epoch,
                                     base_epoch=self._base_epoch,
                                     extra_meta=extra_meta)
             self._since_base += 1
-        self._prev = cur
+        # Advance the watermark only now that the epoch is durable: a
+        # failed publish above leaves _seen_gen untouched, so every
+        # still-unpublished row reappears in the next attempt's delta.
+        if trackable:
+            # Touch tracking owns change detection from here on: drop
+            # the exact-diff base (if any) — it is never refreshed.
+            self._agg_ref = weakref.ref(agg)
+            self._seen_gen = gen
+            self._prev = None
+        else:
+            self._agg_ref = None
+            self._prev = _copy_shard(cur)
+        self._prev_rows = cur.n_rows
+        self._published = True
         self.epoch = epoch
         return out
 

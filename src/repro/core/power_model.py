@@ -28,7 +28,17 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["HardwareSpec", "PowerModelParams", "PowerModel", "TPU_V5E"]
+__all__ = ["HardwareSpec", "PowerModelParams", "PowerModel", "TPU_V5E",
+           "POWER_DOMAINS"]
+
+# The power-rail domain axis: the decomposition the activity model already
+# computes internally (per-resource utilization terms) before summing to
+# chip power. JetsonLEAP-style instruments measure these rails separately;
+# threading them end-to-end gives per-block per-domain attribution.
+#   package — static/leakage + MXU dynamic power (the PKG-rail analogue)
+#   hbm     — HBM/DRAM dynamic power (the DRAM-rail analogue)
+#   ici     — interconnect link power
+POWER_DOMAINS = ("package", "hbm", "ici")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +121,30 @@ class PowerModel:
                * (1.0 + p.contention_coeff * mem_contention)
                + p.e_ici * np.asarray(u_ici))
         return static + dyn
+
+    @property
+    def domains(self) -> tuple[str, ...]:
+        """Power-rail domain names, aligned with :meth:`power_rails`."""
+        return POWER_DOMAINS
+
+    def power_rails(self, u_flop, u_mem, u_ici, *, freq_scale: float = 1.0,
+                    mem_contention: float = 0.0) -> np.ndarray:
+        """Per-rail chip power [..., D] — the decomposition behind
+        :meth:`power`.
+
+        ``power_rails(...).sum(-1)`` equals :meth:`power` up to float64
+        association (the rails are the model's own additive terms; static
+        power rides on the package rail, as a real PKG counter reports it).
+        """
+        p = self.params
+        s3 = freq_scale ** 3
+        static = p.p_idle * ((1 - p.static_freq_fraction)
+                             + p.static_freq_fraction * freq_scale**2)
+        package = static + p.e_flop * np.asarray(u_flop, np.float64) * s3
+        hbm = (p.e_mem * np.asarray(u_mem, np.float64)
+               * (1.0 + p.contention_coeff * mem_contention))
+        ici = p.e_ici * np.asarray(u_ici, np.float64)
+        return np.stack(np.broadcast_arrays(package, hbm, ici), axis=-1)
 
     # -- region-level durations under DVFS ----------------------------------
     def region_duration(self, flops: float, hbm_bytes: float, ici_bytes: float,

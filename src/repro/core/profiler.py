@@ -17,7 +17,8 @@ Usage, host mode (real control thread on this machine):
 from __future__ import annotations
 
 import contextlib
-from typing import Iterator
+
+import numpy as np
 
 from repro.core import regions as regions_mod
 from repro.core.attribution import AttributionReport
@@ -167,15 +168,22 @@ class EnergyProfiler:
         if self._resolve_pipeline(pipeline, aggregate_fn):
             from repro.core import device_pipeline as dp
             res = dp.run_region_pipeline(
-                tl.to_device(), _SENSORS[sensor].make_spec(),
+                tl.to_device(),
+                _SENSORS[sensor].make_spec(domains=tl.domain_names),
                 period=self.period, jitter=self.jitter, seed=use_seed,
                 chunk_size=chunk_size,
                 overhead_per_sample=overhead_per_sample)
-            agg = StreamingAggregator.from_statistics(res.counts, res.psum,
-                                                      res.psumsq)
+            agg = StreamingAggregator.from_statistics(
+                res.counts,
+                res.psum if tl.num_domains == 1 else np.concatenate(
+                    [res.rail_psum, res.psum[:, None]], axis=1),
+                res.psumsq if tl.num_domains == 1 else np.concatenate(
+                    [res.rail_psumsq, res.psumsq[:, None]], axis=1),
+                domains=tl.domain_names)
             return agg.estimates(res.t_exec, tl.names, alpha=self.alpha)
         sens = _SENSORS[sensor](tl)
-        agg = StreamingAggregator(len(tl.names), aggregate_fn=aggregate_fn)
+        agg = StreamingAggregator(len(tl.names), aggregate_fn=aggregate_fn,
+                                  domains=tl.domain_names)
         n = 0
         for rids, pows in iter_sample_chunks(
                 tl, sens, period=self.period, jitter=self.jitter,
@@ -228,10 +236,13 @@ class EnergyProfiler:
             from repro.core import device_pipeline as dp
             dtl = dp.DeviceTimeline.from_timelines(timelines)
             agg, _n = dp.run_combo_pipeline(
-                dtl, _SENSORS[sensor].make_spec(), period=self.period,
-                jitter=self.jitter, seed=use_seed, chunk_size=chunk_size)
+                dtl, _SENSORS[sensor].make_spec(domains=dtl.domains),
+                period=self.period, jitter=self.jitter, seed=use_seed,
+                chunk_size=chunk_size)
         else:
-            agg = StreamingCombinationAggregator(aggregate_fn=aggregate_fn)
+            agg = StreamingCombinationAggregator(
+                aggregate_fn=aggregate_fn,
+                domains=timelines[0].domain_names)
             agg.update_stream(iter_multiworker_chunks(
                 timelines, lambda tl: _SENSORS[sensor](tl),
                 period=self.period, jitter=self.jitter,

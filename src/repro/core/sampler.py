@@ -27,7 +27,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.sensors import DEFAULT_IDLE_POWER
+from repro.core.sensors import DEFAULT_IDLE_POWER, idle_channel
 from repro.core.timeline import Timeline
 
 __all__ = ["SampleStream", "sample_timeline", "iter_sample_chunks",
@@ -149,14 +149,26 @@ def iter_sample_chunks(tl: Timeline, sensor, *, period: float,
                          f"{sensor.min_period}")
     frac = min(overhead_per_sample / period, 1.0) if overhead_per_sample > 0.0 \
         else 0.0
+    # Multi-rail timelines read the sensor's whole channel bank — chunks
+    # are then ([c], [c, D]) and the consuming aggregator keeps the
+    # per-domain decomposition. Scalar timelines keep the 1-D contract.
+    rails = tl.num_domains > 1 and hasattr(sensor, "read_rails")
     for times in _ChunkedTimes(tl.t_exec, period, jitter, rng, chunk_size):
         rids = tl.region_at(times)
-        if hasattr(sensor, "read_many"):
+        if rails:
+            pows = np.asarray(sensor.read_rails(times), dtype=np.float64)
+        elif hasattr(sensor, "read_many"):
             pows = np.asarray(sensor.read_many(times), dtype=np.float64)
         else:
             pows = np.asarray(sensor.read(times), dtype=np.float64)
         if frac:
-            pows = (1.0 - frac) * pows + frac * idle_power
+            pows = (1.0 - frac) * pows
+            if pows.ndim == 2:
+                # Suspension idle power lands on the package rail
+                # (located by name), mirroring the device pipeline.
+                pows[:, idle_channel(tl.domain_names)] += frac * idle_power
+            else:
+                pows = pows + frac * idle_power
         yield rids, pows
 
 
@@ -171,11 +183,18 @@ def iter_multiworker_chunks(timelines: list[Timeline], sensor_fn, *,
     rng = np.random.default_rng(seed)
     t_end = min(tl.t_exec for tl in timelines)
     sensors = [sensor_fn(tl) for tl in timelines]
+    rails = (all(tl.num_domains > 1 for tl in timelines)
+             and all(hasattr(s, "read_rails") for s in sensors))
     for times in _ChunkedTimes(t_end, period, jitter, rng, chunk_size):
         rid_mat = np.stack([tl.region_at(times) for tl in timelines], axis=1)
-        total_power = sum(np.asarray(s.read_many(times)
-                                     if hasattr(s, "read_many")
-                                     else s.read(times)) for s in sensors)
+        if rails:
+            total_power = sum(np.asarray(s.read_rails(times))
+                              for s in sensors)
+        else:
+            total_power = sum(np.asarray(s.read_many(times)
+                                         if hasattr(s, "read_many")
+                                         else s.read(times))
+                              for s in sensors)
         yield rid_mat, total_power
 
 
@@ -232,18 +251,26 @@ class SampleBuffer:
     periodically hold O(drain chunk) state — capacity is bounded by the
     largest inter-drain burst, not run length. The lock is uncontended
     except at drain points (≪ the ≥1 ms sampling period).
+
+    ``channels > 1`` stores one power vector per sample (multi-rail host
+    sensor banks, :class:`repro.core.sensors.HostSensorBank`); drains
+    then yield [n, channels] power matrices instead of [n] vectors.
     """
 
-    def __init__(self, capacity: int = 4096):
-        self._rids = np.empty(max(capacity, 16), dtype=np.int32)
-        self._pows = np.empty(max(capacity, 16), dtype=np.float64)
+    def __init__(self, capacity: int = 4096, channels: int = 1):
+        if channels < 1:
+            raise ValueError(f"channels must be >= 1; got {channels}")
+        self.channels = channels
+        cap = max(capacity, 16)
+        self._rids = np.empty(cap, dtype=np.int32)
+        self._pows = np.empty((cap, channels), dtype=np.float64)
         self._n = 0
         self._lock = threading.Lock()
 
     def __len__(self) -> int:
         return self._n
 
-    def append(self, rid: int, power: float) -> None:
+    def append(self, rid: int, power) -> None:
         with self._lock:
             n = self._n
             if n == len(self._rids):
@@ -252,19 +279,23 @@ class SampleBuffer:
                 self._pows = np.concatenate(
                     [self._pows, np.empty_like(self._pows)])
             self._rids[n] = rid
-            self._pows[n] = power
+            self._pows[n] = power      # scalar broadcasts; vector stores
             self._n = n + 1
+
+    def _pow_slice(self, n: int) -> np.ndarray:
+        p = self._pows[:n]
+        return p[:, 0].copy() if self.channels == 1 else p.copy()
 
     def view(self) -> tuple[np.ndarray, np.ndarray]:
         """All undrained samples (copies); does not advance the cursor."""
         with self._lock:
-            return self._rids[:self._n].copy(), self._pows[:self._n].copy()
+            return self._rids[:self._n].copy(), self._pow_slice(self._n)
 
     def drain(self) -> tuple[np.ndarray, np.ndarray]:
         """All undrained samples (copies); empties the buffer."""
         with self._lock:
             n = self._n
-            out = self._rids[:n].copy(), self._pows[:n].copy()
+            out = self._rids[:n].copy(), self._pow_slice(n)
             self._n = 0
             return out
 
@@ -276,12 +307,15 @@ class HostSampler:
                  jitter: float = 200e-6, seed: int = 0):
         self.marker = marker
         self.sensor = sensor
+        # A banked sensor (``.domains``) reads one vector per sample; the
+        # buffer stores it per channel and drains [n, D] power matrices.
+        self.domains = tuple(getattr(sensor, "domains", ("total",)))
         self.period = period
         self.jitter = jitter
         self._rng = np.random.default_rng(seed)
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
-        self._buf = SampleBuffer()
+        self._buf = SampleBuffer(channels=len(self.domains))
         self._t0 = 0.0
         self._t1 = 0.0
 
@@ -295,9 +329,10 @@ class HostSampler:
         # period by the read cost every sample (systematic drift above
         # the configured rate). If a read overruns its deadline entirely,
         # rebase instead of bursting to catch up.
+        scalar = not hasattr(self.sensor, "domains")
         next_t = time.monotonic()
         while not self._stop.is_set():
-            append(marker.value, float(read()))
+            append(marker.value, float(read()) if scalar else read())
             next_t += self.period + float(uniform(0, self.jitter))
             delay = next_t - time.monotonic()
             if delay > 0:

@@ -27,23 +27,42 @@ can refuse sampling faster than the instrument supports.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import os
 import time
+from typing import Sequence
 
 import numpy as np
 
 from repro.core.timeline import Timeline
 
 __all__ = [
-    "SensorSpec", "DEFAULT_IDLE_POWER",
+    "SensorSpec", "DEFAULT_IDLE_POWER", "idle_channel",
     "InstantTraceSensor", "RaplTraceSensor", "Ina231TraceSensor",
     "RaplSensor", "ProcessActivitySensor", "available_host_sensor",
+    "HostSensorBank",
 ]
 
 # Near-idle package power blended into suspended-sample readings (§4.7);
 # shared by the host sampler and the device pipeline so both overhead
 # models emulate the same machine.
 DEFAULT_IDLE_POWER = 70.0
+
+
+def idle_channel(domains: "tuple[str, ...]") -> int:
+    """Rail index that absorbs §4.7 suspension idle power.
+
+    A suspended chip burns near-idle power in the *package*, not on
+    HBM/ICI rails — so the blend targets the rail named ``"package"``
+    wherever it sits in the domain axis, falling back to channel 0 for
+    axes without one (including the scalar ``("total",)``). Shared by
+    the device pipeline, the numpy oracle and the host sampler so every
+    overhead model emulates the same machine.
+    """
+    try:
+        return domains.index("package")
+    except ValueError:
+        return 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,22 +76,63 @@ class SensorSpec:
     emulation: ``instant`` (oracle P(t)), ``rapl`` (energy counter
     differenced between consecutive samples, quantized to
     ``update_period``), ``ina231`` (mean power over ``[t - window, t]``).
+
+    A spec is a *bank* of synchronized channels, one per power-rail
+    domain (RAPL exposes PKG and DRAM counters, PowerSensor3-class
+    instruments several rails): ``domains`` names the channels and every
+    channel applies the same kind/period semantics to its own rail's
+    energy integral. ``min_periods`` optionally carries per-channel
+    instrument floors (a DRAM counter can refresh slower than PKG);
+    :meth:`effective_min_period` is the bank's binding constraint. The
+    default single-channel ``("total",)`` spec is exactly the old scalar
+    sensor.
     """
 
     kind: str                    # "instant" | "rapl" | "ina231"
     update_period: float = 0.0   # rapl counter quantum [s]
     window: float = 0.0          # ina231 averaging window [s]
     min_period: float = 0.0      # instrument's fastest supported period [s]
+    domains: tuple[str, ...] = ("total",)   # channel (rail) names
+    min_periods: tuple[float, ...] = ()     # optional per-channel floors
+
+    def __post_init__(self):
+        if self.min_periods and len(self.min_periods) != len(self.domains):
+            raise ValueError(
+                f"min_periods has {len(self.min_periods)} entries for "
+                f"{len(self.domains)} domains")
+
+    @property
+    def num_domains(self) -> int:
+        return len(self.domains)
+
+    def effective_min_period(self) -> float:
+        """Fastest period every channel of the bank supports."""
+        return max((self.min_period, *self.min_periods))
 
 
 class _TraceSensorBase:
-    """Common precomputation for trace sensors."""
+    """Common precomputation for trace sensors.
+
+    Multi-channel support: ``domains`` mirrors the timeline's rail axis
+    and ``_energy_rails_at`` is the per-rail twin of ``_energy_at`` —
+    for scalar (D=1) timelines its single column is bit-identical to the
+    scalar integral, which is what keeps the multi-channel code paths
+    output-compatible with the pre-rail sensors.
+    """
 
     def __init__(self, timeline: Timeline):
         self.tl = timeline
+        self.domains = timeline.domain_names
         self._ends = timeline.ends
         self._E = np.concatenate([[0.0], timeline.energy_integral()])
         self._bounds = np.concatenate([[0.0], self._ends])
+
+    @functools.cached_property
+    def _ER(self) -> np.ndarray:
+        # Built on first read_rails/_energy_rails_at use only: scalar
+        # consumers of read/read_many never pay the O(m·D) table.
+        return np.concatenate([np.zeros((1, self.tl.num_domains)),
+                               self.tl.rail_energy_integral()])
 
     def _energy_at(self, t: np.ndarray) -> np.ndarray:
         """Exact cumulative energy E(t) for piecewise-constant power."""
@@ -81,6 +141,14 @@ class _TraceSensorBase:
         idx = np.clip(idx, 0, len(self.tl.powers) - 1)
         return self._E[idx] + (t - self._bounds[idx]) * self.tl.powers[idx]
 
+    def _energy_rails_at(self, t: np.ndarray) -> np.ndarray:
+        """Per-rail cumulative energy E_d(t), [n, D]."""
+        t = np.clip(np.asarray(t, dtype=np.float64), 0.0, self._bounds[-1])
+        idx = np.searchsorted(self._bounds, t, side="right") - 1
+        idx = np.clip(idx, 0, len(self.tl.powers) - 1)
+        return (self._ER[idx]
+                + (t - self._bounds[idx])[..., None] * self.tl.rails()[idx])
+
 
 class InstantTraceSensor(_TraceSensorBase):
     min_period = 0.0
@@ -88,12 +156,20 @@ class InstantTraceSensor(_TraceSensorBase):
     def read(self, t):
         return self.tl.power_at(t)
 
+    def read_rails(self, times: np.ndarray) -> np.ndarray:
+        """Per-channel readings [n, D] (oracle rail powers at t)."""
+        idx = np.searchsorted(self._ends, np.asarray(times), side="right")
+        idx = np.clip(idx, 0, len(self.tl.powers) - 1)
+        return self.tl.rails()[idx]
+
     @classmethod
-    def make_spec(cls) -> SensorSpec:
-        return SensorSpec(kind="instant")
+    def make_spec(cls, *, domains: tuple[str, ...] = ("total",),
+                  min_periods: tuple[float, ...] = ()) -> SensorSpec:
+        return SensorSpec(kind="instant", domains=tuple(domains),
+                          min_periods=tuple(min_periods))
 
     def spec(self) -> SensorSpec:
-        return self.make_spec()
+        return self.make_spec(domains=self.domains)
 
 
 class RaplTraceSensor(_TraceSensorBase):
@@ -113,28 +189,39 @@ class RaplTraceSensor(_TraceSensorBase):
         self.min_period = update_period
 
     @classmethod
-    def make_spec(cls, update_period: float | None = None) -> SensorSpec:
+    def make_spec(cls, update_period: float | None = None, *,
+                  domains: tuple[str, ...] = ("total",),
+                  min_periods: tuple[float, ...] = ()) -> SensorSpec:
         if update_period is None:
             update_period = cls.DEFAULT_UPDATE_PERIOD
         return SensorSpec(kind="rapl", update_period=update_period,
-                          min_period=update_period)
+                          min_period=update_period, domains=tuple(domains),
+                          min_periods=tuple(min_periods))
 
     def spec(self) -> SensorSpec:
-        return self.make_spec(self.update_period)
+        return self.make_spec(self.update_period, domains=self.domains)
 
-    def read_many(self, times: np.ndarray) -> np.ndarray:
-        """Vectorized differencing over an increasing sample-time array."""
+    def _quantized(self, times: np.ndarray):
         times = np.asarray(times, dtype=np.float64)
         # Counter is quantized to its internal update period. The 1e-6
         # epsilon (in units of the period) keeps exact-boundary sample times
         # from flooring down a whole period due to fp division error.
         tq = np.floor(times / self.update_period + 1e-6) * self.update_period
-        e = self._energy_at(tq)
         prev_t = np.concatenate([[max(tq[0] - self.update_period, 0.0)],
                                  tq[:-1]])
-        prev_e = self._energy_at(prev_t)
         dt = np.maximum(tq - prev_t, self.update_period)
-        return (e - prev_e) / dt
+        return tq, prev_t, dt
+
+    def read_many(self, times: np.ndarray) -> np.ndarray:
+        """Vectorized differencing over an increasing sample-time array."""
+        tq, prev_t, dt = self._quantized(times)
+        return (self._energy_at(tq) - self._energy_at(prev_t)) / dt
+
+    def read_rails(self, times: np.ndarray) -> np.ndarray:
+        """Per-channel RAPL differencing [n, D] (PKG/DRAM-style bank)."""
+        tq, prev_t, dt = self._quantized(times)
+        de = self._energy_rails_at(tq) - self._energy_rails_at(prev_t)
+        return de / dt[:, None]
 
 
 class Ina231TraceSensor(_TraceSensorBase):
@@ -148,13 +235,17 @@ class Ina231TraceSensor(_TraceSensorBase):
         self.min_period = window
 
     @classmethod
-    def make_spec(cls, window: float | None = None) -> SensorSpec:
+    def make_spec(cls, window: float | None = None, *,
+                  domains: tuple[str, ...] = ("total",),
+                  min_periods: tuple[float, ...] = ()) -> SensorSpec:
         if window is None:
             window = cls.DEFAULT_WINDOW
-        return SensorSpec(kind="ina231", window=window, min_period=window)
+        return SensorSpec(kind="ina231", window=window, min_period=window,
+                          domains=tuple(domains),
+                          min_periods=tuple(min_periods))
 
     def spec(self) -> SensorSpec:
-        return self.make_spec(self.window)
+        return self.make_spec(self.window, domains=self.domains)
 
     def read(self, t):
         t = np.asarray(t, dtype=np.float64)
@@ -165,6 +256,13 @@ class Ina231TraceSensor(_TraceSensorBase):
 
     def read_many(self, times: np.ndarray) -> np.ndarray:
         return self.read(times)
+
+    def read_rails(self, times: np.ndarray) -> np.ndarray:
+        """Per-channel windowed means [n, D] (multi-rail INA bank)."""
+        t = np.asarray(times, dtype=np.float64)
+        lo = np.maximum(t - self.window, 0.0)
+        de = self._energy_rails_at(t) - self._energy_rails_at(lo)
+        return de / np.maximum(t - lo, 1e-12)[:, None]
 
 
 # ---------------------------------------------------------------------------
@@ -222,6 +320,31 @@ class ProcessActivitySensor:
         dt = max(now - t0, 1e-9)
         util = min(max((cpu - c0) / dt, 0.0), os.cpu_count() or 1)
         return self.p_idle + self.p_dyn * util
+
+
+class HostSensorBank:
+    """Synchronized multi-channel host sensor (one rail per domain).
+
+    Wraps named scalar host sensors into one instrument whose ``read``
+    returns a ``[D]`` vector — the host-mode analogue of a multi-channel
+    :class:`SensorSpec` bank (e.g. RAPL PKG + DRAM powercap zones read
+    back-to-back). ``min_period`` is the slowest member's floor: the bank
+    samples no faster than its most constrained channel.
+    """
+
+    def __init__(self, channels: Sequence[tuple[str, object]]):
+        if not channels:
+            raise ValueError("sensor bank needs at least one channel")
+        self.domains = tuple(name for name, _ in channels)
+        if len(set(self.domains)) != len(self.domains):
+            raise ValueError(f"duplicate domain names: {self.domains}")
+        self._sensors = tuple(s for _, s in channels)
+        self.min_period = max(getattr(s, "min_period", 0.0)
+                              for s in self._sensors)
+
+    def read(self, t: float | None = None) -> np.ndarray:
+        return np.array([float(s.read(t)) for s in self._sensors],
+                        dtype=np.float64)
 
 
 def available_host_sensor():

@@ -23,7 +23,16 @@ This module makes the estimator pipeline *streaming*:
 * :class:`StreamingCombinationAggregator` composes the two for §4.4
   combination-level attribution over chunked multi-worker streams.
 
-Peak extra memory is O(chunk + R) instead of O(n); see
+Statistics carry an optional power-rail domain axis: a ``domains``
+axis of D rails stores ``[R, C]`` channel matrices (the rails plus, for
+D > 1, the total-power channel — :func:`channels_for`), with the scalar
+``psum``/``psumsq`` views unchanged for single-domain streams. The
+aggregators also maintain generation-stamped touched-row tracking the
+delta spiller (:class:`repro.core.exchange.ShardSpiller`) diffs against
+(:meth:`StreamingAggregator.rows_touched_since` — non-destructive, so
+any number of spillers consume one aggregator independently).
+
+Peak extra memory is O(chunk + R·C) instead of O(n); see
 ``benchmarks/aggregation.py`` for the throughput trajectory.
 """
 
@@ -40,6 +49,7 @@ from repro.core.estimator import (AggregateFn, EstimateSet,
 
 __all__ = [
     "DEFAULT_CHUNK",
+    "channels_for",
     "StreamingAggregator",
     "CombinationInterner",
     "StreamingCombinationAggregator",
@@ -49,40 +59,104 @@ __all__ = [
 DEFAULT_CHUNK = 65536
 
 
+def _as_channels(arr, c: int) -> np.ndarray:
+    """Normalize pre-aggregated Σ statistics to the [R, C] channel layout
+    (1-D arrays are the single-channel scalar form)."""
+    arr = np.asarray(arr, dtype=np.float64)
+    if arr.ndim == 1:
+        if c != 1:
+            raise ValueError(
+                f"1-D statistics for a {c}-channel aggregator; pass the "
+                f"[rows, {c}] channel matrix")
+        return arr[:, None]
+    if arr.ndim == 2 and arr.shape[1] == c:
+        return arr
+    raise ValueError(f"statistics shape {arr.shape} does not match "
+                     f"{c} channels")
+
+
+def channels_for(domains: Sequence[str] | int) -> int:
+    """Statistic channels for a domain axis (names or rail count): the
+    rails, plus a dedicated total-power channel when D > 1 (Σpow² of the
+    total is not derivable from per-rail Σpow² — squares don't sum
+    across rails — and the estimator's power CI needs it). D = 1 is the
+    pre-rail scalar layout: the single rail *is* the total.
+
+    This is THE channel-layout rule — the wire schema
+    (:mod:`repro.core.exchange`), the device-pipeline carries and the
+    estimator split all derive from it; change it nowhere else.
+    """
+    d = domains if isinstance(domains, int) else len(domains)
+    return d + (1 if d > 1 else 0)
+
+
 class StreamingAggregator:
     """Constant-memory accumulator of per-region sample statistics.
 
     Consumes (region_ids, powers) chunks of any size via :meth:`update`;
-    holds exactly three [R] accumulators (counts int64, Σpow f64, Σpow² f64).
-    ``aggregate_fn`` is the per-chunk reducer — defaults to the numpy
-    reference, swap in ``kernels.sample_attr.ops.chunked_aggregate_fn`` for
-    the Pallas path. :meth:`merge` combines shards (multi-host reduction).
+    holds a [R] ``counts`` int64 accumulator plus [R, C] ``chan_psum`` /
+    ``chan_psumsq`` f64 channel accumulators, where the channels are the
+    power-rail ``domains`` plus — when multi-domain — the total (see
+    :func:`channels_for`). The default single-domain aggregator stores
+    exactly the pre-rail (counts, Σpow, Σpow²) triple; ``psum``/``psumsq``
+    remain its scalar-total views. ``aggregate_fn`` is the per-chunk
+    reducer — defaults to the numpy reference, swap in
+    ``kernels.sample_attr.ops.chunked_aggregate_fn`` for the Pallas path
+    (applied per channel). :meth:`merge` combines shards (multi-host
+    reduction; domain axes must match).
+
+    The aggregator also maintains generation-stamped *touched-row
+    tracking* (:meth:`rows_touched_since` / :meth:`touch_generation`):
+    every row whose statistics may have changed since a consumer's
+    watermark. :class:`repro.core.exchange.ShardSpiller` diffs against
+    it instead of deep-copying the full packed shard each publish,
+    dropping the O(rows) per-epoch snapshot — and because reads are
+    non-destructive, independent spillers can publish one aggregator
+    to different destinations without corrupting each other's chains.
     """
 
     def __init__(self, num_regions: int, *,
-                 aggregate_fn: AggregateFn | None = None):
+                 aggregate_fn: AggregateFn | None = None,
+                 domains: Sequence[str] = ("total",)):
         if num_regions < 0:
             raise ValueError(f"num_regions must be >= 0; got {num_regions}")
         self._agg = aggregate_fn or estimator_mod.aggregate_samples_np
+        self.domains = tuple(domains)
+        if not self.domains:
+            raise ValueError("domains must name at least one rail")
+        c = channels_for(self.domains)
         self.counts = np.zeros(num_regions, dtype=np.int64)
-        self.psum = np.zeros(num_regions, dtype=np.float64)
-        self.psumsq = np.zeros(num_regions, dtype=np.float64)
+        self.chan_psum = np.zeros((num_regions, c), dtype=np.float64)
+        self.chan_psumsq = np.zeros((num_regions, c), dtype=np.float64)
+        # Touched-row tracking, generation-based: every mutation stamps
+        # its rows with the current generation, and each consumer (a
+        # ShardSpiller) remembers the generation it last published —
+        # so multiple independent consumers of one aggregator never
+        # steal each other's change sets, and a failed publish needs no
+        # repair (the consumer simply doesn't advance).
+        self._touch_gen = np.zeros(num_regions, dtype=np.int64)
+        self._gen = 1
 
     @classmethod
     def from_statistics(cls, counts, psum, psumsq, *,
-                        aggregate_fn: AggregateFn | None = None
+                        aggregate_fn: AggregateFn | None = None,
+                        domains: Sequence[str] = ("total",)
                         ) -> "StreamingAggregator":
         """Wrap pre-aggregated sufficient statistics in an aggregator.
 
         Entry point for the fused device pipeline
         (:mod:`repro.core.device_pipeline`): its final carry lands here so
         merge/exchange/estimates compose identically to host-folded runs.
+        ``psum``/``psumsq`` are either 1-D [R] (single-domain) or [R, C]
+        channel matrices matching ``domains``.
         """
         counts = np.asarray(counts, dtype=np.int64)
-        agg = cls(len(counts), aggregate_fn=aggregate_fn)
+        agg = cls(len(counts), aggregate_fn=aggregate_fn, domains=domains)
         agg.counts += counts
-        agg.psum += np.asarray(psum, dtype=np.float64)
-        agg.psumsq += np.asarray(psumsq, dtype=np.float64)
+        agg.chan_psum += _as_channels(psum, agg.num_channels)
+        agg.chan_psumsq += _as_channels(psumsq, agg.num_channels)
+        agg._mark_touched((agg.counts != 0) | agg.chan_psum.any(axis=1)
+                          | agg.chan_psumsq.any(axis=1))
         return agg
 
     @property
@@ -90,8 +164,44 @@ class StreamingAggregator:
         return len(self.counts)
 
     @property
+    def num_domains(self) -> int:
+        return len(self.domains)
+
+    @property
+    def num_channels(self) -> int:
+        return self.chan_psum.shape[1]
+
+    @property
     def n_total(self) -> int:
         return int(self.counts.sum())
+
+    # The scalar (total-power) statistics stay first-class: views of the
+    # last channel, which at D = 1 is also the only rail — existing
+    # consumers of (counts, psum, psumsq) are unaffected by the rails.
+    @property
+    def psum(self) -> np.ndarray:
+        return self.chan_psum[:, -1]
+
+    @psum.setter
+    def psum(self, value) -> None:
+        self.chan_psum[:, -1] = value
+
+    @property
+    def psumsq(self) -> np.ndarray:
+        return self.chan_psumsq[:, -1]
+
+    @psumsq.setter
+    def psumsq(self, value) -> None:
+        self.chan_psumsq[:, -1] = value
+
+    @property
+    def rail_psum(self) -> np.ndarray:
+        """Per-domain Σpow [R, D] (at D = 1, identical to ``psum``)."""
+        return self.chan_psum[:, :self.num_domains]
+
+    @property
+    def rail_psumsq(self) -> np.ndarray:
+        return self.chan_psumsq[:, :self.num_domains]
 
     def grow(self, num_regions: int) -> None:
         """Widen the accumulators (new regions observed mid-stream)."""
@@ -99,24 +209,72 @@ class StreamingAggregator:
         if extra < 0:
             raise ValueError("cannot shrink a StreamingAggregator")
         if extra:
+            c = self.num_channels
             self.counts = np.concatenate(
                 [self.counts, np.zeros(extra, np.int64)])
-            self.psum = np.concatenate(
-                [self.psum, np.zeros(extra, np.float64)])
-            self.psumsq = np.concatenate(
-                [self.psumsq, np.zeros(extra, np.float64)])
+            self.chan_psum = np.concatenate(
+                [self.chan_psum, np.zeros((extra, c), np.float64)])
+            self.chan_psumsq = np.concatenate(
+                [self.chan_psumsq, np.zeros((extra, c), np.float64)])
+            self._touch_gen = np.concatenate(
+                [self._touch_gen, np.zeros(extra, np.int64)])
+
+    def _channels_of(self, powers: np.ndarray) -> np.ndarray:
+        """Normalize a powers chunk to the [n, C] channel matrix."""
+        powers = np.asarray(powers, dtype=np.float64)
+        d, c = self.num_domains, self.num_channels
+        if powers.ndim == 1:
+            if d > 1:
+                raise ValueError(
+                    f"scalar powers for a {d}-domain aggregator; pass "
+                    f"[n, {d}] per-rail readings")
+            return powers[:, None]
+        if powers.ndim != 2 or powers.shape[1] not in (d, c):
+            raise ValueError(
+                f"powers shape {powers.shape} matches neither [n, D={d}] "
+                f"rails nor [n, C={c}] channels")
+        if powers.shape[1] == c:
+            return powers
+        return np.concatenate(
+            [powers, powers.sum(axis=1, keepdims=True)], axis=1)
 
     def update(self, region_ids: np.ndarray,
                powers: np.ndarray) -> "StreamingAggregator":
-        """Fold one chunk into the accumulators. Returns self (chainable)."""
+        """Fold one chunk into the accumulators. Returns self (chainable).
+
+        ``powers`` is [n] (single-domain), [n, D] per-rail readings, or a
+        precomputed [n, C] channel matrix.
+        """
         region_ids = np.asarray(region_ids)
-        powers = np.asarray(powers)
         if len(region_ids) == 0:
             return self
-        c, s, sq = self._agg(region_ids, powers, self.num_regions)
-        self.counts += np.asarray(c, dtype=np.int64)
-        self.psum += np.asarray(s, dtype=np.float64)
-        self.psumsq += np.asarray(sq, dtype=np.float64)
+        chan = self._channels_of(powers)
+        c = self.num_channels
+        if c == 1 or self._agg is not estimator_mod.aggregate_samples_np:
+            # Single channel, or a plugged kernel (which fuses counts
+            # with its sums on device): one aggregate_fn call per
+            # channel, counts taken from the first.
+            for j in range(c):
+                cc, s, sq = self._agg(region_ids, chan[:, j],
+                                      self.num_regions)
+                if j == 0:
+                    self.counts += np.asarray(cc, dtype=np.int64)
+                self.chan_psum[:, j] += np.asarray(s, dtype=np.float64)
+                self.chan_psumsq[:, j] += np.asarray(sq, dtype=np.float64)
+        else:
+            # Default numpy reducer, multi-channel: share one index pass
+            # — counts once, then a weighted bincount per channel
+            # (aggregate_samples_np would recompute counts C times).
+            r = self.num_regions
+            self.counts += np.bincount(region_ids,
+                                       minlength=r).astype(np.int64)
+            for j in range(c):
+                w = chan[:, j]
+                self.chan_psum[:, j] += np.bincount(region_ids, weights=w,
+                                                    minlength=r)
+                self.chan_psumsq[:, j] += np.bincount(
+                    region_ids, weights=w * w, minlength=r)
+        self._touch_gen[region_ids] = self._gen
         return self
 
     def update_stream(self, chunks: Iterable[tuple[np.ndarray, np.ndarray]]
@@ -128,24 +286,62 @@ class StreamingAggregator:
 
     def merge(self, other: "StreamingAggregator") -> "StreamingAggregator":
         """Fold another shard's statistics into this one (associative)."""
+        if other.domains != self.domains:
+            raise ValueError(f"domain axis mismatch at merge: "
+                             f"{other.domains} != {self.domains}")
         if other.num_regions > self.num_regions:
             self.grow(other.num_regions)
         r = other.num_regions
         self.counts[:r] += other.counts
-        self.psum[:r] += other.psum
-        self.psumsq[:r] += other.psumsq
+        self.chan_psum[:r] += other.chan_psum
+        self.chan_psumsq[:r] += other.chan_psumsq
+        touched = np.zeros(self.num_regions, bool)
+        touched[:r] = ((other.counts != 0)
+                       | other.chan_psum.any(axis=1)
+                       | other.chan_psumsq.any(axis=1))
+        self._mark_touched(touched)
         return self
 
     def statistics(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(counts, Σpow, Σpow²) — copies, safe to hand across hosts."""
         return self.counts.copy(), self.psum.copy(), self.psumsq.copy()
 
+    def channel_statistics(self) -> tuple[np.ndarray, np.ndarray,
+                                          np.ndarray]:
+        """(counts [R], Σpow [R, C], Σpow² [R, C]) — copies."""
+        return (self.counts.copy(), self.chan_psum.copy(),
+                self.chan_psumsq.copy())
+
+    def _mark_touched(self, mask: np.ndarray) -> None:
+        self._touch_gen[mask] = self._gen
+
+    def touch_generation(self) -> int:
+        """Snapshot the touch clock: rows mutated *after* this call
+        stamp a strictly greater generation. A consumer publishes the
+        rows of :meth:`rows_touched_since`, then stores this snapshot
+        as its new watermark only once the publish is durable — a
+        failed publish simply doesn't advance, so nothing is lost."""
+        g = self._gen
+        self._gen = g + 1
+        return g
+
+    def rows_touched_since(self, gen: int) -> np.ndarray:
+        """Rows touched after watermark ``gen`` (sorted indices) — a
+        superset of the rows whose values actually changed, which is
+        all the delta-spill contract needs. Non-destructive: any number
+        of consumers read independently with their own watermarks."""
+        return np.flatnonzero(self._touch_gen > gen)
+
     def estimates(self, t_exec: float, names: Sequence[str], *,
                   alpha: float = 0.05, drop_empty: bool = True) -> EstimateSet:
         """Finalize into an EstimateSet (vectorized Eq. 4-16)."""
-        return estimates_from_statistics(self.counts, self.psum, self.psumsq,
-                                         t_exec, names, alpha=alpha,
-                                         drop_empty=drop_empty)
+        d = self.num_domains
+        return estimates_from_statistics(
+            self.counts, self.psum, self.psumsq, t_exec, names, alpha=alpha,
+            drop_empty=drop_empty,
+            rail_psum=self.rail_psum if d > 1 else None,
+            rail_psumsq=self.rail_psumsq if d > 1 else None,
+            domains=self.domains if d > 1 else None)
 
 
 class CombinationInterner:
@@ -254,25 +450,41 @@ class StreamingCombinationAggregator:
     stream over the concatenated data.
     """
 
-    def __init__(self, *, aggregate_fn: AggregateFn | None = None):
+    def __init__(self, *, aggregate_fn: AggregateFn | None = None,
+                 domains: Sequence[str] = ("total",)):
         self.interner = CombinationInterner()
-        self.agg = StreamingAggregator(0, aggregate_fn=aggregate_fn)
+        self.agg = StreamingAggregator(0, aggregate_fn=aggregate_fn,
+                                       domains=domains)
 
     @classmethod
     def from_table(cls, combo_matrix: np.ndarray, counts: np.ndarray,
                    psum: np.ndarray, psumsq: np.ndarray, *,
-                   aggregate_fn: AggregateFn | None = None
+                   aggregate_fn: AggregateFn | None = None,
+                   domains: Sequence[str] = ("total",)
                    ) -> "StreamingCombinationAggregator":
         """Build from a key table + statistics (device-pipeline results,
         deserialized shards): ids are assigned in the table's row order,
-        so a table in interner order round-trips exactly."""
-        agg = cls(aggregate_fn=aggregate_fn)
+        so a table in interner order round-trips exactly. ``psum``/
+        ``psumsq`` are 1-D (single-domain) or [k, C] channel matrices."""
+        agg = cls(aggregate_fn=aggregate_fn, domains=domains)
         agg.merge_table(combo_matrix, counts, psum, psumsq)
         return agg
 
     @property
     def n_total(self) -> int:
         return self.agg.n_total
+
+    @property
+    def domains(self) -> tuple[str, ...]:
+        return self.agg.domains
+
+    def touch_generation(self) -> int:
+        """Delegates the spiller's touched-row contract to the inner
+        statistics aggregator (combination rows only ever append)."""
+        return self.agg.touch_generation()
+
+    def rows_touched_since(self, gen: int) -> np.ndarray:
+        return self.agg.rows_touched_since(gen)
 
     def update(self, region_id_matrix: np.ndarray,
                powers: np.ndarray) -> "StreamingCombinationAggregator":
@@ -305,17 +517,21 @@ class StreamingCombinationAggregator:
         if len(self.interner) > self.agg.num_regions:
             self.agg.grow(len(self.interner))
         if len(remap):
+            c = self.agg.num_channels
             np.add.at(self.agg.counts, remap, np.asarray(counts, np.int64))
-            np.add.at(self.agg.psum, remap, np.asarray(psum, np.float64))
-            np.add.at(self.agg.psumsq, remap,
-                      np.asarray(psumsq, np.float64))
+            np.add.at(self.agg.chan_psum, remap, _as_channels(psum, c))
+            np.add.at(self.agg.chan_psumsq, remap, _as_channels(psumsq, c))
+            self.agg._touch_gen[remap] = self.agg._gen
         return self
 
     def merge(self, other: "StreamingCombinationAggregator"
               ) -> "StreamingCombinationAggregator":
+        if other.domains != self.domains:
+            raise ValueError(f"domain axis mismatch at merge: "
+                             f"{other.domains} != {self.domains}")
         return self.merge_table(other.interner.combo_matrix(),
-                                other.agg.counts, other.agg.psum,
-                                other.agg.psumsq)
+                                other.agg.counts, other.agg.chan_psum,
+                                other.agg.chan_psumsq)
 
     def estimates(self, t_exec: float, names: Sequence[str], *,
                   alpha: float = 0.05

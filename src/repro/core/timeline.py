@@ -48,12 +48,22 @@ class RegionCost:
 
 @dataclasses.dataclass
 class Timeline:
-    """Piecewise-constant trace. Arrays share length m (interval count)."""
+    """Piecewise-constant trace. Arrays share length m (interval count).
+
+    ``rail_powers`` optionally decomposes each interval's scalar power
+    into per-domain rails ([m, D], summing to ``powers`` row-wise —
+    package vs HBM vs interconnect, cf.
+    :data:`repro.core.power_model.POWER_DOMAINS`); ``domains`` names the
+    rail axis. Scalar timelines (``rail_powers=None``) behave exactly as
+    before — every consumer treats them as D=1 with domain ``"total"``.
+    """
 
     region_ids: np.ndarray   # int32 [m]
     durations: np.ndarray    # float64 [m] seconds
     powers: np.ndarray       # float64 [m] watts (per-chip)
     names: tuple[str, ...]   # region id → name
+    rail_powers: np.ndarray | None = None   # float64 [m, D] or None
+    domains: tuple[str, ...] | None = None  # rail axis names (None → scalar)
 
     def __post_init__(self):
         # Own copies, frozen: the lazy cumsum caches below assume the
@@ -69,10 +79,37 @@ class Timeline:
             raise ValueError("timeline arrays must share length")
         if np.any(self.durations < 0):
             raise ValueError("negative durations")
+        if (self.rail_powers is None) != (self.domains is None):
+            raise ValueError("rail_powers and domains must be set together")
+        if self.rail_powers is not None:
+            self.rail_powers = np.array(self.rail_powers, dtype=np.float64)
+            self.rail_powers.flags.writeable = False
+            self.domains = tuple(self.domains)
+            if self.rail_powers.shape != (len(self.powers),
+                                          len(self.domains)):
+                raise ValueError(
+                    f"rail_powers shape {self.rail_powers.shape} != "
+                    f"(m={len(self.powers)}, D={len(self.domains)})")
         # Lazy caches: region_at/power_at are called once per sample chunk,
         # so recomputing an O(m) prefix sum per call dominates long runs.
         self._ends_cache: np.ndarray | None = None
         self._eint_cache: np.ndarray | None = None
+        self._rail_eint_cache: np.ndarray | None = None
+
+    @property
+    def num_domains(self) -> int:
+        return 1 if self.domains is None else len(self.domains)
+
+    @property
+    def domain_names(self) -> tuple[str, ...]:
+        """Rail axis names; scalar timelines report the one ``"total"``."""
+        return ("total",) if self.domains is None else self.domains
+
+    def rails(self) -> np.ndarray:
+        """Per-domain interval powers [m, D] (scalar → [m, 1] view)."""
+        if self.rail_powers is not None:
+            return self.rail_powers
+        return self.powers[:, None]
 
     @property
     def t_exec(self) -> float:
@@ -94,6 +131,21 @@ class Timeline:
             self._eint_cache = np.cumsum(self.durations * self.powers)
         return self._eint_cache
 
+    def rail_energy_integral(self) -> np.ndarray:
+        """Per-domain cumulative energy at interval ends, [m, D].
+
+        Scalar timelines return ``energy_integral()[:, None]`` so the
+        D=1 column is bit-identical to the scalar integral (the
+        compatibility contract every multi-channel sensor leans on).
+        """
+        if self._rail_eint_cache is None:
+            if self.rail_powers is None:
+                self._rail_eint_cache = self.energy_integral()[:, None]
+            else:
+                self._rail_eint_cache = np.cumsum(
+                    self.durations[:, None] * self.rail_powers, axis=0)
+        return self._rail_eint_cache
+
     def region_at(self, times: np.ndarray) -> np.ndarray:
         """Region id executing at each time point (vectorized PC sampling)."""
         idx = np.searchsorted(self.ends, np.asarray(times), side="right")
@@ -109,7 +161,10 @@ class Timeline:
         """Concatenate ``reps`` identical steps (multi-step profiled run)."""
         return Timeline(np.tile(self.region_ids, reps),
                         np.tile(self.durations, reps),
-                        np.tile(self.powers, reps), self.names)
+                        np.tile(self.powers, reps), self.names,
+                        rail_powers=None if self.rail_powers is None
+                        else np.tile(self.rail_powers, (reps, 1)),
+                        domains=self.domains)
 
     def to_device(self):
         """Upload as a single-worker :class:`DeviceTimeline` substrate.
@@ -134,18 +189,30 @@ def ground_truth(tl: Timeline) -> dict[str, dict[str, float]]:
     t = np.bincount(tl.region_ids, weights=tl.durations, minlength=minlen)
     e = np.bincount(tl.region_ids, weights=tl.durations * tl.powers,
                     minlength=minlen)
+    e_rails = None
+    if tl.rail_powers is not None:
+        e_rails = np.stack(
+            [np.bincount(tl.region_ids,
+                         weights=tl.durations * tl.rail_powers[:, d],
+                         minlength=minlen)
+             for d in range(len(tl.domains))], axis=1)
     present = np.bincount(tl.region_ids, minlength=minlen) > 0
-    return {tl.names[rid]: {"time": float(t[rid]), "energy": float(e[rid]),
-                            "power": float(e[rid] / t[rid]) if t[rid] > 0
-                            else 0.0}
-            for rid in np.flatnonzero(present)}
+    out = {}
+    for rid in np.flatnonzero(present):
+        row = {"time": float(t[rid]), "energy": float(e[rid]),
+               "power": float(e[rid] / t[rid]) if t[rid] > 0 else 0.0}
+        if e_rails is not None:
+            row["energy_rails"] = {d: float(e_rails[rid, j])
+                                   for j, d in enumerate(tl.domains)}
+        out[tl.names[rid]] = row
+    return out
 
 
 def synthesize(costs: Sequence[RegionCost], *, steps: int = 1,
                chips: int = 1, model: PowerModel | None = None,
                freq_scale: float = 1.0, latency_noise: float = 0.08,
                power_noise: float = 0.02, efficiency: float = 0.85,
-               seed: int = 0) -> Timeline:
+               seed: int = 0, domains: bool = False) -> Timeline:
     """Synthesize a device timeline from per-region roofline costs.
 
     Each step emits every region's invocations in order; per-instance
@@ -153,12 +220,20 @@ def synthesize(costs: Sequence[RegionCost], *, steps: int = 1,
     (paper Fig. 2: latency varies between iterations, e.g. with the memory
     level serving each load); per-instance power adds Gaussian sensor-scale
     noise on top of the activity model.
+
+    ``domains=True`` additionally carries the power model's per-rail
+    decomposition (:meth:`PowerModel.power_rails`) on every interval.
+    The scalar ``powers`` stream is computed identically either way —
+    same RNG consumption, same values — so ``domains=True`` only *adds*
+    information; each instance's rails are scaled uniformly by its noise
+    factor so they sum to the scalar power.
     """
     model = model or PowerModel()
     rng = np.random.default_rng(seed)
     names = tuple(c.name for c in costs)
+    dom_names = model.domains if domains else None
 
-    ids, durs, pows = [], [], []
+    ids, durs, pows, rails = [], [], [], []
     for step in range(steps):
         for rid, c in enumerate(costs):
             base = model.region_duration(c.flops, c.hbm_bytes, c.ici_bytes,
@@ -171,8 +246,14 @@ def synthesize(costs: Sequence[RegionCost], *, steps: int = 1,
                                    c.ici_bytes, base, freq_scale)
             p = float(model.power(*u, freq_scale=freq_scale))
             pn = p * (1.0 + power_noise * rng.standard_normal(c.invocations))
+            pn = np.maximum(pn, 1.0)
             ids.append(np.full(c.invocations, rid, dtype=np.int32))
             durs.append(d)
-            pows.append(np.maximum(pn, 1.0))
+            pows.append(pn)
+            if domains:
+                r = model.power_rails(*u, freq_scale=freq_scale)
+                rails.append(r[None, :] * (pn / r.sum())[:, None])
     return Timeline(np.concatenate(ids), np.concatenate(durs),
-                    np.concatenate(pows), names)
+                    np.concatenate(pows), names,
+                    rail_powers=np.concatenate(rails) if domains else None,
+                    domains=dom_names)

@@ -130,9 +130,19 @@ def make_carry_update(num_regions: int, *, use_pallas: bool | None = None,
 
     Returns ``update(counts, psum, psumsq, ids, pows, valid)`` folding one
     fixed-shape chunk into the carry under a validity mask (lanes past the
-    profiled horizon contribute nothing). Carry dtypes are preserved —
-    int64/float64 accumulation on CPU (under x64), the kernel's float32
-    per-chunk statistics added into the wider carry on TPU.
+    profiled horizon contribute nothing). Two carry layouts, dispatched
+    on the carry rank at trace time:
+
+    * scalar — ``psum``/``psumsq`` [R], ``pows`` [c]: the pre-rail
+      reduction, kept graph-identical on purpose (D=1 bit-exactness;
+      even value-equal graph variants reassociate under XLA fusion).
+    * channels — ``psum``/``psumsq`` [R, C], ``pows`` [C, c]: one
+      synchronized power reading per rail (+ total) per sample;
+      ``counts`` stays [R] (every rail shares the sample clock).
+
+    Carry dtypes are preserved — int64/float64 accumulation on CPU
+    (under x64), the kernel's float32 per-chunk statistics added into
+    the wider f64 carry on TPU.
 
     ``use_pallas`` defaults to backend dispatch: the Pallas one-hot matmul
     on TPU, an XLA scatter-add elsewhere (compiled, not interpret mode —
@@ -144,31 +154,59 @@ def make_carry_update(num_regions: int, *, use_pallas: bool | None = None,
     if use_pallas:
         def update(counts, psum, psumsq, ids, pows, valid):
             ids_m = jnp.where(valid, ids, -1).astype(jnp.int32)
-            pw_m = jnp.where(valid, pows, 0.0).astype(jnp.float32)
-            c, s, sq = sample_attr_pallas(ids_m, pw_m, num_regions,
-                                          block_n=block_n, block_r=block_r,
-                                          interpret=False)
+            if psum.ndim == 1:
+                pw_m = jnp.where(valid, pows, 0.0).astype(jnp.float32)
+                c, s, sq = sample_attr_pallas(ids_m, pw_m, num_regions,
+                                              block_n=block_n,
+                                              block_r=block_r,
+                                              interpret=False)
+                return (counts + c.astype(counts.dtype),
+                        psum + s.astype(psum.dtype),
+                        psumsq + sq.astype(psumsq.dtype))
+            new_psum, new_psumsq = [], []
+            c = None
+            # One kernel launch per channel: the one-hot matmul reduces a
+            # single power stream; rails are independent columns of the
+            # same sample set (counts come from the first launch).
+            for d in range(psum.shape[1]):
+                pw_m = jnp.where(valid, pows[d], 0.0).astype(jnp.float32)
+                cd, s, sq = sample_attr_pallas(
+                    ids_m, pw_m, num_regions, block_n=block_n,
+                    block_r=block_r, interpret=False)
+                c = cd if c is None else c
+                new_psum.append(s)
+                new_psumsq.append(sq)
             return (counts + c.astype(counts.dtype),
-                    psum + s.astype(psum.dtype),
-                    psumsq + sq.astype(psumsq.dtype))
+                    psum + jnp.stack(new_psum, axis=1).astype(psum.dtype),
+                    psumsq + jnp.stack(new_psumsq,
+                                       axis=1).astype(psumsq.dtype))
         return update
 
     if num_regions <= 128:
         # Small region spaces: the same one-hot matmul the Pallas kernel
-        # runs on the MXU, as one stacked [3, c] @ [c, R] GEMM — counts
-        # stay exact (integer-valued f64 sums), and XLA CPU parallelizes
-        # dots where scatter is a serial loop.
+        # runs on the MXU, as one stacked [1 + 2C, c] @ [c, R] GEMM —
+        # counts stay exact (integer-valued f64 sums), and XLA CPU
+        # parallelizes dots where scatter is a serial loop.
         def update(counts, psum, psumsq, ids, pows, valid):
             ids_m = jnp.where(valid, ids, -1)
             onehot = (ids_m[:, None]
                       == jnp.arange(num_regions)[None, :]).astype(psum.dtype)
-            # Mask pw explicitly: the all-zero one-hot row alone would
-            # turn a nonfinite masked-lane power into 0·inf = NaN.
-            pw = jnp.where(valid, pows, 0.0).astype(psum.dtype)
-            stats = jnp.stack([valid.astype(psum.dtype), pw, pw * pw]) @ \
-                onehot
+            if psum.ndim == 1:
+                # Mask pw explicitly: the all-zero one-hot row alone
+                # would turn a nonfinite masked-lane power into
+                # 0·inf = NaN.
+                pw = jnp.where(valid, pows, 0.0).astype(psum.dtype)
+                stats = jnp.stack([valid.astype(psum.dtype), pw, pw * pw]) \
+                    @ onehot
+                return (counts + stats[0].astype(counts.dtype),
+                        psum + stats[1], psumsq + stats[2])
+            pw = jnp.where(valid[None, :], pows, 0.0).astype(psum.dtype)
+            d = pw.shape[0]
+            rows = jnp.concatenate(
+                [valid.astype(psum.dtype)[None, :], pw, pw * pw])
+            stats = rows @ onehot
             return (counts + stats[0].astype(counts.dtype),
-                    psum + stats[1], psumsq + stats[2])
+                    psum + stats[1:1 + d].T, psumsq + stats[1 + d:].T)
         return update
 
     def update(counts, psum, psumsq, ids, pows, valid):
@@ -177,7 +215,11 @@ def make_carry_update(num_regions: int, *, use_pallas: bool | None = None,
         idx = jnp.where(valid, ids, num_regions)
         pw = pows.astype(psum.dtype)
         counts = counts.at[idx].add(jnp.ones((), counts.dtype), mode="drop")
-        psum = psum.at[idx].add(pw, mode="drop")
-        psumsq = psumsq.at[idx].add(pw * pw, mode="drop")
+        if psum.ndim == 1:
+            psum = psum.at[idx].add(pw, mode="drop")
+            psumsq = psumsq.at[idx].add(pw * pw, mode="drop")
+        else:
+            psum = psum.at[idx].add(pw.T, mode="drop")
+            psumsq = psumsq.at[idx].add((pw * pw).T, mode="drop")
         return counts, psum, psumsq
     return update

@@ -65,7 +65,12 @@ class PhaseEnergyAccountant:
         self.sampler = HostSampler(self.marker,
                                    sensor or available_host_sensor(),
                                    period=period, jitter=jitter, seed=seed)
-        self.agg = StreamingAggregator(len(regions_mod.registry.names))
+        # A multi-channel sensor bank (e.g. sensors.HostSensorBank over
+        # PKG + DRAM rails) widens the accumulators to one column per
+        # rail: estimates() then reports per-phase × per-domain energy.
+        self.domains = self.sampler.domains
+        self.agg = StreamingAggregator(len(regions_mod.registry.names),
+                                       domains=self.domains)
         self.spill_dir = spill_dir
         self.host_id = host_id
         self.spill_every = spill_every
@@ -151,11 +156,32 @@ class PhaseEnergyAccountant:
         return out
 
     def estimates(self, alpha: float = 0.05) -> EstimateSet:
-        """Per-phase estimates over everything drained so far."""
+        """Per-phase estimates over everything drained so far.
+
+        With a multi-channel sensor bank the table carries the per-phase
+        per-domain decomposition (``table.e_rails`` /
+        ``EstimateSet.energy_by_domain``).
+        """
         if self.agg.n_total == 0:
             raise RuntimeError("no samples collected")
         return self.agg.estimates(self.elapsed,
                                   regions_mod.registry.names, alpha=alpha)
+
+    def domain_energy(self) -> dict[str, dict[str, float]]:
+        """Per-phase × per-domain energy [J] drained so far.
+
+        The serving-fleet answer to "which phase burns energy on which
+        rail": ``{phase: {domain: joules}}``. Single-channel sensors
+        report their one ``"total"`` rail.
+        """
+        est = self.estimates()
+        tbl = est.table
+        if tbl.domains is None:
+            return {tbl.names[i]: {"total": float(tbl.e_hat[i])}
+                    for i in range(len(tbl))}
+        return {tbl.names[i]: {d: float(tbl.e_rails[i, j])
+                               for j, d in enumerate(tbl.domains)}
+                for i in range(len(tbl))}
 
     @staticmethod
     def gather_estimates(spill_dir: str, t_exec: float,

@@ -1,0 +1,324 @@
+"""Multi-domain (power-rail) attribution: device/oracle equivalence,
+D=1 golden-value regression vs pre-refactor main, and the domain axis
+through estimator / report / streaming / serving layers."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import device_pipeline as dp
+from repro.core.attribution import AttributionReport
+from repro.core.power_model import POWER_DOMAINS, PowerModel
+from repro.core.profiler import EnergyProfiler
+from repro.core.sensors import (HostSensorBank, Ina231TraceSensor,
+                                InstantTraceSensor, RaplTraceSensor,
+                                SensorSpec)
+from repro.core.streaming import StreamingAggregator, channels_for
+from repro.core.timeline import RegionCost, ground_truth, synthesize
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+# Exactly the workload the golden file was generated from (pre-refactor
+# main) — do not change without regenerating tests/data/golden_d1.json.
+COSTS = [
+    RegionCost("matmul", flops=2.4e12, hbm_bytes=1.6e9, invocations=3),
+    RegionCost("attn", flops=0.8e12, hbm_bytes=2.4e9, ici_bytes=1e8,
+               invocations=2),
+    RegionCost("embed", flops=1e10, hbm_bytes=3.2e9, invocations=1),
+    RegionCost("collective", flops=2e9, hbm_bytes=2e8, ici_bytes=6e8,
+               invocations=2),
+]
+
+_SENSOR_SPECS = {
+    "rapl": lambda domains: RaplTraceSensor.make_spec(5e-4,
+                                                      domains=domains),
+    "ina231": lambda domains: Ina231TraceSensor.make_spec(domains=domains),
+    "instant": lambda domains: InstantTraceSensor.make_spec(
+        domains=domains),
+}
+
+
+def _golden():
+    with open(os.path.join(DATA, "golden_d1.json")) as f:
+        return json.load(f)
+
+
+def _unhex(hexes):
+    return np.array([float.fromhex(h) for h in hexes])
+
+
+# ---------------------------------------------------------------------------
+# D=1 golden regression: bit-exact vs pre-refactor main.
+# ---------------------------------------------------------------------------
+
+def test_synthesize_scalar_powers_bit_exact_vs_golden():
+    """synthesize() with default args consumes the RNG identically."""
+    tl = synthesize(COSTS, steps=4, seed=3)
+    g = _golden()["timeline"]
+    assert [float(x).hex() for x in tl.powers[:16]] == g["powers_hex"]
+    assert [float(x).hex() for x in tl.durations[:16]] == g["durations_hex"]
+
+
+@pytest.mark.parametrize("sensor", ["rapl", "ina231", "instant"])
+def test_region_pipeline_d1_bit_exact_vs_golden(sensor):
+    """The fused device pipeline's D=1 statistics are bit-identical to
+    the pre-rail pipeline (counts, Σpow, Σpow² — exact float bits)."""
+    tl = synthesize(COSTS, steps=4, seed=3)
+    spec = _SENSOR_SPECS[sensor](("total",))
+    res = dp.run_region_pipeline(tl.to_device(), spec, period=5e-4,
+                                 jitter=1e-4, seed=11, chunk_size=4096)
+    g = _golden()[f"region/{sensor}"]
+    assert res.counts.tolist() == g["counts"]
+    assert [float(x).hex() for x in res.psum] == g["psum_hex"]
+    assert [float(x).hex() for x in res.psumsq] == g["psumsq_hex"]
+    assert res.n == g["n"]
+    # The rail view of a scalar run is the single "total" rail itself.
+    assert res.domains == ("total",)
+    assert np.array_equal(res.rail_psum[:, 0], res.psum)
+
+
+def test_reference_pipeline_d1_bit_exact_vs_golden():
+    tl = synthesize(COSTS, steps=4, seed=3)
+    spec = RaplTraceSensor.make_spec(5e-4)
+    ref = dp.reference_region_pipeline(tl, spec, period=5e-4, jitter=1e-4,
+                                       seed=11, chunk_size=4096)
+    g = _golden()["ref_region/rapl"]
+    assert ref.counts.tolist() == g["counts"]
+    assert [float(x).hex() for x in ref.psum] == g["psum_hex"]
+    assert [float(x).hex() for x in ref.psumsq] == g["psumsq_hex"]
+
+
+def test_combo_pipeline_d1_bit_exact_vs_golden():
+    """Multi-worker fused path: statistics AND interned combination ids
+    match pre-refactor main bit-for-bit."""
+    tls = [synthesize(COSTS, steps=3, seed=s) for s in (5, 6, 7, 8)]
+    spec = RaplTraceSensor.make_spec(5e-4)
+    agg, n = dp.run_combo_pipeline(dp.DeviceTimeline.from_timelines(tls),
+                                   spec, period=5e-4, jitter=1e-4, seed=13,
+                                   chunk_size=4096)
+    g = _golden()["combo/rapl"]
+    assert n == g["n"]
+    assert agg.agg.counts.tolist() == g["counts"]
+    assert [float(x).hex() for x in agg.agg.psum] == g["psum_hex"]
+    assert [float(x).hex() for x in agg.agg.psumsq] == g["psumsq_hex"]
+    assert agg.interner.combo_matrix().tolist() == g["combos"]
+
+
+# ---------------------------------------------------------------------------
+# Multi-domain equivalence: fused device pipeline vs numpy host oracle.
+# ---------------------------------------------------------------------------
+
+def _rel(a, b):
+    return np.max(np.abs(a - b) / np.maximum(np.abs(b), 1e-30))
+
+
+@pytest.mark.parametrize("sensor", ["rapl", "ina231", "instant"])
+def test_region_pipeline_d3_matches_oracle(sensor):
+    tl = synthesize(COSTS, steps=4, seed=3, domains=True)
+    assert tl.domains == POWER_DOMAINS
+    spec = _SENSOR_SPECS[sensor](tl.domain_names)
+    res = dp.run_region_pipeline(tl.to_device(), spec, period=5e-4,
+                                 jitter=1e-4, seed=11, chunk_size=4096)
+    ref = dp.reference_region_pipeline(tl, spec, period=5e-4, jitter=1e-4,
+                                       seed=11, chunk_size=4096)
+    assert np.array_equal(res.counts, ref.counts)      # bit-exact counts
+    assert res.domains == POWER_DOMAINS
+    assert _rel(res.rail_psum, ref.rail_psum) < 1e-9
+    assert _rel(res.rail_psumsq, ref.rail_psumsq) < 1e-9
+    assert _rel(res.psum, ref.psum) < 1e-9
+    # Per-domain sums reconstruct the scalar total.
+    assert _rel(res.rail_psum.sum(axis=1), res.psum) < 1e-9
+
+
+@pytest.mark.parametrize("sensor", ["rapl", "ina231", "instant"])
+def test_combo_pipeline_d3_matches_oracle_w4(sensor):
+    tls = [synthesize(COSTS, steps=2, seed=s, domains=True)
+           for s in (5, 6, 7, 8)]
+    spec = _SENSOR_SPECS[sensor](tls[0].domain_names)
+    agg, n = dp.run_combo_pipeline(dp.DeviceTimeline.from_timelines(tls),
+                                   spec, period=5e-4, jitter=1e-4, seed=13,
+                                   chunk_size=4096)
+    ragg, rn = dp.reference_combo_pipeline(tls, lambda tl: spec,
+                                           period=5e-4, jitter=1e-4,
+                                           seed=13, chunk_size=4096)
+    assert n == rn
+    assert np.array_equal(agg.agg.counts, ragg.agg.counts)
+    assert (agg.interner.combo_matrix().tolist()
+            == ragg.interner.combo_matrix().tolist())
+    assert _rel(agg.agg.chan_psum, ragg.agg.chan_psum) < 1e-9
+    assert _rel(agg.agg.chan_psumsq, ragg.agg.chan_psumsq) < 1e-9
+
+
+def test_d3_rail_energy_matches_ground_truth():
+    """Estimated per-domain energies converge on the exact per-rail
+    integrals (the §6 compute-vs-memory split measured directly)."""
+    tl = synthesize(COSTS, steps=6, seed=3, domains=True)
+    prof = EnergyProfiler(period=2e-4, jitter=5e-5, seed=11)
+    est = prof.profile_timeline_streaming(tl, sensor="instant",
+                                          chunk_size=8192)
+    truth = ground_truth(tl)
+    gt_by_dom = {d: sum(v["energy_rails"][d] for v in truth.values())
+                 for d in tl.domains}
+    by_dom = est.energy_by_domain()
+    assert set(by_dom) == set(POWER_DOMAINS)
+    for d in POWER_DOMAINS:
+        assert by_dom[d] == pytest.approx(gt_by_dom[d], rel=0.05)
+    # The split is meaningful: matmul is package-dominated, embed is
+    # HBM-heavy relative to its package share.
+    rows = {r.name: r for r in est.regions}
+    mm, em = rows["matmul"], rows["embed"]
+    assert mm.energy_by_domain()["package"] > mm.energy_by_domain()["hbm"]
+    assert (em.energy_by_domain()["hbm"] / em.e_hat
+            > mm.energy_by_domain()["hbm"] / mm.e_hat)
+
+
+def test_power_rails_sum_to_power():
+    pm = PowerModel()
+    rails = pm.power_rails(0.7, 0.4, 0.1, freq_scale=0.9,
+                           mem_contention=1.5)
+    total = pm.power(0.7, 0.4, 0.1, freq_scale=0.9, mem_contention=1.5)
+    assert rails.shape == (3,)
+    assert float(rails.sum()) == pytest.approx(float(total), rel=1e-12)
+
+
+def test_synthesize_domains_rails_sum_to_scalar():
+    tl = synthesize(COSTS, steps=2, seed=7, domains=True)
+    np.testing.assert_allclose(tl.rail_powers.sum(axis=1), tl.powers,
+                               rtol=1e-12)
+    # Scalar stream identical with and without rails (same RNG draw).
+    tl0 = synthesize(COSTS, steps=2, seed=7)
+    assert np.array_equal(tl.powers, tl0.powers)
+    assert np.array_equal(tl.durations, tl0.durations)
+
+
+# ---------------------------------------------------------------------------
+# Estimator / report / streaming / serving surfaces.
+# ---------------------------------------------------------------------------
+
+def test_domain_report_tables():
+    tl = synthesize(COSTS, steps=3, seed=3, domains=True)
+    prof = EnergyProfiler(period=5e-4, jitter=1e-4, seed=11)
+    est = prof.profile_timeline_streaming(tl, sensor="instant",
+                                          chunk_size=4096)
+    rep = AttributionReport(est)
+    txt = rep.domain_table()
+    for d in POWER_DOMAINS:
+        assert f"ê_{d}" in txt
+    csv = rep.domain_csv()
+    assert csv.splitlines()[0].startswith("region,n,e_hat,pow_package")
+    # single-rail estimates refuse the domain breakdown loudly
+    est1 = prof.profile_timeline_streaming(synthesize(COSTS, seed=3),
+                                           sensor="instant",
+                                           chunk_size=4096)
+    with pytest.raises(ValueError):
+        AttributionReport(est1).domain_table()
+
+
+def test_streaming_aggregator_domain_axis():
+    rng = np.random.default_rng(0)
+    agg = StreamingAggregator(4, domains=POWER_DOMAINS)
+    assert agg.num_channels == channels_for(POWER_DOMAINS) == 4
+    ids = rng.integers(0, 4, 1000)
+    rails = rng.uniform(10, 100, (1000, 3))
+    agg.update(ids, rails)
+    # total channel == sum of rails per sample, accumulated
+    np.testing.assert_allclose(agg.psum, agg.rail_psum.sum(axis=1),
+                               rtol=1e-12)
+    # psumsq of the total is NOT the sum of rail psumsqs (squares don't
+    # sum) — the dedicated channel must carry it.
+    assert not np.allclose(agg.psumsq, agg.rail_psumsq.sum(axis=1))
+    ref = np.zeros(4)
+    np.add.at(ref, ids, rails.sum(axis=1) ** 2)
+    np.testing.assert_allclose(agg.psumsq, ref, rtol=1e-12)
+    # merge requires a matching domain axis
+    with pytest.raises(ValueError, match="domain axis"):
+        agg.merge(StreamingAggregator(4))
+    # scalar powers into a multi-domain aggregator are rejected
+    with pytest.raises(ValueError, match="scalar powers"):
+        agg.update(ids[:5], np.ones(5))
+
+
+def test_sensor_bank_spec_and_min_periods():
+    spec = SensorSpec(kind="rapl", update_period=1e-3, min_period=1e-3,
+                      domains=("package", "dram"),
+                      min_periods=(1e-3, 5e-3))
+    assert spec.num_domains == 2
+    assert spec.effective_min_period() == 5e-3
+    with pytest.raises(ValueError):
+        SensorSpec(kind="rapl", domains=("a",), min_periods=(1.0, 2.0))
+    # the device pipeline refuses periods under the slowest channel
+    tl = synthesize(COSTS, steps=1, seed=0)
+    with pytest.raises(ValueError, match="below sensor minimum"):
+        dp.run_region_pipeline(
+            tl.to_device(),
+            SensorSpec(kind="instant", min_periods=(5e-2,)), period=1e-3)
+    # and a channel-count / rail-count mismatch fails loudly
+    tl3 = synthesize(COSTS, steps=1, seed=0, domains=True)
+    with pytest.raises(ValueError, match="rail"):
+        dp.run_region_pipeline(tl3.to_device(),
+                               InstantTraceSensor.make_spec(),
+                               period=1e-3)
+
+
+def test_host_sensor_bank_and_sampler_channels():
+    class Fake:
+        min_period = 0.0
+
+        def __init__(self, v):
+            self.v = v
+
+        def read(self, t=None):
+            return self.v
+
+    bank = HostSensorBank([("package", Fake(10.0)), ("dram", Fake(3.0))])
+    assert bank.domains == ("package", "dram")
+    np.testing.assert_array_equal(bank.read(), [10.0, 3.0])
+    with pytest.raises(ValueError, match="duplicate"):
+        HostSensorBank([("a", Fake(1.0)), ("a", Fake(2.0))])
+
+    from repro.core.sampler import SampleBuffer
+    buf = SampleBuffer(channels=2)
+    buf.append(1, bank.read())
+    buf.append(2, bank.read() * 2)
+    rids, pows = buf.drain()
+    assert pows.shape == (2, 2)
+    np.testing.assert_array_equal(pows[1], [20.0, 6.0])
+    # single-channel buffers keep the 1-D drain contract
+    b1 = SampleBuffer()
+    b1.append(0, 5.0)
+    _, p1 = b1.drain()
+    assert p1.shape == (1,)
+
+
+def test_accountant_domain_energy(tmp_path):
+    """Per-phase × per-domain serving accounting through a sensor bank."""
+    from repro.core import regions as regions_mod
+    from repro.serve.engine import PhaseEnergyAccountant
+
+    class Fake:
+        min_period = 0.0
+
+        def __init__(self):
+            self.domains = ("package", "dram")
+
+        def read(self, t=None):
+            return np.array([50.0, 20.0])
+
+    acct = PhaseEnergyAccountant(period=1e-3, sensor=Fake())
+    with acct:
+        with regions_mod.region("phase_a"):
+            t_stop = __import__("time").monotonic() + 0.05
+            while __import__("time").monotonic() < t_stop:
+                pass
+    assert acct.drain() >= 0
+    de = acct.domain_energy()
+    row = next(iter(de.values()))
+    assert set(row) == {"package", "dram"}
+    est = acct.estimates()
+    assert est.domains == ("package", "dram")
+    by_dom = est.energy_by_domain()
+    # 50 W vs 20 W split must be preserved ~exactly (constant readings)
+    assert by_dom["package"] == pytest.approx(2.5 * by_dom["dram"],
+                                              rel=1e-6)
