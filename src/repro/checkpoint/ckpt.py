@@ -39,6 +39,9 @@ from typing import Any, Sequence
 import jax
 import numpy as np
 
+from repro.core.faults import (CorruptShardError, TornWriteError,
+                               resolve_plan)
+
 __all__ = ["save", "restore", "latest_step", "AsyncCheckpointer",
            "write_manifest_dir", "read_manifest_dir", "read_manifest_meta",
            "publish_latest"]
@@ -58,19 +61,68 @@ def _write_leaf(dirpath: str, fname: str, arr: np.ndarray) -> int:
     buf = io.BytesIO()
     np.save(buf, np.asarray(arr))
     data = buf.getvalue()
-    with open(os.path.join(dirpath, fname), "wb") as f:
+    fp = os.path.join(dirpath, fname)
+    crc = zlib.crc32(data)
+    plan = resolve_plan(None)
+    if plan is not None:
+        # Storage-layer rot model: the CRC covers the *intended* bytes,
+        # the disk holds the corrupted ones, so verified reads detect it.
+        data = plan.corrupt_bytes(fp, data, "write")
+    with open(fp, "wb") as f:
         f.write(data)
-    return zlib.crc32(data)
+    return crc
+
+
+def _expected_leaf_bytes(meta: dict) -> int | None:
+    """Lower bound on the leaf's npy byte length (payload, sans header)."""
+    try:
+        itemsize = np.dtype(meta["dtype"]).itemsize
+        n = 1
+        for s in meta["shape"]:
+            n *= int(s)
+        return n * itemsize
+    except (KeyError, TypeError, ValueError):
+        return None
 
 
 def _read_leaf(dirpath: str, meta: dict) -> np.ndarray:
-    """Load + CRC-verify one leaf described by a manifest entry."""
-    fp = os.path.join(dirpath, meta["file"])
-    with open(fp, "rb") as f:
-        data = f.read()
-    if zlib.crc32(data) != meta["crc32"]:
-        raise IOError(f"CRC mismatch in {fp} (corrupt checkpoint)")
-    return np.load(io.BytesIO(data))
+    """Load + CRC-verify one leaf described by a manifest entry.
+
+    Failure typing: a missing or short file is a :class:`TornWriteError`
+    (the writer — or the storage layer — lost bytes after publication);
+    present-but-wrong bytes are a :class:`CorruptShardError`. Both are
+    ``IOError`` subclasses, so callers' transient-race retry loops are
+    unchanged.
+    """
+    try:
+        fp = os.path.join(dirpath, meta["file"])
+    except (KeyError, TypeError) as e:
+        raise CorruptShardError(
+            f"malformed leaf entry in {dirpath}/manifest.json: {e!r}") from e
+    try:
+        with open(fp, "rb") as f:
+            data = f.read()
+    except FileNotFoundError as e:
+        raise TornWriteError(f"missing leaf {fp} (torn write)") from e
+    plan = resolve_plan(None)
+    if plan is not None:
+        data = plan.corrupt_bytes(fp, data, "read")
+    try:
+        want_crc = meta["crc32"]
+    except (KeyError, TypeError) as e:
+        raise CorruptShardError(
+            f"malformed leaf entry for {fp}: {e!r}") from e
+    if zlib.crc32(data) != want_crc:
+        expect = _expected_leaf_bytes(meta)
+        if expect is not None and len(data) < expect:
+            raise TornWriteError(
+                f"truncated leaf {fp}: {len(data)} bytes < {expect} "
+                f"expected (torn write)")
+        raise CorruptShardError(f"CRC mismatch in {fp} (corrupt checkpoint)")
+    try:
+        return np.load(io.BytesIO(data))
+    except Exception as e:
+        raise CorruptShardError(f"undecodable leaf {fp}: {e}") from e
 
 
 def write_manifest_dir(final: str, arrays: Sequence[np.ndarray],
@@ -93,8 +145,13 @@ def write_manifest_dir(final: str, arrays: Sequence[np.ndarray],
         manifest["leaves"].append({
             "file": fname, "shape": list(arr.shape),
             "dtype": str(arr.dtype), "crc32": crc})
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+    mf = os.path.join(tmp, "manifest.json")
+    mdata = json.dumps(manifest).encode()
+    plan = resolve_plan(None)
+    if plan is not None:
+        mdata = plan.corrupt_bytes(mf, mdata, "write")
+    with open(mf, "wb") as f:
+        f.write(mdata)
         f.flush()
         os.fsync(f.fileno())
     if os.path.exists(final):
@@ -117,8 +174,19 @@ def read_manifest_meta(d: str) -> dict:
     readers (:mod:`repro.core.exchange`) inspect epoch linkage and caller
     ``extra`` state without paying for (or CRC-checking) the leaves.
     """
-    with open(os.path.join(d, "manifest.json")) as f:
-        return json.load(f)
+    fp = os.path.join(d, "manifest.json")
+    with open(fp, "rb") as f:
+        data = f.read()
+    plan = resolve_plan(None)
+    if plan is not None:
+        data = plan.corrupt_bytes(fp, data, "read")
+    try:
+        manifest = json.loads(data.decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise CorruptShardError(f"unparseable manifest {fp}: {e}") from e
+    if not isinstance(manifest, dict) or "leaves" not in manifest:
+        raise CorruptShardError(f"manifest {fp} lacks a leaves table")
+    return manifest
 
 
 def publish_latest(path: str, step: int) -> None:

@@ -18,6 +18,15 @@ class AttributionReport:
 
     estimates: EstimateSet
 
+    def _coverage_lines(self) -> list[str]:
+        """Degraded-gather disclosure: statistics merged from a partial
+        fleet must say so in every human rendering (the numbers alone
+        look identical to a complete gather's)."""
+        cov = self.estimates.coverage
+        if not cov or cov.get("complete"):
+            return []
+        return [f"COVERAGE (partial fleet): {cov.get('summary', cov)}"]
+
     def table(self, top: int | None = None) -> str:
         rows = sorted(self.estimates.regions, key=lambda r: -r.e_hat)
         if top:
@@ -34,6 +43,7 @@ class AttributionReport:
         lines.append(f"{'TOTAL':28s} {self.estimates.n_total:8d} "
                      f"{self.estimates.total_time:10.4f} {'':8s} {'':9s} "
                      f"{self.estimates.total_energy:11.2f}")
+        lines.extend(self._coverage_lines())
         return "\n".join(lines)
 
     def csv(self) -> str:
@@ -79,6 +89,7 @@ class AttributionReport:
             share = totals[d] / te * 100.0 if te > 0 else 0.0
             tot += f" {totals[d]:14.2f} {share:5.1f}"
         lines.append(tot)
+        lines.extend(self._coverage_lines())
         return "\n".join(lines)
 
     def domain_csv(self) -> str:

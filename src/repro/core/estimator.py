@@ -211,12 +211,24 @@ class EstimateSet:
     n_total: int
     t_exec: float
     alpha: float
+    # Fleet-coverage provenance of a degraded gather (the
+    # ``GatherResult.coverage()`` dict of :mod:`repro.core.exchange`):
+    # which hosts merged at which epoch, which were missing / stale /
+    # quarantined. None means the statistics were not fleet-gathered or
+    # the gather was strict (all-or-nothing), i.e. coverage is total.
+    coverage: Mapping | None = None
 
     @classmethod
     def from_regions(cls, regions: Sequence[RegionEstimate], n_total: int,
                      t_exec: float, alpha: float) -> "EstimateSet":
         return cls(table=EstimateTable.from_rows(tuple(regions)),
                    n_total=n_total, t_exec=t_exec, alpha=alpha)
+
+    @property
+    def complete_coverage(self) -> bool:
+        """False only when attached gather provenance says hosts are
+        missing, stale or quarantined."""
+        return self.coverage is None or bool(self.coverage.get("complete"))
 
     @functools.cached_property
     def regions(self) -> tuple[RegionEstimate, ...]:
@@ -275,7 +287,8 @@ def _build_estimates(counts: np.ndarray, psum: np.ndarray, psumsq: np.ndarray,
                      names: Sequence[str], t_exec: float, alpha: float,
                      drop_empty: bool, rail_psum: np.ndarray | None = None,
                      rail_psumsq: np.ndarray | None = None,
-                     domains: Sequence[str] | None = None) -> EstimateSet:
+                     domains: Sequence[str] | None = None,
+                     coverage: Mapping | None = None) -> EstimateSet:
     """Vectorized Eq. 4-16 over the per-region sufficient statistics.
 
     Pure numpy column math — no per-region Python loop — so multi-worker
@@ -355,7 +368,7 @@ def _build_estimates(counts: np.ndarray, psum: np.ndarray, psumsq: np.ndarray,
         **rails,
     )
     return EstimateSet(table=table, n_total=n, t_exec=float(t_exec),
-                       alpha=alpha)
+                       alpha=alpha, coverage=coverage)
 
 
 def estimates_from_statistics(counts: np.ndarray, psum: np.ndarray,
@@ -364,7 +377,8 @@ def estimates_from_statistics(counts: np.ndarray, psum: np.ndarray,
                               drop_empty: bool = True,
                               rail_psum: np.ndarray | None = None,
                               rail_psumsq: np.ndarray | None = None,
-                              domains: Sequence[str] | None = None
+                              domains: Sequence[str] | None = None,
+                              coverage: Mapping | None = None
                               ) -> EstimateSet:
     """Build estimates directly from pre-aggregated sufficient statistics.
 
@@ -372,7 +386,9 @@ def estimates_from_statistics(counts: np.ndarray, psum: np.ndarray,
     :class:`repro.core.streaming.StreamingAggregator` (or any multi-host
     shard reduction) hands its merged (counts, Σpow, Σpow²) here without
     ever materializing the raw sample stream. ``rail_psum``/``rail_psumsq``
-    + ``domains`` add the per-domain columns for multi-rail runs.
+    + ``domains`` add the per-domain columns for multi-rail runs;
+    ``coverage`` attaches a degraded gather's provenance so reports can
+    disclose partial fleets.
     """
     if not (rail_psum is None) == (rail_psumsq is None) == (domains is None):
         raise ValueError("rail_psum, rail_psumsq and domains must be "
@@ -383,7 +399,8 @@ def estimates_from_statistics(counts: np.ndarray, psum: np.ndarray,
                             rail_psum=None if rail_psum is None
                             else np.asarray(rail_psum),
                             rail_psumsq=None if rail_psumsq is None
-                            else np.asarray(rail_psumsq), domains=domains)
+                            else np.asarray(rail_psumsq), domains=domains,
+                            coverage=coverage)
 
 
 def estimate_regions(region_ids: np.ndarray, powers: np.ndarray,

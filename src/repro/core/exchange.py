@@ -85,13 +85,18 @@ import dataclasses
 import os
 import re
 import shutil
+import time
 import weakref
-from typing import Sequence
+from typing import Mapping, Sequence
 
 import numpy as np
 
 from repro.checkpoint import ckpt
+from repro.core import faults as faults_mod
 from repro.core.estimator import AggregateFn
+from repro.core.faults import (CorruptShardError, DeltaMismatchError,
+                               InjectedCrash, QuorumError, SpillError,
+                               StaleShardError, TornWriteError)
 from repro.core.streaming import (StreamingAggregator,
                                   StreamingCombinationAggregator,
                                   channels_for)
@@ -103,6 +108,7 @@ __all__ = [
     "tree_reduce", "CollectiveExchange", "CheckpointExchange",
     "ShardDelta", "compute_shard_delta", "apply_shard_delta",
     "spill_shard_delta", "DeltaChain", "ShardSpiller",
+    "QuorumPolicy", "HostReport", "GatherResult",
 ]
 
 # \d+ not \d{4}: the :04d dir format zero-pads but never truncates, so
@@ -381,8 +387,9 @@ def _unwire_stats(arr: np.ndarray, domains: tuple[str, ...]) -> np.ndarray:
         arr = arr[:, None]
     c = channels_for(domains)
     if arr.shape[1] != c:
-        raise IOError(f"shard statistics have {arr.shape[1]} channels; "
-                      f"domain axis {domains} requires {c}")
+        raise CorruptShardError(
+            f"shard statistics have {arr.shape[1]} channels; "
+            f"domain axis {domains} requires {c}")
     return arr
 
 
@@ -441,17 +448,25 @@ def _load_shard(hd: str, epoch: int) -> PackedShard:
     """
     d = _epoch_dir(hd, epoch)
     arrays, manifest = ckpt.read_manifest_dir(d)
-    named = dict(zip(manifest["schema"], arrays))
-    domains = _meta_domains(manifest)
-    return PackedShard(counts=named["counts"].astype(np.int64),
-                       psum=_unwire_stats(named["psum"], domains),
-                       psumsq=_unwire_stats(named["psumsq"], domains),
-                       n_rows=int(manifest["n_rows"]),
-                       combos=named.get("combos"), domains=domains)
+    try:
+        named = dict(zip(manifest["schema"], arrays))
+        domains = _meta_domains(manifest)
+        return PackedShard(counts=named["counts"].astype(np.int64),
+                           psum=_unwire_stats(named["psum"], domains),
+                           psumsq=_unwire_stats(named["psumsq"], domains),
+                           n_rows=int(manifest["n_rows"]),
+                           combos=named.get("combos"), domains=domains)
+    except (KeyError, TypeError, ValueError) as e:
+        # The leaves CRC'd clean but the manifest decoded to the wrong
+        # structure (a bit flip inside a JSON string still parses):
+        # corrupt, not a programming error.
+        raise CorruptShardError(f"malformed shard manifest in {d}: "
+                                f"{e!r}") from e
 
 
 def restore_shard(path: str, host_id: int, *,
-                  aggregate_fn: AggregateFn | None = None):
+                  aggregate_fn: AggregateFn | None = None,
+                  min_epoch: int | None = None):
     """(aggregator, epoch) from a host's LATEST spill, or None if absent.
 
     A restarted host calls this to resume accumulating from its last
@@ -460,10 +475,16 @@ def restore_shard(path: str, host_id: int, *,
     transparently (:class:`DeltaChain`), so full-spilling and
     delta-spilling hosts are indistinguishable to readers.
 
+    ``min_epoch`` makes the read strict about recency: a host whose
+    LATEST is behind it raises :class:`StaleShardError` instead of
+    silently handing back old statistics.
+
     Concurrent-compaction race: the writer may publish a fresh base and
     GC the chain this reader just resolved from a now-stale LATEST. The
     fold then fails mid-walk — re-reading LATEST finds the new (full)
-    base, so a couple of retries make the read lock-free.
+    base, so a couple of retries make the read lock-free. Failures that
+    persist past the retries surface as typed
+    :class:`~repro.core.faults.SpillError` subclasses.
     """
     hd = _host_dir(path, host_id)
     last_err = None
@@ -471,6 +492,10 @@ def restore_shard(path: str, host_id: int, *,
         epoch = ckpt.latest_step(hd)
         if epoch is None:
             return None
+        if min_epoch is not None and epoch < min_epoch:
+            raise StaleShardError(
+                f"host {host_id} LATEST epoch {epoch} is behind the "
+                f"required watermark {min_epoch}")
         try:
             shard = DeltaChain(hd, epoch).fold()
         except IOError as e:
@@ -528,14 +553,36 @@ def tree_reduce(aggs: Sequence):
     return aggs[0]
 
 
-def gather_shards(path: str, *, aggregate_fn: AggregateFn | None = None):
+def gather_shards(path: str, *, aggregate_fn: AggregateFn | None = None,
+                  quorum: "QuorumPolicy | None" = None):
     """Merge every published host shard under ``path`` (reduction tree).
 
     Hosts are taken in id order and merged by :func:`tree_reduce`, so
     combination ids match a single-host pass over the concatenated
     stream regardless of host count.
+
+    Without ``quorum`` this is the strict, all-or-nothing gather: any
+    unreadable host raises (typed — see :mod:`repro.core.faults`) and
+    the return value is the merged aggregator. With a
+    :class:`QuorumPolicy` the gather degrades instead of failing:
+    per-host bounded retries with exponential backoff, corrupt epoch
+    tails folded back to the last durable prefix, and a
+    :class:`GatherResult` return value carrying full provenance — which
+    hosts merged at which effective epoch, which were missing, stale or
+    quarantined — so downstream reports disclose coverage instead of
+    overstating it.
     """
+    if quorum is not None:
+        return _quorum_gather(path, quorum, aggregate_fn)
     hosts = list_spilled_hosts(path)
+    # Strict mode must not silently shrink the fleet: a host whose LATEST
+    # file exists but doesn't parse is corrupt, not "never published"
+    # (``list_spilled_hosts`` can't tell the two apart — it hides both).
+    for h in _list_host_dirs(path):
+        hd = _host_dir(path, h)
+        if (h not in hosts
+                and os.path.exists(os.path.join(hd, "LATEST"))):
+            raise CorruptShardError(f"unreadable LATEST under {hd}")
     if not hosts:
         raise FileNotFoundError(f"no published shards under {path}")
     aggs = []
@@ -544,6 +591,281 @@ def gather_shards(path: str, *, aggregate_fn: AggregateFn | None = None):
         assert restored is not None       # list_spilled_hosts checked LATEST
         aggs.append(restored[0])
     return tree_reduce(aggs)
+
+
+# -- quorum (degraded-mode) gather ---------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuorumPolicy:
+    """How a degraded gather trades completeness for availability.
+
+    Attributes
+    ----------
+    expected_hosts: the fleet roster. ``None`` means "whatever host
+        directories exist on disk" — note that a host which crashed
+        before its *first* publish is invisible then, so production
+        gathers should pass the roster explicitly.
+    min_hosts:     merged-host count below which the gather raises
+        :class:`QuorumError` rather than return statistics too partial
+        to act on.
+    min_epoch:     recency watermark: hosts whose effective epoch falls
+        behind it are classified stale (merged but disclosed, or
+        excluded when ``drop_stale``).
+    watermarks:    per-host monotone epoch watermarks (e.g. the
+        ``host_epochs`` of the previous :class:`GatherResult`): a host
+        folded back *behind* its own last-seen epoch is flagged stale,
+        so coverage can never silently move backwards between gathers.
+    retries:       read attempts per host before accepting a degraded
+        fold or quarantining.
+    backoff:       initial inter-attempt sleep, doubled each retry
+        (0 disables sleeping — tests).
+    drop_stale:    exclude stale hosts from the merge entirely instead
+        of merging-and-disclosing.
+    """
+    expected_hosts: tuple[int, ...] | None = None
+    min_hosts: int = 1
+    min_epoch: int | None = None
+    watermarks: Mapping[int, int] | None = None
+    retries: int = 3
+    backoff: float = 0.05
+    drop_stale: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class HostReport:
+    """Per-host provenance of one quorum gather.
+
+    ``status`` is one of:
+
+    * ``"merged"``       — full chain folded at the host's LATEST epoch.
+    * ``"degraded"``     — a corrupt/torn tail was quarantined; the host
+      merged at an earlier durable epoch (``quarantined_epochs`` lists
+      the rolled-back tail).
+    * ``"stale"``        — durable state is behind the policy watermark
+      (merged unless ``drop_stale``).
+    * ``"missing"``      — expected host never published.
+    * ``"quarantined"``  — host present but nothing durable was readable;
+      excluded from the merge.
+    """
+    host_id: int
+    status: str
+    epoch: int | None = None             # effective (merged) epoch
+    requested_epoch: int | None = None   # LATEST at gather time
+    quarantined_epochs: tuple[int, ...] = ()
+    error: str | None = None
+    attempts: int = 1
+
+    @property
+    def merged(self) -> bool:
+        return self.epoch is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class GatherResult:
+    """A degraded-mode gather: merged statistics + full provenance."""
+    agg: object
+    hosts: tuple[HostReport, ...]
+
+    @property
+    def complete(self) -> bool:
+        """True iff every expected host merged its full LATEST chain —
+        the condition under which the merge is bit-exact to a fault-free
+        gather of the same hosts."""
+        return all(r.status == "merged" for r in self.hosts)
+
+    def _by_status(self, *statuses: str) -> tuple[int, ...]:
+        return tuple(r.host_id for r in self.hosts if r.status in statuses)
+
+    @property
+    def hosts_merged(self) -> tuple[int, ...]:
+        return tuple(r.host_id for r in self.hosts if r.merged)
+
+    @property
+    def hosts_missing(self) -> tuple[int, ...]:
+        return self._by_status("missing")
+
+    @property
+    def hosts_stale(self) -> tuple[int, ...]:
+        return self._by_status("stale")
+
+    @property
+    def hosts_degraded(self) -> tuple[int, ...]:
+        return self._by_status("degraded")
+
+    @property
+    def hosts_quarantined(self) -> tuple[int, ...]:
+        return self._by_status("quarantined")
+
+    @property
+    def host_epochs(self) -> dict[int, int]:
+        """Effective merged epoch per merged host — feed back as the next
+        gather's ``watermarks`` to pin the monotonicity invariant."""
+        return {r.host_id: r.epoch for r in self.hosts if r.merged}
+
+    def coverage(self) -> dict:
+        """JSON-able provenance dict (the ``EstimateSet.coverage`` payload)."""
+        n = len(self.hosts)
+        parts = [f"merged {len(self.hosts_merged)}/{n} hosts"]
+        for label, ids in (("missing", self.hosts_missing),
+                           ("stale", self.hosts_stale),
+                           ("degraded", self.hosts_degraded),
+                           ("quarantined", self.hosts_quarantined)):
+            if ids:
+                parts.append(f"{label}: {list(ids)}")
+        return {
+            "complete": self.complete,
+            "hosts_merged": list(self.hosts_merged),
+            "hosts_missing": list(self.hosts_missing),
+            "hosts_stale": list(self.hosts_stale),
+            "hosts_degraded": list(self.hosts_degraded),
+            "hosts_quarantined": list(self.hosts_quarantined),
+            "host_epochs": {str(h): e for h, e in self.host_epochs.items()},
+            "quarantined_epochs": {
+                str(r.host_id): list(r.quarantined_epochs)
+                for r in self.hosts if r.quarantined_epochs},
+            "summary": "; ".join(parts),
+        }
+
+    def estimates(self, t_exec: float, names: Sequence[str], *,
+                  alpha: float = 0.05):
+        """Estimates with the gather's coverage attached (so reports
+        disclose partial fleets instead of presenting degraded statistics
+        as complete)."""
+        return self.agg.estimates(t_exec, names, alpha=alpha,
+                                  coverage=self.coverage())
+
+
+def _list_host_dirs(path: str) -> list[int]:
+    """Every host directory, *including* ones with no/unreadable LATEST
+    (:func:`list_spilled_hosts` deliberately hides those)."""
+    if not os.path.isdir(path):
+        return []
+    return sorted(int(m.group(1)) for name in os.listdir(path)
+                  if (m := _HOST_DIR_RE.match(name)))
+
+
+def _restore_degraded(path: str, host_id: int, policy: QuorumPolicy,
+                      aggregate_fn: AggregateFn | None):
+    """One host's best durable state under bounded retries.
+
+    Returns ``(HostReport, PackedShard | None)``. Retries first — a
+    failed fold may be the benign concurrent-compaction race — and only
+    accepts a degraded (prefix-fold) result once retries are exhausted,
+    so transient races never masquerade as corruption in the provenance.
+    """
+    hd = _host_dir(path, host_id)
+    attempts = max(1, policy.retries)
+    delay = policy.backoff
+    last_err: Exception | None = None
+    best: tuple[PackedShard, int, tuple[int, ...], int] | None = None
+    for attempt in range(1, attempts + 1):
+        if attempt > 1 and delay > 0:
+            time.sleep(delay)
+            delay *= 2
+        epoch = ckpt.latest_step(hd)
+        if epoch is None:
+            if os.path.exists(os.path.join(hd, "LATEST")):
+                last_err = CorruptShardError(f"unreadable LATEST under {hd}")
+                continue
+            return HostReport(host_id, "missing", attempts=attempt,
+                              error="never published"), None
+        try:
+            chain = DeltaChain(hd, epoch)
+            shard, effective, failed = chain.fold_partial()
+        except IOError as e:
+            last_err = e
+            continue
+        if not failed:
+            return (HostReport(host_id, "merged", epoch=effective,
+                               requested_epoch=epoch, attempts=attempt),
+                    shard)
+        best = (shard, effective, failed, epoch)
+        last_err = CorruptShardError(
+            f"epochs {list(failed)} unreadable under {hd}")
+    if best is not None:
+        shard, effective, failed, epoch = best
+        return (HostReport(host_id, "degraded", epoch=effective,
+                           requested_epoch=epoch,
+                           quarantined_epochs=failed,
+                           error=str(last_err), attempts=attempts),
+                shard)
+    # Nothing resolvable through LATEST. Fall back to scanning epoch
+    # dirs newest-first for any fully durable chain (covers a corrupt
+    # LATEST epoch whose *predecessor* base is intact).
+    fallback = _scan_last_durable(hd)
+    if fallback is not None:
+        shard, effective, failed = fallback
+        return (HostReport(host_id, "degraded", epoch=effective,
+                           requested_epoch=ckpt.latest_step(hd),
+                           quarantined_epochs=failed,
+                           error=str(last_err), attempts=attempts),
+                shard)
+    return (HostReport(host_id, "quarantined",
+                       requested_epoch=ckpt.latest_step(hd),
+                       error=str(last_err) if last_err else "unreadable",
+                       attempts=attempts),
+            None)
+
+
+def _scan_last_durable(hd: str):
+    """Newest fully-foldable chain among the published epoch dirs, or
+    None. Returns ``(shard, effective_epoch, quarantined_epochs)`` where
+    the quarantined set is every published epoch above the durable one.
+    """
+    try:
+        names = os.listdir(hd)
+    except FileNotFoundError:
+        return None
+    epochs = sorted((int(m.group(1)) for name in names
+                     if (m := _EPOCH_DIR_RE.match(name))), reverse=True)
+    for i, e in enumerate(epochs):
+        try:
+            shard = DeltaChain(hd, e).fold()
+        except IOError:
+            continue
+        return shard, e, tuple(sorted(epochs[:i]))
+    return None
+
+
+def _quorum_gather(path: str, policy: QuorumPolicy,
+                   aggregate_fn: AggregateFn | None) -> GatherResult:
+    if policy.expected_hosts is not None:
+        roster = sorted(set(int(h) for h in policy.expected_hosts))
+    else:
+        roster = _list_host_dirs(path)
+    reports: list[HostReport] = []
+    shards: list[PackedShard] = []
+    for h in roster:
+        rep, shard = _restore_degraded(path, h, policy, aggregate_fn)
+        if shard is not None:
+            floor = max(policy.min_epoch or 0,
+                        (policy.watermarks or {}).get(h, 0))
+            if floor and rep.epoch is not None and rep.epoch < floor:
+                err = (f"host {h} effective epoch {rep.epoch} is behind "
+                       f"the watermark {floor}")
+                if policy.drop_stale:
+                    rep = dataclasses.replace(rep, status="stale",
+                                              epoch=None, error=err)
+                    shard = None
+                else:
+                    rep = dataclasses.replace(rep, status="stale", error=err)
+        reports.append(rep)
+        if shard is not None:
+            shards.append(shard)
+    merged_n = sum(1 for r in reports if r.merged)
+    if merged_n < policy.min_hosts:
+        detail = "; ".join(f"host {r.host_id}: {r.status}"
+                           f" ({r.error})" if r.error else
+                           f"host {r.host_id}: {r.status}"
+                           for r in reports if not r.merged)
+        raise QuorumError(
+            f"quorum failed under {path}: {merged_n} host(s) merged, "
+            f"policy requires {policy.min_hosts} ({detail or 'no hosts'})")
+    # Host-id order + the order-preserving reduction tree keep merged
+    # combination ids deterministic, exactly as in the strict gather.
+    aggs = [unpack_shard(s, aggregate_fn=aggregate_fn) for s in shards]
+    return GatherResult(agg=tree_reduce(aggs) if aggs else None,
+                        hosts=tuple(reports))
 
 
 # -- incremental (delta) spills ------------------------------------------------
@@ -588,21 +910,23 @@ def compute_shard_delta(prev: PackedShard, cur: PackedShard) -> ShardDelta:
 
     Requires append-only evolution: ``cur``'s first ``prev.n_rows``
     combination key rows must equal ``prev``'s (statistics may change
-    freely). Raises ``ValueError`` otherwise — writers fall back to a
-    fresh full base in that case.
+    freely). Raises :class:`~repro.core.faults.DeltaMismatchError`
+    (a ``ValueError`` subclass) otherwise — writers fall back to a fresh
+    full base in that case.
     """
     if (prev.combos is None) != (cur.combos is None):
-        raise ValueError("shard kind changed between epochs")
+        raise DeltaMismatchError("shard kind changed between epochs")
     if prev.domains != cur.domains:
-        raise ValueError("shard domain axis changed between epochs")
+        raise DeltaMismatchError("shard domain axis changed between epochs")
     n0, n1 = prev.n_rows, cur.n_rows
     if n1 < n0:
-        raise ValueError(f"shard shrank: {n1} < {n0} rows")
+        raise DeltaMismatchError(f"shard shrank: {n1} < {n0} rows")
     if cur.combos is not None and n0:
         if prev.combos.shape[1] != cur.combos.shape[1]:
-            raise ValueError("worker width changed between epochs")
+            raise DeltaMismatchError("worker width changed between epochs")
         if not np.array_equal(prev.combos[:n0], cur.combos[:n0]):
-            raise ValueError("combination key rows are not append-only")
+            raise DeltaMismatchError(
+                "combination key rows are not append-only")
     changed = ((cur.counts[:n0] != prev.counts[:n0])
                | (cur.psum[:n0] != prev.psum[:n0]).any(axis=1)
                | (cur.psumsq[:n0] != prev.psumsq[:n0]).any(axis=1))
@@ -634,22 +958,23 @@ def _grow_2d(arr: np.ndarray, n: int, dtype) -> np.ndarray:
 def apply_shard_delta(shard: PackedShard, delta: ShardDelta) -> PackedShard:
     """Fold one delta onto a folded shard state (chain-validating)."""
     if delta.prev_rows != shard.n_rows:
-        raise IOError(f"delta chain mismatch: delta builds on "
-                      f"{delta.prev_rows} rows, folded state has "
-                      f"{shard.n_rows}")
+        raise CorruptShardError(f"delta chain mismatch: delta builds on "
+                                f"{delta.prev_rows} rows, folded state has "
+                                f"{shard.n_rows}")
     if (shard.combos is None) != (delta.combos_new is None):
-        raise IOError(f"delta chain mismatch: {delta.kind} delta over a "
-                      f"{shard.kind} base")
+        raise CorruptShardError(f"delta chain mismatch: {delta.kind} delta "
+                                f"over a {shard.kind} base")
     if shard.domains != delta.domains:
-        raise IOError(f"delta chain mismatch: domain axis {delta.domains} "
-                      f"delta over a {shard.domains} base")
+        raise CorruptShardError(
+            f"delta chain mismatch: domain axis {delta.domains} "
+            f"delta over a {shard.domains} base")
     n1 = delta.n_rows
     if delta.idx.size and int(delta.idx.max()) >= n1:
         # CRC only covers bytes; a structurally corrupt delta must fail
         # with the same diagnostic class as every other malformation
         # (restore_shard's retry loop catches IOError, not IndexError).
-        raise IOError(f"delta row index {int(delta.idx.max())} out of "
-                      f"bounds for {n1} rows")
+        raise CorruptShardError(f"delta row index {int(delta.idx.max())} "
+                                f"out of bounds for {n1} rows")
     counts = _grow_1d(shard.counts[:shard.n_rows], n1, np.int64)
     psum = _grow_2d(shard.psum[:shard.n_rows], n1, np.float64)
     psumsq = _grow_2d(shard.psumsq[:shard.n_rows], n1, np.float64)
@@ -660,15 +985,16 @@ def apply_shard_delta(shard: PackedShard, delta: ShardDelta) -> PackedShard:
     if shard.combos is not None:
         new = delta.combos_new
         if len(new) != n1 - shard.n_rows:
-            raise IOError(f"delta appends {len(new)} combo rows; header "
-                          f"says {n1 - shard.n_rows}")
+            raise CorruptShardError(
+                f"delta appends {len(new)} combo rows; header "
+                f"says {n1 - shard.n_rows}")
         if shard.n_rows == 0:
             combos = np.array(new, dtype=np.int64)
         elif len(new) == 0:
             combos = shard.combos[:shard.n_rows]
         else:
             if new.shape[1] != shard.combos.shape[1]:
-                raise IOError("worker width changed mid-chain")
+                raise CorruptShardError("worker width changed mid-chain")
             combos = np.vstack([shard.combos[:shard.n_rows], new])
     return PackedShard(counts=counts, psum=psum, psumsq=psumsq,
                        n_rows=n1, combos=combos, domains=shard.domains)
@@ -707,15 +1033,20 @@ def spill_shard_delta(path: str, host_id: int, epoch: int,
 def _load_delta(hd: str, epoch: int) -> ShardDelta:
     d = _epoch_dir(hd, epoch)
     arrays, manifest = ckpt.read_manifest_dir(d)
-    named = dict(zip(manifest["schema"], arrays))
-    domains = _meta_domains(manifest)
-    return ShardDelta(idx=named["idx"].astype(np.int64),
-                      counts=named["counts"].astype(np.int64),
-                      psum=_unwire_stats(named["psum"], domains),
-                      psumsq=_unwire_stats(named["psumsq"], domains),
-                      n_rows=int(manifest["n_rows"]),
-                      prev_rows=int(manifest["prev_rows"]),
-                      combos_new=named.get("combos_new"), domains=domains)
+    try:
+        named = dict(zip(manifest["schema"], arrays))
+        domains = _meta_domains(manifest)
+        return ShardDelta(idx=named["idx"].astype(np.int64),
+                          counts=named["counts"].astype(np.int64),
+                          psum=_unwire_stats(named["psum"], domains),
+                          psumsq=_unwire_stats(named["psumsq"], domains),
+                          n_rows=int(manifest["n_rows"]),
+                          prev_rows=int(manifest["prev_rows"]),
+                          combos_new=named.get("combos_new"),
+                          domains=domains)
+    except (KeyError, TypeError, ValueError) as e:
+        raise CorruptShardError(f"malformed delta manifest in {d}: "
+                                f"{e!r}") from e
 
 
 class DeltaChain:
@@ -737,27 +1068,37 @@ class DeltaChain:
         e, seen = epoch, set()
         while True:
             if e in seen:
-                raise IOError(f"delta chain cycle at epoch {e} under "
-                              f"{host_dir}")
+                raise CorruptShardError(f"delta chain cycle at epoch {e} "
+                                        f"under {host_dir}")
             seen.add(e)
             try:
                 meta = ckpt.read_manifest_meta(_epoch_dir(host_dir, e))
             except FileNotFoundError:
-                raise IOError(
+                raise TornWriteError(
                     f"broken delta chain under {host_dir}: epoch {e} is "
                     f"missing (garbage-collected or never published)")
             links.append((e, meta))
             if meta.get("delta_of") is None:
                 break
-            e = int(meta["delta_of"])
+            try:
+                e = int(meta["delta_of"])
+            except (TypeError, ValueError) as err:
+                raise CorruptShardError(
+                    f"epoch {e} under {host_dir} has an unusable "
+                    f"delta_of pointer: {meta.get('delta_of')!r}") from err
         self._links = links[::-1]          # base first, LATEST last
         self.base_epoch = self._links[0][0]
         kinds = {m.get("kind") for _, m in self._links}
         if len(kinds) != 1:
-            raise IOError(f"mixed shard kinds in one chain: {sorted(kinds)}")
+            raise CorruptShardError(
+                f"mixed shard kinds in one chain: {sorted(kinds)}")
         for e_, m in self._links[1:]:
-            if int(m.get("base_epoch", -1)) != self.base_epoch:
-                raise IOError(
+            try:
+                base_ref = int(m.get("base_epoch", -1))
+            except (TypeError, ValueError):
+                base_ref = -1
+            if base_ref != self.base_epoch:
+                raise CorruptShardError(
                     f"delta epoch {e_} names base "
                     f"{m.get('base_epoch')}; chain resolves to "
                     f"{self.base_epoch}")
@@ -777,6 +1118,31 @@ class DeltaChain:
         for e, _meta in self._links[1:]:
             shard = apply_shard_delta(shard, _load_delta(self.host_dir, e))
         return shard
+
+    def fold_partial(self) -> tuple[PackedShard, int, tuple[int, ...]]:
+        """Best-effort fold: the base plus the longest intact delta prefix.
+
+        Returns ``(shard, effective_epoch, quarantined_epochs)``. Once a
+        link fails to load or apply, every later link is quarantined too
+        (deltas carry replacement values against the *immediately*
+        preceding state — skipping a link and folding on would merge
+        rows computed against state the reader never saw, i.e. silent
+        corruption; rolling the whole tail back to the last durable
+        prefix can only lose recency, never correctness). Raises if the
+        base itself is unreadable — there is then nothing durable to
+        fall back to and the caller must quarantine the whole host.
+        """
+        shard = _load_shard(self.host_dir, self._links[0][0])
+        effective = self._links[0][0]
+        epochs = self.epochs
+        for i, (e, _meta) in enumerate(self._links[1:], start=1):
+            try:
+                shard = apply_shard_delta(shard,
+                                          _load_delta(self.host_dir, e))
+            except IOError:
+                return shard, effective, tuple(epochs[i:])
+            effective = e
+        return shard, effective, ()
 
 
 def _copy_shard(s: PackedShard) -> PackedShard:
@@ -827,7 +1193,8 @@ class ShardSpiller:
 
     def __init__(self, path: str, host_id: int = 0, *, mode: str = "delta",
                  compact_every: int = 16,
-                 aggregate_fn: AggregateFn | None = None):
+                 aggregate_fn: AggregateFn | None = None,
+                 faults: "faults_mod.FaultPlan | None" = None):
         if mode not in ("full", "delta"):
             raise ValueError(f"unknown spill mode {mode!r}")
         if compact_every < 1:
@@ -835,6 +1202,10 @@ class ShardSpiller:
                              f"got {compact_every}")
         self.path = path
         self.host_id = host_id
+        # Captured once (explicit arg or the ambient installed plan):
+        # spills may run from worker threads, where contextvars set in
+        # the test thread are invisible.
+        self._faults = faults_mod.resolve_plan(faults)
         self.mode = mode
         self.compact_every = compact_every
         self._hd = _host_dir(path, host_id)
@@ -895,6 +1266,22 @@ class ShardSpiller:
         if self._published and epoch <= self.epoch:
             raise ValueError(f"epoch {epoch} already published "
                              f"(LATEST is {self.epoch})")
+        plan = self._faults
+        if plan is not None:
+            # Named fault seam (chaos harness). All three fire *before*
+            # any state mutation, so the spiller — like a real crashed
+            # or stalled host — leaves durable state and its own
+            # bookkeeping exactly as the previous epoch left them.
+            if plan.crash_at(self.host_id, epoch):
+                raise InjectedCrash(f"host {self.host_id} crashed "
+                                    f"publishing epoch {epoch}")
+            if plan.spill_fails(self.host_id, epoch):
+                raise SpillError(f"injected transient spill failure "
+                                 f"(host {self.host_id}, epoch {epoch})")
+            if plan.straggles(self.host_id, epoch):
+                # Silent stall: the host keeps running but its durable
+                # state stops advancing (the stale-shard failure mode).
+                return _epoch_dir(self._hd, self.epoch)
         cur = pack_shard(agg)
         trackable = hasattr(agg, "rows_touched_since")
         tracked = (trackable and self._agg_ref is not None
@@ -1008,13 +1395,17 @@ class CheckpointExchange:
 
     def __init__(self, path: str, host_id: int = 0, *,
                  aggregate_fn: AggregateFn | None = None,
-                 mode: str = "delta", compact_every: int = 16):
+                 mode: str = "delta", compact_every: int = 16,
+                 quorum: QuorumPolicy | None = None,
+                 faults: "faults_mod.FaultPlan | None" = None):
         self.path = path
         self.host_id = host_id
         self.aggregate_fn = aggregate_fn
+        self.quorum = quorum
         self._spiller = ShardSpiller(path, host_id, mode=mode,
                                      compact_every=compact_every,
-                                     aggregate_fn=aggregate_fn)
+                                     aggregate_fn=aggregate_fn,
+                                     faults=faults)
         self.resumed = self._spiller.resumed
         self.epoch = self._spiller.epoch
 
@@ -1023,5 +1414,17 @@ class CheckpointExchange:
         return self._spiller.spill(agg, self.epoch)
 
     def reduce(self, agg):
+        """Publish the final state and merge the fleet's LATEST shards.
+
+        With a ``quorum`` policy the merge degrades instead of failing;
+        the merged aggregator is returned (keeping the strategy
+        interface) and the full :class:`GatherResult` provenance is kept
+        on ``self.last_gather`` for callers that disclose coverage.
+        """
         self.spill(agg)
+        if self.quorum is not None:
+            self.last_gather = gather_shards(self.path,
+                                             aggregate_fn=self.aggregate_fn,
+                                             quorum=self.quorum)
+            return self.last_gather.agg
         return gather_shards(self.path, aggregate_fn=self.aggregate_fn)

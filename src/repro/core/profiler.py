@@ -43,13 +43,28 @@ _SENSORS = {
 
 
 class HostSession:
-    """A live host-mode profiling pass."""
+    """A live host-mode profiling pass.
 
-    def __init__(self, profiler: "EnergyProfiler", jit_marking: bool):
+    ``sensor`` defaults to the best scalar sensor the environment
+    permits; passing a :class:`~repro.core.sensors.HostSensorBank` makes
+    the session multi-rail — the sampler drains [n, D] power matrices
+    and :meth:`estimates` carries per-domain columns, exactly like the
+    timeline paths.
+    """
+
+    def __init__(self, profiler: "EnergyProfiler", jit_marking: bool,
+                 sensor=None):
         self._prof = profiler
         self.marker = RegionMarker()
+        sensor = available_host_sensor() if sensor is None else sensor
+        min_period = (sensor.effective_min_period()
+                      if hasattr(sensor, "effective_min_period")
+                      else getattr(sensor, "min_period", 0.0))
+        if profiler.period < min_period:
+            raise ValueError(f"sampling period {profiler.period} below the "
+                             f"sensor bank's floor {min_period}")
         self.sampler = HostSampler(
-            self.marker, available_host_sensor(),
+            self.marker, sensor,
             period=profiler.period, jitter=profiler.jitter,
             seed=profiler.seed)
         self._ctx = None
@@ -72,8 +87,18 @@ class HostSession:
 
     def estimates(self, alpha: float = 0.05) -> EstimateSet:
         s = self.stream()
+        names = regions_mod.registry.names
+        if s.powers.ndim == 2:
+            # Banked sensor: aggregate the [n, D] matrix so the estimate
+            # set carries per-rail columns (domain_table/domain_csv).
+            hi = int(s.region_ids.max()) + 1 if len(s.region_ids) else 0
+            agg = StreamingAggregator(max(len(names), hi, 1),
+                                      domains=self.sampler.domains)
+            if len(s.region_ids):
+                agg.update(s.region_ids, s.powers)
+            return agg.estimates(s.t_exec, names, alpha=alpha)
         return estimate_regions(s.region_ids, s.powers, s.t_exec,
-                                regions_mod.registry.names, alpha=alpha)
+                                names, alpha=alpha)
 
 
 class EnergyProfiler:
@@ -253,8 +278,12 @@ class EnergyProfiler:
         return agg.estimates(t_end, timelines[0].names, alpha=self.alpha)
 
     # -- host (this machine) mode --------------------------------------------
-    def host_session(self, *, jit_marking: bool = False) -> HostSession:
-        return HostSession(self, jit_marking)
+    def host_session(self, *, jit_marking: bool = False,
+                     sensor=None) -> HostSession:
+        """A live session on this machine. ``sensor`` accepts any scalar
+        host sensor or a :class:`~repro.core.sensors.HostSensorBank`
+        (per-rail host profiling, with the bank's failover semantics)."""
+        return HostSession(self, jit_marking, sensor=sensor)
 
     # -- convenience -----------------------------------------------------------
     def report(self, est: EstimateSet) -> AttributionReport:

@@ -157,6 +157,16 @@ def iter_sample_chunks(tl: Timeline, sensor, *, period: float,
         rids = tl.region_at(times)
         if rails:
             pows = np.asarray(sensor.read_rails(times), dtype=np.float64)
+            bad = np.isnan(pows).any(axis=1)
+            if bad.any():
+                # A masked sensor channel (failover with no substitute,
+                # cf. sensors.FailoverTraceBank) voids the whole sample:
+                # dropping the row shrinks n — the CI widens honestly —
+                # whereas imputing any value would bias that rail.
+                keep = ~bad
+                rids, pows = rids[keep], pows[keep]
+                if not len(rids):
+                    continue
         elif hasattr(sensor, "read_many"):
             pows = np.asarray(sensor.read_many(times), dtype=np.float64)
         else:
@@ -301,10 +311,23 @@ class SampleBuffer:
 
 
 class HostSampler:
-    """Control thread sampling (marker, sensor) at a jittered period."""
+    """Control thread sampling (marker, sensor) at a jittered period.
+
+    Failure semantics: the control thread runs as a daemon, so an
+    exception inside it (a sensor read blowing up mid-session) would
+    otherwise kill the thread silently and every later ``drain()`` would
+    return empty forever — zero-sample estimates indistinguishable from
+    a genuinely idle program. The loop therefore captures the exception
+    and re-raises it on the *caller's* thread at the next ``drain()`` /
+    ``stream()`` / session exit. Non-finite readings (a masked channel
+    of a failing :class:`~repro.core.sensors.HostSensorBank`) are not
+    errors: the sample is skipped and counted in ``dropped_samples``.
+    """
 
     def __init__(self, marker: RegionMarker, sensor, *, period: float,
-                 jitter: float = 200e-6, seed: int = 0):
+                 jitter: float = 200e-6, seed: int = 0,
+                 faults: "object | None" = None):
+        from repro.core import faults as faults_mod
         self.marker = marker
         self.sensor = sensor
         # A banked sensor (``.domains``) reads one vector per sample; the
@@ -318,12 +341,25 @@ class HostSampler:
         self._buf = SampleBuffer(channels=len(self.domains))
         self._t0 = 0.0
         self._t1 = 0.0
+        # Captured at construction: contextvars set by the caller are
+        # invisible inside the control thread.
+        self._faults = faults_mod.resolve_plan(faults)
+        self._failure: BaseException | None = None
+        self.dropped_samples = 0
 
     def _loop(self) -> None:
+        try:
+            self._loop_body()
+        except BaseException as e:          # noqa: BLE001 — re-raised at drain
+            self._failure = e
+
+    def _loop_body(self) -> None:
         read = self.sensor.read
         append = self._buf.append
         marker = self.marker
         uniform = self._rng.uniform
+        plan = self._faults
+        taken = 0
         # Schedule against absolute deadlines: sleeping a fixed period
         # *after* read()/append() return would stretch the effective
         # period by the read cost every sample (systematic drift above
@@ -332,13 +368,27 @@ class HostSampler:
         scalar = not hasattr(self.sensor, "domains")
         next_t = time.monotonic()
         while not self._stop.is_set():
-            append(marker.value, float(read()) if scalar else read())
+            if plan is not None and plan.sampler_should_fail(taken):
+                raise RuntimeError(
+                    f"injected sampler-thread fault after {taken} samples")
+            v = float(read()) if scalar else read()
+            taken += 1
+            finite = np.isfinite(v) if scalar else bool(np.isfinite(v).all())
+            if finite:
+                append(marker.value, v)
+            else:
+                self.dropped_samples += 1
             next_t += self.period + float(uniform(0, self.jitter))
             delay = next_t - time.monotonic()
             if delay > 0:
                 time.sleep(delay)
             else:
                 next_t = time.monotonic()
+
+    def _raise_failure(self) -> None:
+        if self._failure is not None:
+            failure, self._failure = self._failure, None
+            raise failure
 
     def __enter__(self) -> "HostSampler":
         # CPython's default 5 ms GIL switch interval would let a CPU-bound
@@ -359,6 +409,10 @@ class HostSampler:
         assert self._thread is not None
         self._thread.join(timeout=5.0)
         sys.setswitchinterval(self._old_switch)
+        # Surface a control-thread death even from sessions that never
+        # drain — but never mask an exception already unwinding the body.
+        if not any(exc):
+            self._raise_failure()
 
     def drain(self) -> tuple[np.ndarray, np.ndarray]:
         """New (region_ids, powers) since the last drain (streaming use).
@@ -366,7 +420,11 @@ class HostSampler:
         Empties the buffer — a session either drains periodically into a
         streaming aggregator or collects everything for :meth:`stream`;
         after any drain, ``stream()`` only covers the undrained tail.
+
+        Raises the control thread's captured exception, if it died since
+        the last call (each failure is raised exactly once).
         """
+        self._raise_failure()
         return self._buf.drain()
 
     @property
@@ -376,6 +434,7 @@ class HostSampler:
         return end - self._t0
 
     def stream(self) -> SampleStream:
+        self._raise_failure()
         if not len(self._buf):
             raise RuntimeError("no samples collected")
         rids, pows = self._buf.view()

@@ -30,15 +30,17 @@ import dataclasses
 import functools
 import os
 import time
-from typing import Sequence
+from typing import Mapping, Sequence
 
 import numpy as np
 
+from repro.core import faults as faults_mod
 from repro.core.timeline import Timeline
 
 __all__ = [
     "SensorSpec", "DEFAULT_IDLE_POWER", "idle_channel",
     "InstantTraceSensor", "RaplTraceSensor", "Ina231TraceSensor",
+    "FailoverTraceBank",
     "RaplSensor", "ProcessActivitySensor", "available_host_sensor",
     "HostSensorBank",
 ]
@@ -265,6 +267,95 @@ class Ina231TraceSensor(_TraceSensorBase):
         return de / np.maximum(t - lo, 1e-12)[:, None]
 
 
+class FailoverTraceBank:
+    """Per-channel failover over a multi-rail trace sensor.
+
+    Production rails fail independently (a DRAM counter stalls while PKG
+    keeps reporting), so the bank pairs the primary instrument with an
+    optional *fallback* sensor per domain. A dropped-out channel —
+    injected by the active :class:`~repro.core.faults.FaultPlan`, or any
+    NaN the primary itself reports — is repaired two ways:
+
+    * a fallback exists for the domain → its (typically slower/noisier)
+      readings substitute for exactly the dropped entries, and the CIs
+      widen through that sensor's own variance;
+    * no fallback → the entries stay NaN and the *sampler* voids those
+      whole samples (see ``iter_sample_chunks``): fewer samples → larger
+      standard error — the CI widens honestly, with no bias toward any
+      rail, and nothing about the wire schema changes.
+
+    Period arbitration reuses :meth:`SensorSpec.effective_min_period`:
+    the bank's spec carries per-channel floors raised to each fallback's
+    ``min_period``, so a session cannot sample faster than the slowest
+    instrument that might have to serve a channel.
+    """
+
+    def __init__(self, primary,
+                 fallbacks: Mapping[str, object] | None = None, *,
+                 faults: "faults_mod.FaultPlan | None" = None):
+        self.primary = primary
+        self.domains = tuple(primary.domains)
+        self.fallbacks = dict(fallbacks or {})
+        unknown = set(self.fallbacks) - set(self.domains)
+        if unknown:
+            raise ValueError(f"fallback domains {sorted(unknown)} not in "
+                             f"bank domains {self.domains}")
+        # Captured once — samplers read from worker threads where the
+        # installing context is invisible.
+        self._faults = faults_mod.resolve_plan(faults)
+        self.failover_reads = {d: 0 for d in self.domains}
+        self.masked_samples = 0
+        self.min_period = self.spec().effective_min_period()
+
+    def spec(self) -> SensorSpec:
+        base = self.primary.spec()
+        floors = list(base.min_periods or (base.min_period,) * len(
+            self.domains))
+        for j, d in enumerate(self.domains):
+            fb = self.fallbacks.get(d)
+            if fb is not None:
+                floors[j] = max(floors[j], getattr(fb, "min_period", 0.0))
+        return dataclasses.replace(base, min_periods=tuple(floors))
+
+    def effective_min_period(self) -> float:
+        return self.spec().effective_min_period()
+
+    def _fallback_column(self, fb, times: np.ndarray, j: int) -> np.ndarray:
+        if hasattr(fb, "read_rails"):
+            return np.asarray(fb.read_rails(times),
+                              dtype=np.float64)[:, j]
+        if hasattr(fb, "read_many"):
+            return np.asarray(fb.read_many(times), dtype=np.float64)
+        return np.asarray(fb.read(times), dtype=np.float64)
+
+    def read_rails(self, times) -> np.ndarray:
+        times = np.asarray(times, dtype=np.float64)
+        pows = np.array(self.primary.read_rails(times), dtype=np.float64)
+        if self._faults is not None:
+            mask = self._faults.dropout_mask(self.domains, times)
+            if mask is not None:
+                pows[mask] = np.nan
+        bad = np.isnan(pows)
+        if not bad.any():
+            return pows
+        for j, d in enumerate(self.domains):
+            col = bad[:, j]
+            if not col.any():
+                continue
+            fb = self.fallbacks.get(d)
+            if fb is None:
+                continue                       # masked; sampler voids rows
+            pows[col, j] = self._fallback_column(fb, times[col], j)
+            self.failover_reads[d] += int(col.sum())
+        self.masked_samples += int(np.isnan(pows).any(axis=1).sum())
+        return pows
+
+    def read_many(self, times) -> np.ndarray:
+        if len(self.domains) != 1:
+            raise ValueError("multi-rail bank: use read_rails")
+        return self.read_rails(times)[:, 0]
+
+
 # ---------------------------------------------------------------------------
 # Host (real machine) sensors.
 # ---------------------------------------------------------------------------
@@ -330,21 +421,72 @@ class HostSensorBank:
     :class:`SensorSpec` bank (e.g. RAPL PKG + DRAM powercap zones read
     back-to-back). ``min_period`` is the slowest member's floor: the bank
     samples no faster than its most constrained channel.
+
+    ``fallbacks`` maps domain names to substitute sensors: the first
+    time a channel's sensor raises (or returns a non-finite reading),
+    the bank fails over to the substitute *permanently* (a dead powercap
+    zone does not resurrect mid-session; sticky failover also keeps the
+    channel's readings from interleaving two instruments' calibrations)
+    and counts the event in ``failover_events``. A channel with no
+    fallback reads NaN from then on — the sampler drops those samples
+    (counted) so the CIs widen instead of silently averaging zeros.
     """
 
-    def __init__(self, channels: Sequence[tuple[str, object]]):
+    def __init__(self, channels: Sequence[tuple[str, object]],
+                 fallbacks: Mapping[str, object] | None = None):
         if not channels:
             raise ValueError("sensor bank needs at least one channel")
         self.domains = tuple(name for name, _ in channels)
         if len(set(self.domains)) != len(self.domains):
             raise ValueError(f"duplicate domain names: {self.domains}")
-        self._sensors = tuple(s for _, s in channels)
+        self._sensors = [s for _, s in channels]
+        self._fallbacks = dict(fallbacks or {})
+        unknown = set(self._fallbacks) - set(self.domains)
+        if unknown:
+            raise ValueError(f"fallback domains {sorted(unknown)} not in "
+                             f"bank domains {self.domains}")
+        self._dead = [False] * len(self._sensors)
+        self.failover_events: dict[str, int] = {}
         self.min_period = max(getattr(s, "min_period", 0.0)
                               for s in self._sensors)
 
+    def effective_min_period(self) -> float:
+        """Slowest floor across members *and* their potential fallbacks
+        (same arbitration as :meth:`SensorSpec.effective_min_period`)."""
+        return max(self.min_period,
+                   *(getattr(s, "min_period", 0.0)
+                     for s in self._fallbacks.values()), 0.0)
+
+    def _fail_over(self, j: int) -> None:
+        d = self.domains[j]
+        self.failover_events[d] = self.failover_events.get(d, 0) + 1
+        fb = self._fallbacks.pop(d, None)
+        if fb is not None:
+            self._sensors[j] = fb
+        else:
+            self._dead[j] = True
+
     def read(self, t: float | None = None) -> np.ndarray:
-        return np.array([float(s.read(t)) for s in self._sensors],
-                        dtype=np.float64)
+        out = np.empty(len(self._sensors), dtype=np.float64)
+        for j, s in enumerate(self._sensors):
+            if self._dead[j]:
+                out[j] = np.nan
+                continue
+            try:
+                v = float(s.read(t))
+            except Exception:
+                self._fail_over(j)
+                s = self._sensors[j]
+                if self._dead[j]:
+                    out[j] = np.nan
+                    continue
+                v = float(s.read(t))
+            if not np.isfinite(v):
+                self._fail_over(j)
+                v = (float(self._sensors[j].read(t))
+                     if not self._dead[j] else np.nan)
+            out[j] = v
+        return out
 
 
 def available_host_sensor():

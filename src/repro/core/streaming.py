@@ -333,15 +333,20 @@ class StreamingAggregator:
         return np.flatnonzero(self._touch_gen > gen)
 
     def estimates(self, t_exec: float, names: Sequence[str], *,
-                  alpha: float = 0.05, drop_empty: bool = True) -> EstimateSet:
-        """Finalize into an EstimateSet (vectorized Eq. 4-16)."""
+                  alpha: float = 0.05, drop_empty: bool = True,
+                  coverage=None) -> EstimateSet:
+        """Finalize into an EstimateSet (vectorized Eq. 4-16).
+
+        ``coverage`` attaches degraded-gather provenance (see
+        ``exchange.GatherResult``) so reports disclose partial fleets.
+        """
         d = self.num_domains
         return estimates_from_statistics(
             self.counts, self.psum, self.psumsq, t_exec, names, alpha=alpha,
             drop_empty=drop_empty,
             rail_psum=self.rail_psum if d > 1 else None,
             rail_psumsq=self.rail_psumsq if d > 1 else None,
-            domains=self.domains if d > 1 else None)
+            domains=self.domains if d > 1 else None, coverage=coverage)
 
 
 class CombinationInterner:
@@ -534,12 +539,13 @@ class StreamingCombinationAggregator:
                                 other.agg.chan_psumsq)
 
     def estimates(self, t_exec: float, names: Sequence[str], *,
-                  alpha: float = 0.05
+                  alpha: float = 0.05, coverage=None
                   ) -> tuple[EstimateSet, list[tuple[int, ...]]]:
         """Finalize into (combination EstimateSet, combination tuples)."""
         comb_names = combination_names_from_matrix(
             self.interner.combo_matrix(), names)
-        est = self.agg.estimates(t_exec, comb_names, alpha=alpha)
+        est = self.agg.estimates(t_exec, comb_names, alpha=alpha,
+                                 coverage=coverage)
         return est, self.interner.combos
 
 

@@ -55,12 +55,24 @@ class PhaseEnergyAccountant:
     monitoring stays within ALEA's overhead budget. Cross-host
     region ids assume the hosts register serving phases in the same
     order (they do: phase names are code paths, not data).
+
+    Spill failures (full disk, flaky NFS, injected faults) never kill
+    the serving loop and never pass silently: a failed publish is
+    retried at each subsequent :meth:`drain` up to ``spill_retries``
+    consecutive attempts, then counted in :attr:`spill_drops` and
+    abandoned until the next scheduled spill point. The aggregator is
+    cumulative, so a later successful spill republishes everything a
+    dropped one would have — a drop is a durability gap (a crash inside
+    it loses those epochs' samples), not data loss in a surviving
+    process. The final spill at ``__exit__`` raises instead of
+    dropping.
     """
 
     def __init__(self, *, period: float = 2e-3, jitter: float = 1e-4,
                  seed: int = 0, sensor=None, spill_dir: str | None = None,
                  host_id: int = 0, spill_every: int = 50,
-                 spill_mode: str = "delta", compact_every: int = 16):
+                 spill_mode: str = "delta", compact_every: int = 16,
+                 spill_retries: int = 3, faults=None):
         self.marker = RegionMarker()
         self.sampler = HostSampler(self.marker,
                                    sensor or available_host_sensor(),
@@ -80,6 +92,12 @@ class PhaseEnergyAccountant:
         self._elapsed_offset = 0.0
         self._spiller = None
         self._ctx: contextlib.ExitStack | None = None
+        self.spill_retries = spill_retries
+        self.spill_failures = 0          # individual failed attempts
+        self.spill_drops = 0             # retry budgets exhausted
+        self.last_spill_error: OSError | None = None
+        self._spill_pending = False      # retry at next drain
+        self._spill_attempts = 0
         if spill_dir is not None:
             # Restart-and-rejoin: a killed host resumes from its own
             # LATEST shard instead of republishing a fresh low-epoch one
@@ -87,7 +105,8 @@ class PhaseEnergyAccountant:
             from repro.core.exchange import ShardSpiller
             self._spiller = ShardSpiller(spill_dir, host_id,
                                          mode=spill_mode,
-                                         compact_every=compact_every)
+                                         compact_every=compact_every,
+                                         faults=faults)
             if self._spiller.resumed is not None:
                 self.agg.merge(self._spiller.resumed)
                 self._epoch = self._spiller.epoch
@@ -114,7 +133,10 @@ class PhaseEnergyAccountant:
         self._ctx = None
         self.drain()
         if self._spiller is not None:
-            self.spill()        # no-op if drain() already published
+            # Final durable publish: a failure here would silently lose
+            # the whole tail of the run, so it raises instead of being
+            # queued behind drains that will never come.
+            self.spill(raise_on_failure=True)
 
     def drain(self) -> int:
         """Fold samples collected since the last drain; returns the count.
@@ -129,8 +151,10 @@ class PhaseEnergyAccountant:
                 self.agg.grow(len(names))
             self.agg.update(rids, pows)
         self._epoch += 1
-        if (self.spill_dir is not None and self.spill_every > 0
-                and self._epoch % self.spill_every == 0):
+        if self.spill_dir is not None and (
+                self._spill_pending
+                or (self.spill_every > 0
+                    and self._epoch % self.spill_every == 0)):
             self.spill()
         return len(rids)
 
@@ -139,18 +163,43 @@ class PhaseEnergyAccountant:
         """Accounted wall time: this session plus any resumed sessions."""
         return self._elapsed_offset + self.sampler.elapsed
 
-    def spill(self) -> str:
+    def spill(self, *, raise_on_failure: bool = False) -> str | None:
         """Durably publish this host's current shard (atomic, CRC'd).
 
         Idempotent within a drain epoch: a second call before the next
         :meth:`drain` (e.g. a shutdown hook racing the periodic spill)
         returns the already-published directory instead of pushing the
         same epoch through the manifest protocol twice.
+
+        On I/O failure returns ``None`` (unless ``raise_on_failure``)
+        and schedules a retry at the next drain; after ``spill_retries``
+        consecutive failures the epoch is counted in
+        :attr:`spill_drops` and abandoned — never retried forever,
+        never dropped silently. Injected crashes
+        (:class:`repro.core.faults.InjectedCrash`) are not I/O failures
+        and propagate.
         """
         if self._last_spill_epoch == self._epoch:
+            self._spill_pending = False
             return self._last_spill_path
-        out = self._spiller.spill(self.agg, self._epoch,
-                                  extra_meta={"elapsed": self.elapsed})
+        try:
+            out = self._spiller.spill(self.agg, self._epoch,
+                                      extra_meta={"elapsed": self.elapsed})
+        except OSError as e:     # includes the SpillError hierarchy
+            self.spill_failures += 1
+            self.last_spill_error = e
+            self._spill_attempts += 1
+            if self._spill_attempts >= self.spill_retries:
+                self.spill_drops += 1
+                self._spill_attempts = 0
+                self._spill_pending = False
+            else:
+                self._spill_pending = True
+            if raise_on_failure:
+                raise
+            return None
+        self._spill_attempts = 0
+        self._spill_pending = False
         self._last_spill_epoch = self._epoch
         self._last_spill_path = out
         return out

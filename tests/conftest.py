@@ -1,0 +1,50 @@
+"""Shared test harness: an opt-in per-test wall-clock watchdog.
+
+``--per-test-timeout=N`` arms a SIGALRM timer around every test so one
+hung test (a deadlocked sampler thread, an exchange retry loop that
+never converges) fails loudly with its nodeid instead of eating the
+whole job's timeout budget. Implemented here rather than via
+pytest-timeout so the gate works in any environment the suite runs in;
+``@pytest.mark.timeout(seconds)`` overrides the limit per test. Default
+is 0 (disabled) — local runs behave exactly as before; the tier-1 and
+chaos CI lines pass an explicit budget.
+"""
+
+from __future__ import annotations
+
+import signal
+
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--per-test-timeout", type=float, default=0.0,
+        help="fail any single test exceeding this many wall-clock "
+             "seconds (0 disables; POSIX only)")
+
+
+def _limit_for(item) -> float:
+    mark = item.get_closest_marker("timeout")
+    if mark is not None and mark.args:
+        return float(mark.args[0])
+    return float(item.config.getoption("--per-test-timeout"))
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_protocol(item, nextitem):
+    limit = _limit_for(item)
+    if limit <= 0 or not hasattr(signal, "SIGALRM"):
+        return (yield)
+
+    def _alarm(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded per-test timeout of {limit:g}s")
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.setitimer(signal.ITIMER_REAL, limit)
+    try:
+        return (yield)
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, old)

@@ -1,0 +1,503 @@
+"""Chaos suite: deterministic fault injection across the fleet seams.
+
+Every fault comes from a seeded :class:`repro.core.faults.FaultPlan`
+(counter-keyed, no wall-clock randomness), so each scenario replays
+bit-exactly. The invariants under test are the ROADMAP "Failure model"
+contract: faults may lose recency or samples, but never merge corrupt
+rows, never double-count, and never pass silently.
+"""
+
+import contextlib
+import hashlib
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import exchange as ex
+from repro.core import faults
+from repro.core import regions as regions_mod
+from repro.core.faults import (ChannelDropout, CorruptShardError, FaultPlan,
+                               InjectedCrash, LeafFault, QuorumError,
+                               SpillError, TornWriteError)
+from repro.core.profiler import EnergyProfiler
+from repro.core.sampler import HostSampler, RegionMarker, iter_sample_chunks
+from repro.core.sensors import (FailoverTraceBank, HostSensorBank,
+                                InstantTraceSensor, RaplTraceSensor)
+from repro.core.streaming import StreamingAggregator
+from repro.core.timeline import RegionCost, synthesize
+
+pytestmark = pytest.mark.chaos
+
+R = 12
+
+COSTS = [
+    RegionCost("matmul", flops=2.4e12, hbm_bytes=1.6e9, invocations=3),
+    RegionCost("attn", flops=0.8e12, hbm_bytes=2.4e9, ici_bytes=1e8,
+               invocations=2),
+    RegionCost("embed", flops=1e10, hbm_bytes=3.2e9, invocations=1),
+]
+
+
+def _updates(host, epoch):
+    rng = np.random.default_rng(5000 * host + epoch)
+    return rng.integers(0, R, size=137), rng.uniform(40.0, 260.0, size=137)
+
+
+def _ref_agg(host, upto):
+    """Fault-free reference: the host's aggregator after epochs 1..upto."""
+    agg = StreamingAggregator(R)
+    for e in range(1, upto + 1):
+        agg.update(*_updates(host, e))
+    return agg
+
+
+def _drive_fleet(root, hosts, epochs, plan=None):
+    """Each host accumulates + spills per epoch under ``plan``.
+
+    A host that draws an :class:`InjectedCrash` stops (it died); a
+    transient :class:`SpillError` is ignored (the host keeps running
+    without that epoch becoming durable). Returns {host: live agg}.
+    """
+    aggs = {}
+    cm = faults.install(plan) if plan is not None else contextlib.nullcontext()
+    with cm:
+        for h in hosts:
+            agg = StreamingAggregator(R)
+            sp = ex.ShardSpiller(str(root), h, mode="delta",
+                                 compact_every=16)
+            aggs[h] = agg
+            for e in range(1, epochs + 1):
+                agg.update(*_updates(h, e))
+                try:
+                    sp.spill(agg, e)
+                except InjectedCrash:
+                    break
+                except SpillError:
+                    pass
+    return aggs
+
+
+def _tree_digest(root):
+    """Stable digest of every file (relative path + bytes) under root."""
+    h = hashlib.sha256()
+    for dirpath, dirnames, filenames in sorted(os.walk(root)):
+        dirnames.sort()
+        for name in sorted(filenames):
+            fp = os.path.join(dirpath, name)
+            h.update(os.path.relpath(fp, root).encode())
+            with open(fp, "rb") as f:
+                h.update(f.read())
+    return h.hexdigest()
+
+
+def _assert_stats_equal(a, b):
+    assert np.array_equal(a.counts, b.counts)
+    assert np.array_equal(a.chan_psum, b.chan_psum)
+    assert np.array_equal(a.chan_psumsq, b.chan_psumsq)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: pure, seeded, replayable; the empty plan is a no-op.
+# ---------------------------------------------------------------------------
+
+def test_corrupt_bytes_deterministic_and_tmp_nonce_invariant():
+    plan = FaultPlan(seed=3, leaf_faults=(
+        LeafFault(match="epoch_000000002/arr_00000"),))
+    data = bytes(range(256)) * 4
+    path = "/x/host_0000/epoch_000000002/arr_00000.npy"
+    a = plan.corrupt_bytes(path, data, "write")
+    assert a == plan.corrupt_bytes(path, data, "write")   # replayable
+    assert a != data and len(a) == len(data)              # one flipped bit
+    # The write protocol's random tmp-dir nonce must not change which
+    # byte is hit (else replays diverge between runs).
+    tmp = "/x/host_0000/epoch_000000002.tmp-deadbeef/arr_00000.npy"
+    assert plan.corrupt_bytes(tmp, data, "write") == a
+    # Stage and match are exact filters.
+    assert plan.corrupt_bytes(path, data, "read") is data
+    assert plan.corrupt_bytes(
+        "/x/host_0000/epoch_000000003/arr_00000.npy", data, "write") is data
+    # Truncation is always strictly shorter.
+    tplan = FaultPlan(seed=3, leaf_faults=(
+        LeafFault(match="arr_00000", kind="truncate"),))
+    assert len(tplan.corrupt_bytes(path, data, "write")) < len(data)
+
+
+def test_empty_plan_is_byte_for_byte_noop():
+    p = FaultPlan()
+    data = b"anything"
+    assert p.corrupt_bytes("/any/path", data, "write") is data
+    assert p.corrupt_bytes("/any/path", data, "read") is data
+    assert p.dropout_mask(("package", "hbm"), np.array([0.5])) is None
+    assert not p.sampler_should_fail(10 ** 9)
+    assert not p.crash_at(0, 1)
+    assert not p.straggles(0, 1)
+    assert not p.spill_fails(0, 1)
+
+
+def test_leaf_fault_validation():
+    with pytest.raises(ValueError, match="kind"):
+        LeafFault(match="x", kind="scramble")
+    with pytest.raises(ValueError, match="stage"):
+        LeafFault(match="x", stage="mid-air")
+
+
+# ---------------------------------------------------------------------------
+# Typed failure hierarchy at the spill read path.
+# ---------------------------------------------------------------------------
+
+def test_disk_corruption_raises_typed_errors(tmp_path):
+    agg = StreamingAggregator(R)
+    agg.update(*_updates(0, 1))
+    ex.spill_shard(str(tmp_path), 0, 1, agg)
+    agg.update(*_updates(0, 2))
+    ex.spill_shard(str(tmp_path), 0, 2, agg)
+    leaf = os.path.join(str(tmp_path), "host_0000", "epoch_000000002",
+                        "arr_00000.npy")
+    orig = open(leaf, "rb").read()
+
+    # Bit flip: bytes present but wrong → CorruptShardError.
+    bad = bytearray(orig)
+    bad[len(bad) // 2] ^= 0x40
+    with open(leaf, "wb") as f:
+        f.write(bytes(bad))
+    with pytest.raises(CorruptShardError):
+        ex.restore_shard(str(tmp_path), 0)
+
+    # Truncation below the payload size → TornWriteError.
+    with open(leaf, "wb") as f:
+        f.write(orig[:4])
+    with pytest.raises(TornWriteError):
+        ex.restore_shard(str(tmp_path), 0)
+
+    # Both are SpillError and IOError — legacy retry loops keep working.
+    for err in (CorruptShardError, TornWriteError):
+        assert issubclass(err, SpillError)
+        assert issubclass(err, IOError)
+    assert issubclass(ex.DeltaMismatchError, ValueError)  # spiller fallback
+    assert issubclass(QuorumError, SpillError)
+    assert not issubclass(InjectedCrash, SpillError)      # never caught
+
+
+def test_strict_gather_refuses_unreadable_latest(tmp_path):
+    """An unparseable LATEST must not silently shrink the fleet."""
+    for h in (0, 1):
+        agg = StreamingAggregator(R)
+        agg.update(*_updates(h, 1))
+        ex.spill_shard(str(tmp_path), h, 1, agg)
+    with open(os.path.join(str(tmp_path), "host_0001", "LATEST"), "w") as f:
+        f.write("not-an-epoch")
+    with pytest.raises(CorruptShardError, match="LATEST"):
+        ex.gather_shards(str(tmp_path))
+    # The quorum path recovers the host from its durable epoch dirs.
+    res = ex.gather_shards(str(tmp_path), quorum=ex.QuorumPolicy(
+        backoff=0.0))
+    by = {r.host_id: r for r in res.hosts}
+    assert by[1].status == "degraded" and by[1].epoch == 1
+    _assert_stats_equal(res.agg, ex.tree_reduce(
+        [_ref_agg(0, 1), _ref_agg(1, 1)]))
+
+
+# ---------------------------------------------------------------------------
+# The acceptance scenario: 4-host gather under 1 crash, 1 corrupt epoch,
+# 1 straggler, 1 sensor-channel dropout.
+# ---------------------------------------------------------------------------
+
+def test_quorum_gather_acceptance_scenario(tmp_path):
+    plan = FaultPlan(
+        seed=7,
+        crashes=((1, 4),),                       # host 1 dies publishing 4
+        leaf_faults=(                            # host 2's epoch 5 rots
+            LeafFault(match="host_0002/epoch_000000005/arr"),),
+        stragglers=((3, 2),),                    # host 3 stalls after 2
+        dropouts=(ChannelDropout("hbm", 0.0, 1e9),),
+    )
+    _drive_fleet(tmp_path, [0, 1, 2, 3], 5, plan)
+
+    res = ex.gather_shards(str(tmp_path), quorum=ex.QuorumPolicy(
+        expected_hosts=(0, 1, 2, 3), min_hosts=2, min_epoch=3,
+        backoff=0.0))
+    by = {r.host_id: r for r in res.hosts}
+    assert by[0].status == "merged" and by[0].epoch == 5
+    assert by[1].status == "merged" and by[1].epoch == 3
+    assert by[2].status == "degraded" and by[2].epoch == 4
+    assert by[2].quarantined_epochs == (5,)
+    assert by[2].requested_epoch == 5
+    assert by[3].status == "stale" and by[3].epoch == 2
+    assert not res.complete
+    assert res.hosts_merged == (0, 1, 2, 3)
+    assert res.hosts_degraded == (2,)
+    assert res.hosts_stale == (3,)
+
+    # Merged statistics are bit-exact to the same hosts' fault-free
+    # shards at their effective epochs — no corrupt row leaked in.
+    ref = ex.tree_reduce([_ref_agg(0, 5), _ref_agg(1, 3),
+                          _ref_agg(2, 4), _ref_agg(3, 2)])
+    _assert_stats_equal(res.agg, ref)
+
+    # Provenance flows into the estimates and their report rendering.
+    est = res.estimates(1.0, [f"r{i}" for i in range(R)])
+    assert est.coverage is not None and not est.complete_coverage
+    assert est.coverage["quarantined_epochs"] == {"2": [5]}
+    from repro.core.attribution import AttributionReport
+    assert "COVERAGE" in AttributionReport(est).table()
+
+    # Same fleet, stricter policy: quorum failure is typed and loud.
+    with pytest.raises(QuorumError):
+        ex.gather_shards(str(tmp_path), quorum=ex.QuorumPolicy(
+            expected_hosts=(0, 1, 2, 3, 7), min_hosts=5, backoff=0.0))
+
+    # The same plan's sensor-channel dropout, at the trace-bank seam:
+    # the hbm rail fails over to the (slower) fallback instrument.
+    tl = synthesize(COSTS, steps=2, seed=3, domains=True)
+    bank = FailoverTraceBank(
+        InstantTraceSensor(tl),
+        {"hbm": RaplTraceSensor(tl, update_period=1e-4)}, faults=plan)
+    times = np.linspace(0.0, tl.t_exec, 64)[1:]
+    pows = bank.read_rails(times)
+    assert np.isfinite(pows).all()
+    assert bank.failover_reads["hbm"] == len(times)
+
+
+def test_fault_free_plan_reproduces_gather_byte_for_byte(tmp_path):
+    a, b = tmp_path / "a", tmp_path / "b"
+    _drive_fleet(a, [0, 1], 3, plan=None)
+    _drive_fleet(b, [0, 1], 3, plan=FaultPlan())
+    assert _tree_digest(a) == _tree_digest(b)
+    ga = ex.gather_shards(str(a))
+    gb = ex.gather_shards(str(b))
+    _assert_stats_equal(ga, gb)
+    # A full, fault-free quorum gather is bit-exact to the strict path.
+    res = ex.gather_shards(str(b), quorum=ex.QuorumPolicy(backoff=0.0))
+    assert res.complete
+    assert res.coverage()["complete"]
+    _assert_stats_equal(res.agg, ga)
+
+
+def test_watermarks_pin_monotone_host_epochs(tmp_path):
+    _drive_fleet(tmp_path, [0], 5)
+    first = ex.gather_shards(str(tmp_path), quorum=ex.QuorumPolicy(
+        backoff=0.0))
+    assert first.host_epochs == {0: 5}
+    # The tail rots after the first gather: epochs 4 and 5 get torn.
+    hd = os.path.join(str(tmp_path), "host_0000")
+    for e in (4, 5):
+        leaf = os.path.join(hd, f"epoch_{e:09d}", "arr_00000.npy")
+        with open(leaf, "wb") as f:
+            f.write(b"\x00")
+    res = ex.gather_shards(str(tmp_path), quorum=ex.QuorumPolicy(
+        watermarks=first.host_epochs, backoff=0.0))
+    by = {r.host_id: r for r in res.hosts}
+    # The host folded back to epoch 3 — behind its own watermark, so it
+    # can never silently regress: it is flagged stale (merged+disclosed).
+    assert by[0].status == "stale" and by[0].epoch == 3
+    _assert_stats_equal(res.agg, _ref_agg(0, 3))
+    # drop_stale excludes it; with nothing else merged, quorum fails.
+    with pytest.raises(QuorumError):
+        ex.gather_shards(str(tmp_path), quorum=ex.QuorumPolicy(
+            watermarks=first.host_epochs, drop_stale=True, backoff=0.0))
+
+
+# ---------------------------------------------------------------------------
+# HostSampler: thread death re-raised on the caller's thread (satellite 1).
+# ---------------------------------------------------------------------------
+
+class _ConstSensor:
+    min_period = 0.0
+
+    def __init__(self, v=42.0):
+        self.v = v
+
+    def read(self, t=None):
+        return self.v
+
+
+def _drain_until_raise(sampler, exc_type, deadline_s=10.0):
+    deadline = time.monotonic() + deadline_s
+    with pytest.raises(exc_type) as info:
+        while True:
+            time.sleep(2e-3)
+            sampler.drain()
+            assert time.monotonic() < deadline, \
+                "sampler failure never surfaced at drain()"
+    return info
+
+
+def test_injected_sampler_fault_reraised_at_drain():
+    plan = FaultPlan(sampler_fail_after=3)
+    s = HostSampler(RegionMarker(), _ConstSensor(), period=1e-4,
+                    jitter=0.0, faults=plan)
+    with s:
+        info = _drain_until_raise(s, RuntimeError)
+    assert "injected sampler-thread fault" in str(info.value)
+
+
+def test_real_sensor_exception_reraised_at_drain():
+    class DyingSensor(_ConstSensor):
+        n = 0
+
+        def read(self, t=None):
+            DyingSensor.n += 1
+            if DyingSensor.n > 3:
+                raise ZeroDivisionError("sensor bus died")
+            return 1.0
+
+    s = HostSampler(RegionMarker(), DyingSensor(), period=1e-4, jitter=0.0)
+    with s:
+        _drain_until_raise(s, ZeroDivisionError)
+    # Each failure is raised exactly once — the session is then clean.
+    s.drain()
+
+
+def test_sampler_failure_surfaces_at_session_exit():
+    plan = FaultPlan(sampler_fail_after=0)
+    s = HostSampler(RegionMarker(), _ConstSensor(), period=1e-4,
+                    jitter=0.0, faults=plan)
+    with pytest.raises(RuntimeError, match="injected sampler-thread"):
+        with s:
+            time.sleep(50e-3)      # session never drains
+
+
+def test_nonfinite_readings_dropped_and_counted():
+    class NanSensor(_ConstSensor):
+        def __init__(self):
+            super().__init__()
+            self.n = 0
+
+        def read(self, t=None):
+            self.n += 1
+            return float("nan") if self.n % 2 else 1.0
+
+    s = HostSampler(RegionMarker(), NanSensor(), period=1e-4, jitter=0.0)
+    with s:
+        time.sleep(50e-3)
+    rids, pows = s.drain()
+    assert s.dropped_samples > 0
+    assert np.isfinite(pows).all()
+
+
+# ---------------------------------------------------------------------------
+# Sensor banks: per-channel dropout, failover, honest masking.
+# ---------------------------------------------------------------------------
+
+def test_failover_bank_substitutes_fallback_exactly_in_window():
+    tl = synthesize(COSTS, steps=2, seed=2, domains=True)
+    primary = InstantTraceSensor(tl)
+    fb = RaplTraceSensor(tl, update_period=1e-4)
+    t = tl.t_exec
+    plan = FaultPlan(dropouts=(ChannelDropout("hbm", 0.25 * t, 0.5 * t),))
+    bank = FailoverTraceBank(primary, {"hbm": fb}, faults=plan)
+    times = np.linspace(0.0, t, 501)[1:]
+    got = bank.read_rails(times)
+    ref = np.array(primary.read_rails(times))
+    in_w = (times >= 0.25 * t) & (times < 0.5 * t)
+    j = tl.domain_names.index("hbm")
+    assert np.array_equal(got[~in_w], ref[~in_w])     # untouched outside
+    fb_col = np.asarray(fb.read_rails(times[in_w]))[:, j]
+    assert np.array_equal(got[in_w, j], fb_col)       # substituted inside
+    assert bank.failover_reads["hbm"] == int(in_w.sum())
+    assert bank.masked_samples == 0
+    # Period arbitration: the bank's floor covers the fallback.
+    assert bank.effective_min_period() >= fb.min_period
+
+
+def test_masked_channel_voids_samples_never_biases(tmp_path):
+    tl = synthesize(COSTS, steps=2, seed=2, domains=True)
+    t = tl.t_exec
+    plan = FaultPlan(dropouts=(ChannelDropout("hbm", 0.2 * t, 0.6 * t),))
+
+    def collect(p):
+        bank = FailoverTraceBank(InstantTraceSensor(tl), faults=p)
+        n = 0
+        for rids, pows in iter_sample_chunks(tl, bank, period=1e-4,
+                                             jitter=0.0, seed=5,
+                                             chunk_size=4096):
+            assert np.isfinite(pows).all()    # NaN rows voided, not folded
+            n += len(rids)
+        return n
+
+    n_clean = collect(FaultPlan())
+    n_masked = collect(plan)
+    assert 0 < n_masked < n_clean             # fewer samples → wider CIs
+
+
+def test_host_bank_failover_is_sticky():
+    class FlakySensor(_ConstSensor):
+        def __init__(self):
+            super().__init__(5.0)
+            self.n = 0
+
+        def read(self, t=None):
+            self.n += 1
+            if self.n >= 2:
+                raise IOError("powercap zone vanished")
+            return self.v
+
+    bank = HostSensorBank([("pkg", FlakySensor()), ("dram", FlakySensor())],
+                          fallbacks={"pkg": _ConstSensor(7.0)})
+    first = bank.read()
+    assert first.tolist() == [5.0, 5.0]
+    second = bank.read()
+    assert second[0] == 7.0                   # failed over to fallback
+    assert np.isnan(second[1])                # no fallback → masked
+    third = bank.read()
+    assert third[0] == 7.0                    # sticky, not retried
+    assert np.isnan(third[1])
+    assert bank.failover_events == {"pkg": 1, "dram": 1}
+
+
+# ---------------------------------------------------------------------------
+# PhaseEnergyAccountant: spill failures bounded-retried, drops counted.
+# ---------------------------------------------------------------------------
+
+def _busy(seconds):
+    with regions_mod.region("chaos/serve"):
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < seconds:
+            pass
+
+
+def test_accountant_retries_then_counts_drop(tmp_path):
+    from repro.serve.engine import PhaseEnergyAccountant
+    plan = FaultPlan(spill_failures=((0, 1), (0, 2), (0, 3)))
+    acct = PhaseEnergyAccountant(period=1e-3, spill_dir=str(tmp_path),
+                                 spill_every=1, spill_retries=3,
+                                 faults=plan)
+    with acct:
+        for _ in range(4):
+            _busy(2e-3)
+            acct.drain()                      # epochs 1..4
+    assert acct.spill_failures == 3           # epochs 1, 2, 3 each failed
+    assert acct.spill_drops == 1              # retry budget exhausted once
+    assert isinstance(acct.last_spill_error, SpillError)
+    # The cumulative aggregator rode the next success: nothing lost.
+    restored, epoch = ex.restore_shard(str(tmp_path), 0)
+    assert epoch == acct._epoch
+    assert np.array_equal(restored.counts, acct.agg.counts)
+    assert np.array_equal(restored.chan_psum, acct.agg.chan_psum)
+
+
+def test_accountant_exit_raises_when_it_cannot_publish(tmp_path):
+    from repro.serve.engine import PhaseEnergyAccountant
+    plan = FaultPlan(spill_failures=tuple((0, e) for e in range(1, 64)))
+    acct = PhaseEnergyAccountant(period=1e-3, spill_dir=str(tmp_path),
+                                 spill_every=0, spill_retries=2,
+                                 faults=plan)
+    with pytest.raises(SpillError):
+        with acct:
+            _busy(2e-3)
+            acct.drain()
+    assert acct.spill_failures >= 1           # loud, never a silent gap
+
+
+def test_accountant_never_catches_injected_crash(tmp_path):
+    from repro.serve.engine import PhaseEnergyAccountant
+    plan = FaultPlan(crashes=((0, 1),))
+    acct = PhaseEnergyAccountant(period=1e-3, spill_dir=str(tmp_path),
+                                 spill_every=1, faults=plan)
+    with pytest.raises(InjectedCrash):
+        with acct:
+            _busy(2e-3)
+            acct.drain()
+    assert acct.spill_failures == 0           # a crash is not an I/O retry

@@ -1,0 +1,229 @@
+"""Corruption fuzz over the durable spill file classes.
+
+Every file class the exchange protocol persists — shard/delta
+``manifest.json``, array leaves, the per-host ``LATEST`` pointer — is
+corrupted on disk (deterministic bit flips and truncations, several
+positions per file) in both the checked-in schema-v1 fixture
+(``tests/data/spill_v1``) and freshly written v2 trees. The invariant
+is the PR-6 failure-model contract, phrased as a closed outcome set:
+
+* strict ``gather_shards`` either raises a typed :class:`SpillError`
+  subclass or returns statistics bit-identical to a *valid* durable
+  state (the full fleet, or an intact per-host epoch prefix when a
+  corrupted ``LATEST`` legitimately parses to an older epoch);
+* quorum ``gather_shards`` never raises for a single bad host — it
+  returns statistics bit-exact to a replay of exactly the epochs its
+  own provenance reports, and any host folded below its requested
+  epoch is disclosed as non-``merged``.
+
+Silently-wrong statistics — numbers that match no valid durable state
+— fail both checks.
+"""
+
+import hashlib
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import exchange as ex
+from repro.core.faults import QuorumError, SpillError
+from repro.core.streaming import StreamingAggregator
+
+pytestmark = pytest.mark.chaos
+
+DATA = os.path.join(os.path.dirname(__file__), "data", "spill_v1")
+R = 12
+
+# host -> LATEST epoch in the checked-in fixture tree.
+FIXTURE_EPOCHS = {0: 2, 1: 4, 2: 5}
+
+
+# ---------------------------------------------------------------------------
+# Deterministic replays of the update streams behind each tree.
+# ---------------------------------------------------------------------------
+
+def _fixture_updates(host, epoch):
+    rng = np.random.default_rng(1000 * host + epoch)
+    return (rng.integers(0, R, size=257),
+            rng.uniform(50.0, 250.0, size=257))
+
+
+def _fresh_updates(host, epoch):
+    rng = np.random.default_rng(300 * host + epoch)
+    return (rng.integers(0, R, size=111),
+            rng.uniform(30.0, 280.0, size=111))
+
+
+def _replay(updates, host, upto):
+    agg = StreamingAggregator(R)
+    for e in range(1, upto + 1):
+        agg.update(*updates(host, e))
+    return agg
+
+
+def _key(agg):
+    """Bit-exact fingerprint of sufficient statistics."""
+    return (tuple(int(c) for c in agg.counts),
+            tuple(float(x).hex() for x in np.ravel(agg.psum)),
+            tuple(float(x).hex() for x in np.ravel(agg.psumsq)))
+
+
+def _reduce_key(updates, epochs_by_host):
+    shards = [_replay(updates, h, e)
+              for h, e in sorted(epochs_by_host.items()) if e > 0]
+    return _key(ex.tree_reduce(shards))
+
+
+def _allowed_strict_keys(updates, epochs_by_host, vary_host):
+    """Every valid durable state the strict gather may legally return:
+    the full fleet, with the corrupted host at any intact epoch prefix
+    (a flipped LATEST may parse to an older — still valid — epoch)."""
+    allowed = set()
+    for e in range(1, epochs_by_host[vary_host] + 1):
+        eb = dict(epochs_by_host)
+        eb[vary_host] = e
+        allowed.add(_reduce_key(updates, eb))
+    return allowed
+
+
+# ---------------------------------------------------------------------------
+# Deterministic corruption: position derived from the file, not an RNG.
+# ---------------------------------------------------------------------------
+
+def _corrupt_file(path, kind, salt):
+    with open(path, "rb") as f:
+        data = bytearray(f.read())
+    h = int.from_bytes(
+        hashlib.sha256(f"{os.path.basename(path)}:{salt}".encode())
+        .digest()[:8], "big")
+    if kind == "bitflip":
+        bit = h % (len(data) * 8)
+        data[bit // 8] ^= 1 << (bit % 8)
+    else:
+        assert kind == "truncate"
+        data = data[: h % len(data)]      # always strictly shorter
+    with open(path, "wb") as f:
+        f.write(bytes(data))
+
+
+def _check_strict(root, allowed):
+    """Strict gather: typed failure or a member of the valid-state set."""
+    try:
+        g = ex.gather_shards(root)
+    except SpillError:
+        return "raised"
+    assert _key(g) in allowed, "strict gather returned silently-wrong stats"
+    return "valid"
+
+
+def _check_quorum(root, updates, roster):
+    """Quorum gather: provenance-consistent stats, degradation disclosed."""
+    res = ex.gather_shards(root, quorum=ex.QuorumPolicy(
+        expected_hosts=roster, min_hosts=1, backoff=0.0))
+    shards, short = [], False
+    for rep in sorted(res.hosts, key=lambda r: r.host_id):
+        if rep.epoch is None:
+            assert rep.status != "merged"
+            short = True
+            continue
+        if rep.requested_epoch is not None and rep.epoch < rep.requested_epoch:
+            assert rep.status != "merged"   # fold-back is disclosed
+            short = True
+        shards.append(_replay(updates, rep.host_id, rep.epoch))
+    assert shards, "quorum gather merged nothing without raising"
+    ref = ex.tree_reduce(shards)
+    assert np.array_equal(res.agg.counts, ref.counts)
+    assert np.array_equal(res.agg.chan_psum, ref.chan_psum)
+    assert np.array_equal(res.agg.chan_psumsq, ref.chan_psumsq)
+    if short:
+        assert not res.complete
+    return res
+
+
+# (class name, corrupted host, relative path) for the fixture tree.
+FIXTURE_TARGETS = [
+    ("delta-manifest", 1, "host_0001/epoch_000000004/manifest.json"),
+    ("base-manifest", 1, "host_0001/epoch_000000001/manifest.json"),
+    ("leaf", 1, "host_0001/epoch_000000004/arr_00001.npy"),
+    ("latest", 1, "host_0001/LATEST"),
+]
+
+
+@pytest.mark.parametrize("kind", ["bitflip", "truncate"])
+@pytest.mark.parametrize("cls,host,rel",
+                         FIXTURE_TARGETS,
+                         ids=[t[0] for t in FIXTURE_TARGETS])
+def test_fixture_tree_corruption(tmp_path, cls, host, rel, kind):
+    allowed = _allowed_strict_keys(_fixture_updates, FIXTURE_EPOCHS, host)
+    for salt in range(3):                  # several deterministic positions
+        root = tmp_path / f"{kind}-{salt}"
+        shutil.copytree(os.path.join(DATA, "region"), root)
+        _corrupt_file(str(root / rel), kind, salt)
+        _check_strict(str(root), allowed)
+        _check_quorum(str(root), _fixture_updates, tuple(FIXTURE_EPOCHS))
+
+
+def _write_fresh_tree(root):
+    """A v2 tree: host 0 publishes full shards, host 1 a delta chain."""
+    epochs = {}
+    for host, mode, last in ((0, "full", 3), (1, "delta", 4)):
+        agg = StreamingAggregator(R)
+        sp = ex.ShardSpiller(str(root), host, mode=mode, compact_every=16)
+        for e in range(1, last + 1):
+            agg.update(*_fresh_updates(host, e))
+            sp.spill(agg, e)
+        epochs[host] = last
+    return epochs
+
+
+FRESH_TARGETS = [
+    ("full-manifest", 0, "host_0000/epoch_000000003/manifest.json"),
+    ("full-leaf", 0, "host_0000/epoch_000000003/arr_00001.npy"),
+    ("delta-manifest", 1, "host_0001/epoch_000000004/manifest.json"),
+    ("delta-leaf", 1, "host_0001/epoch_000000004/arr_00002.npy"),
+    ("latest", 1, "host_0001/LATEST"),
+]
+
+
+@pytest.mark.parametrize("kind", ["bitflip", "truncate"])
+@pytest.mark.parametrize("cls,host,rel",
+                         FRESH_TARGETS,
+                         ids=[t[0] for t in FRESH_TARGETS])
+def test_fresh_tree_corruption(tmp_path, cls, host, rel, kind):
+    for salt in range(3):
+        root = tmp_path / f"{kind}-{salt}"
+        epochs = _write_fresh_tree(root)
+        allowed = _allowed_strict_keys(_fresh_updates, epochs, host)
+        _corrupt_file(str(root / rel), kind, salt)
+        _check_strict(str(root), allowed)
+        _check_quorum(str(root), _fresh_updates, tuple(epochs))
+
+
+def test_uncorrupted_trees_pass_both_checks(tmp_path):
+    """The harness itself must accept pristine trees (no false alarms)
+    and report them as complete coverage."""
+    fix_allowed = {_reduce_key(_fixture_updates, FIXTURE_EPOCHS)}
+    assert _check_strict(os.path.join(DATA, "region"), fix_allowed) == "valid"
+    res = _check_quorum(os.path.join(DATA, "region"), _fixture_updates,
+                        tuple(FIXTURE_EPOCHS))
+    assert res.complete
+    epochs = _write_fresh_tree(tmp_path)
+    allowed = {_reduce_key(_fresh_updates, epochs)}
+    assert _check_strict(str(tmp_path), allowed) == "valid"
+    assert _check_quorum(str(tmp_path), _fresh_updates,
+                         tuple(epochs)).complete
+
+
+def test_every_host_corrupt_is_a_typed_quorum_failure(tmp_path):
+    """When no host has any intact durable epoch, the quorum path must
+    raise the typed QuorumError — never return fabricated statistics."""
+    _write_fresh_tree(tmp_path)
+    for dirpath, _dirnames, filenames in os.walk(tmp_path):
+        for name in filenames:
+            if name.startswith("arr_") or name == "manifest.json":
+                _corrupt_file(os.path.join(dirpath, name), "truncate", 0)
+    with pytest.raises((QuorumError, SpillError)):
+        ex.gather_shards(str(tmp_path), quorum=ex.QuorumPolicy(
+            expected_hosts=(0, 1), min_hosts=1, backoff=0.0))

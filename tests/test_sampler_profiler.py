@@ -159,6 +159,41 @@ def test_host_session_smoke():
     assert busy.p_hat > 0.2
 
 
+def test_host_session_with_sensor_bank_reports_rails():
+    """host_session(sensor=...) threads a multi-rail bank end to end:
+    the session samples every rail and the estimates carry a per-domain
+    energy split whose rails sum to the scalar total."""
+    from repro.core.sensors import HostSensorBank
+
+    class Const:
+        min_period = 0.0
+
+        def __init__(self, v):
+            self.v = v
+
+        def read(self, t=None):
+            return self.v
+
+    bank = HostSensorBank([("pkg", Const(50.0)), ("dram", Const(10.0))])
+    prof = EnergyProfiler(period=1e-3, jitter=1e-4)
+    with prof.host_session(sensor=bank) as sess:
+        for _ in range(60):
+            with regions_mod.region("railwork"):
+                t0 = time.monotonic()
+                while time.monotonic() - t0 < 2e-3:
+                    pass
+    est = sess.estimates()
+    tbl = est.table
+    assert tbl.domains == ("pkg", "dram")
+    row = est.by_name()["railwork"]
+    assert row.n_samples >= 3
+    i = list(tbl.names).index("railwork")
+    assert tbl.e_rails[i].sum() == pytest.approx(tbl.e_hat[i], rel=1e-6)
+    # Constant rails: the split mirrors the configured powers exactly.
+    assert tbl.e_rails[i, 0] == pytest.approx(tbl.e_hat[i] * 50.0 / 60.0,
+                                              rel=1e-6)
+
+
 def test_host_sampler_period_tracks_deadline_despite_read_cost():
     """Absolute-deadline scheduling: the achieved mean period tracks the
     configured one even when read() itself costs a large fraction of the
