@@ -1,16 +1,25 @@
 #!/usr/bin/env bash
-# Fast syntax gate: fail on syntax-level breakage in seconds, before the
-# ~3-minute tier-1 pytest suite spins up.
+# Fast syntax + contract gate: fail on syntax-level breakage and contract
+# violations in seconds-to-a-minute, before the ~3-minute tier-1 pytest
+# suite spins up.
 #
 #   scripts/lint.sh
 #
 # 1. python -m compileall — byte-compiles every file under src/ tests/
 #    benchmarks/ scripts/ examples/ (catches SyntaxError, including ones
 #    pytest would only hit on import of a late-collected module).
-# 2. pyflakes (if installed) — undefined names, unused/shadowed imports,
-#    f-string mistakes. Skipped with a notice when unavailable: the
-#    container image does not bake it in, and this gate must not
-#    install anything.
+# 2. pyflakes — undefined names, unused/shadowed imports, f-string
+#    mistakes. In CI (CI=true, where requirements-dev.txt is installed)
+#    a missing pyflakes is a hard failure — the undefined-name gate must
+#    not silently disappear from the pipeline. Locally it is skipped
+#    with a notice: the container image does not bake it in, and this
+#    gate must not install anything.
+# 3. contract audit — `python -m repro.analysis --check`: AST contract
+#    passes (determinism hygiene, typed spill errors, silent excepts,
+#    fault-site registry, x64 scoping) ratcheted by
+#    src/repro/analysis/baseline.json, plus jaxpr hot-path audits (f64
+#    inventory, donation aliasing, host callbacks) ratcheted by
+#    src/repro/analysis/x64_budget.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -20,8 +29,15 @@ python -m compileall -q -f src tests benchmarks scripts examples
 if python -c "import pyflakes" 2>/dev/null; then
     echo "== pyflakes =="
     python -m pyflakes src tests benchmarks scripts examples
+elif [ "${CI:-false}" = "true" ]; then
+    echo "== pyflakes MISSING in CI — the undefined-name gate would" \
+         "silently vanish; failing (is requirements-dev.txt installed?) =="
+    exit 1
 else
     echo "== pyflakes not installed; skipping (compileall gate only) =="
 fi
+
+echo "== contract audit =="
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.analysis --check
 
 echo "lint OK"

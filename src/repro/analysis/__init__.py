@@ -1,0 +1,91 @@
+"""Contract auditor: static enforcement of the repo's invariants.
+
+Two layers (see ``README.md`` in this package and ROADMAP → "Static
+contracts"):
+
+* **Layer 1** — AST passes over ``src/repro`` (:mod:`.passes`):
+  determinism hygiene, typed spill errors, no silent excepts,
+  fault-site registry discipline, scoped ``enable_x64``. Pre-existing
+  findings are pinned in ``baseline.json``; only new ones fail.
+* **Layer 2** — jaxpr audits of the jitted hot paths
+  (:mod:`.jaxpr_audit`): f64-op inventory ratcheted by
+  ``x64_budget.json``, donation-aliasing verification, host-callback
+  detection.
+
+Entry point: ``python -m repro.analysis [--check|--report|--update-baseline]``
+(wired into ``scripts/lint.sh`` and the CI ``analysis`` job).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.passes import (ContractPass, FileUnit, Finding,
+                                   PASS_REGISTRY, all_passes, parse_unit,
+                                   run_passes)
+
+__all__ = [
+    "Finding", "FileUnit", "ContractPass", "PASS_REGISTRY",
+    "all_passes", "parse_unit", "run_passes",
+    "REPO_ROOT", "SCAN_ROOT", "BASELINE_PATH", "BUDGET_PATH",
+    "scan_repo", "AuditResult", "run_audit",
+]
+
+_PKG_DIR = os.path.dirname(os.path.abspath(__file__))
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(_PKG_DIR)))
+SCAN_ROOT = os.path.join(REPO_ROOT, "src", "repro")
+BASELINE_PATH = os.path.join(_PKG_DIR, "baseline.json")
+BUDGET_PATH = os.path.join(_PKG_DIR, "x64_budget.json")
+
+
+def scan_repo(scan_root: str | None = None) -> list[FileUnit]:
+    """Parse every ``.py`` under the scan root (default: ``src/repro``)."""
+    root = scan_root or SCAN_ROOT
+    units: list[FileUnit] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__",))
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            full = os.path.join(dirpath, fname)
+            modpath = os.path.relpath(full, root).replace(os.sep, "/")
+            display = os.path.relpath(full, REPO_ROOT).replace(os.sep, "/")
+            with open(full) as f:
+                source = f.read()
+            units.append(parse_unit(display, modpath, source))
+    return units
+
+
+@dataclasses.dataclass
+class AuditResult:
+    """Everything one full audit run produced, pre-ratchet-checked."""
+    findings: list                   # all layer-1 findings (pre-baseline)
+    ratchet: "baseline_mod.RatchetResult"
+    reports: list                    # layer-2 PathReports ([] if skipped)
+    budget_violations: list          # layer-2 ratchet failures
+
+    @property
+    def ok(self) -> bool:
+        return self.ratchet.ok and not self.budget_violations
+
+
+def run_audit(*, jaxpr: bool = True,
+              baseline_path: str | None = None,
+              budget_path: str | None = None) -> AuditResult:
+    """One full audit: scan + passes + baseline check (+ jaxpr budgets)."""
+    units = scan_repo()
+    findings = run_passes(units)
+    ratchet = baseline_mod.check_findings(
+        findings, baseline_mod.load_counts(baseline_path or BASELINE_PATH))
+    reports: list = []
+    violations: list = []
+    if jaxpr:
+        from repro.analysis.jaxpr_audit import audit_hot_paths
+        reports = audit_hot_paths()
+        violations = baseline_mod.check_budget(
+            reports, baseline_mod.load_budget(budget_path or BUDGET_PATH))
+    return AuditResult(findings=findings, ratchet=ratchet,
+                       reports=reports, budget_violations=violations)

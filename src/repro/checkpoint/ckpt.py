@@ -39,12 +39,19 @@ from typing import Any, Sequence
 import jax
 import numpy as np
 
-from repro.core.faults import (CorruptShardError, TornWriteError,
-                               resolve_plan)
+from repro.core.faults import (CorruptShardError, MissingArtifactError,
+                               TornWriteError, declare_site, resolve_plan)
 
 __all__ = ["save", "restore", "latest_step", "AsyncCheckpointer",
            "write_manifest_dir", "read_manifest_dir", "read_manifest_meta",
            "publish_latest"]
+
+# Injection seams this module owns (see faults.FAULT_SITES): the leaf
+# codec and the manifest codec, each on both the write and read side.
+_SITE_LEAF_WRITE = declare_site("ckpt.leaf_write")
+_SITE_LEAF_READ = declare_site("ckpt.leaf_read")
+_SITE_MANIFEST_WRITE = declare_site("ckpt.manifest_write")
+_SITE_MANIFEST_READ = declare_site("ckpt.manifest_read")
 
 
 def _flatten(tree: Any):
@@ -223,7 +230,7 @@ def restore(path: str, example_tree: Any, step: int | None = None) -> tuple[Any,
     if step is None:
         step = latest_step(path)
         if step is None:
-            raise FileNotFoundError(f"no checkpoint under {path}")
+            raise MissingArtifactError(f"no checkpoint under {path}")
     d = os.path.join(path, f"step_{step:09d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)

@@ -95,8 +95,9 @@ from repro.checkpoint import ckpt
 from repro.core import faults as faults_mod
 from repro.core.estimator import AggregateFn
 from repro.core.faults import (CorruptShardError, DeltaMismatchError,
-                               InjectedCrash, QuorumError, SpillError,
-                               StaleShardError, TornWriteError)
+                               InjectedCrash, MissingArtifactError,
+                               QuorumError, SpillError, StaleShardError,
+                               TornWriteError, declare_site)
 from repro.core.streaming import (StreamingAggregator,
                                   StreamingCombinationAggregator,
                                   channels_for)
@@ -255,6 +256,34 @@ def _stack_global(mesh, axis: str, rows: Sequence[np.ndarray]):
     return jax.make_array_from_process_local_data(sharding, stacked)
 
 
+def region_allreduce_fn(axis: str):
+    """Per-shard body of the region all-reduce collective.
+
+    Module-level (rather than a closure inside :func:`collective_reduce`)
+    so the jaxpr auditor can trace exactly the computation that runs
+    under ``shard_map`` — see ``repro.analysis.jaxpr_audit``.
+    """
+    import jax
+
+    def _allreduce(c, s, q):
+        return (jax.lax.psum(c, axis).sum(0),
+                jax.lax.psum(s, axis).sum(0),
+                jax.lax.psum(q, axis).sum(0))
+    return _allreduce
+
+
+def combo_allgather_fn(axis: str):
+    """Per-shard body of the combination-table all-gather collective
+    (module-level for the same auditability reason as
+    :func:`region_allreduce_fn`)."""
+    import jax
+
+    def _gather(*arrs):
+        return tuple(jax.lax.all_gather(a, axis, axis=0, tiled=True)
+                     for a in arrs)
+    return _gather
+
+
 def collective_reduce(shards: Sequence[StreamingAggregator |
                                        StreamingCombinationAggregator],
                       *, mesh=None, axis: str = "hosts",
@@ -270,7 +299,6 @@ def collective_reduce(shards: Sequence[StreamingAggregator |
     host-local id spaces, not summable) and every host folds the same
     ordered union merge, so results are identical everywhere.
     """
-    import jax
     from jax.experimental import enable_x64
     from jax.sharding import PartitionSpec as P
     from functools import partial
@@ -322,12 +350,7 @@ def collective_reduce(shards: Sequence[StreamingAggregator |
             psum = _stack_global(mesh, axis, [p.psum for p in packed])
             psumsq = _stack_global(mesh, axis, [p.psumsq for p in packed])
 
-            def _allreduce(c, s, q):
-                return (jax.lax.psum(c, axis).sum(0),
-                        jax.lax.psum(s, axis).sum(0),
-                        jax.lax.psum(q, axis).sum(0))
-
-            c, s, q = smap(_allreduce)(counts, psum, psumsq)
+            c, s, q = smap(region_allreduce_fn(axis))(counts, psum, psumsq)
             # Remote hosts may populate rows past any local shard's
             # n_rows; the merged statistics span the full capacity.
             return unpack_shard(
@@ -344,11 +367,8 @@ def collective_reduce(shards: Sequence[StreamingAggregator |
             mesh, axis,
             [np.asarray([p.n_rows], np.int64) for p in packed])
 
-        def _gather(*arrs):
-            return tuple(jax.lax.all_gather(a, axis, axis=0, tiled=True)
-                         for a in arrs)
-
-        g = smap(_gather)(combos, counts, psum, psumsq, n_rows)
+        g = smap(combo_allgather_fn(axis))(combos, counts, psum, psumsq,
+                                           n_rows)
         g_combos, g_counts, g_psum, g_psumsq, g_rows = map(np.asarray, g)
         merged = StreamingCombinationAggregator(aggregate_fn=aggregate_fn,
                                                 domains=domains)
@@ -584,7 +604,7 @@ def gather_shards(path: str, *, aggregate_fn: AggregateFn | None = None,
                 and os.path.exists(os.path.join(hd, "LATEST"))):
             raise CorruptShardError(f"unreadable LATEST under {hd}")
     if not hosts:
-        raise FileNotFoundError(f"no published shards under {path}")
+        raise MissingArtifactError(f"no published shards under {path}")
     aggs = []
     for h in hosts:
         restored = restore_shard(path, h, aggregate_fn=aggregate_fn)
@@ -814,6 +834,7 @@ def _scan_last_durable(hd: str):
     """
     try:
         names = os.listdir(hd)
+    # audit: allow(no-silent-except) absent host dir == no durable state
     except FileNotFoundError:
         return None
     epochs = sorted((int(m.group(1)) for name in names
@@ -821,6 +842,8 @@ def _scan_last_durable(hd: str):
     for i, e in enumerate(epochs):
         try:
             shard = DeltaChain(hd, e).fold()
+        # audit: allow(no-silent-except) fold-back scan: the skipped
+        # epochs are returned as the quarantined set, not dropped
         except IOError:
             continue
         return shard, e, tuple(sorted(epochs[:i]))
@@ -1155,6 +1178,12 @@ def _copy_shard(s: PackedShard) -> PackedShard:
         domains=s.domains)
 
 
+# Injection seam this module owns (see faults.FAULT_SITES): the publish
+# step of ShardSpiller.spill — crash-before-publish, silent straggle,
+# transient failure.
+_SITE_SPILLER_PUBLISH = declare_site("spiller.publish")
+
+
 class ShardSpiller:
     """Per-host durable publishing engine: incremental spills + compaction.
 
@@ -1342,6 +1371,7 @@ class ShardSpiller:
         """
         try:
             names = os.listdir(self._hd)
+        # audit: allow(no-silent-except) nothing published -> nothing to GC
         except FileNotFoundError:
             return
         for name in names:

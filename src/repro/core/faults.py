@@ -44,9 +44,10 @@ import numpy as np
 
 __all__ = [
     "SpillError", "CorruptShardError", "TornWriteError", "StaleShardError",
-    "DeltaMismatchError", "QuorumError", "InjectedCrash",
-    "ChannelDropout", "LeafFault", "FaultPlan",
+    "DeltaMismatchError", "QuorumError", "MissingArtifactError",
+    "InjectedCrash", "ChannelDropout", "LeafFault", "FaultPlan",
     "install", "active_plan", "resolve_plan",
+    "FAULT_SITES", "declare_site", "declared_sites",
 ]
 
 
@@ -86,6 +87,14 @@ class DeltaMismatchError(SpillError, ValueError):
 
 class QuorumError(SpillError):
     """A quorum gather could not merge the policy's minimum host count."""
+
+
+class MissingArtifactError(SpillError, FileNotFoundError):
+    """No durable artifact was ever published under the requested path
+    (no checkpoint step, no shard epoch). Distinct from
+    :class:`TornWriteError` — nothing was lost, nothing exists yet. Also
+    a ``FileNotFoundError`` so pre-existing absence handlers catch it
+    unchanged."""
 
 
 class InjectedCrash(RuntimeError):
@@ -280,3 +289,56 @@ def resolve_plan(explicit: FaultPlan | None) -> FaultPlan | None:
     """Seam-side plan lookup: an explicit ``faults=`` argument wins,
     otherwise fall back to the ambient installed plan (if any)."""
     return explicit if explicit is not None else _ACTIVE.get()
+
+
+# -- fault-site registry ------------------------------------------------------
+#
+# Every module that consults a FaultPlan marks itself with a module-level
+# ``_SITE = declare_site("...")`` per injection seam. The canonical list
+# below is the single source of truth: a seam name that drifts (typo,
+# rename, copy-paste duplicate) would silently decouple chaos configs
+# from the code they target, so membership and uniqueness are enforced
+# both at import time (here) and statically (the ``fault-site-hygiene``
+# pass in :mod:`repro.analysis`). Adding a seam means extending this
+# tuple in the same change that declares it.
+
+FAULT_SITES: tuple[str, ...] = (
+    "spiller.publish",        # ShardSpiller.spill crash/straggle/fail seam
+    "ckpt.leaf_write",        # _write_leaf byte corruption (storage rot)
+    "ckpt.leaf_read",         # _read_leaf byte corruption (flaky reads)
+    "ckpt.manifest_write",    # write_manifest_dir manifest corruption
+    "ckpt.manifest_read",     # read_manifest_meta manifest corruption
+    "sampler.loop",           # HostSampler control-thread death
+    "sensors.trace_bank",     # trace-sensor per-rail dropouts
+)
+
+_DECLARED: dict[str, str] = {}
+
+
+def declare_site(name: str, *, module: str | None = None) -> str:
+    """Register a fault-injection seam; returns ``name`` for assignment.
+
+    ``module`` defaults to the caller's ``__name__``. Unknown names and
+    cross-module duplicates raise at import time; re-declaring from the
+    same module (reload, re-import) is idempotent.
+    """
+    if name not in FAULT_SITES:
+        raise ValueError(
+            f"unregistered fault site {name!r}; add it to "
+            f"faults.FAULT_SITES in the same change")
+    if module is None:
+        import sys
+        frame = sys._getframe(1)
+        module = frame.f_globals.get("__name__", "<unknown>")
+    prev = _DECLARED.get(name)
+    if prev is not None and prev != module:
+        raise ValueError(
+            f"fault site {name!r} already declared by {prev}; "
+            f"duplicate declaration from {module}")
+    _DECLARED[name] = module
+    return name
+
+
+def declared_sites() -> dict[str, str]:
+    """Snapshot of declared seams: site name -> declaring module."""
+    return dict(_DECLARED)

@@ -27,12 +27,17 @@ from typing import Callable
 
 import numpy as np
 
+from repro.core.faults import declare_site
 from repro.core.sensors import DEFAULT_IDLE_POWER, idle_channel
 from repro.core.timeline import Timeline
 
 __all__ = ["SampleStream", "sample_timeline", "iter_sample_chunks",
            "iter_multiworker_chunks", "sample_timeline_multiworker",
            "HostSampler", "RegionMarker", "SampleBuffer"]
+
+# Injection seam this module owns (see faults.FAULT_SITES): the
+# HostSampler control thread (sampler_fail_after thread death).
+_SITE_SAMPLER_LOOP = declare_site("sampler.loop")
 
 
 @dataclasses.dataclass

@@ -35,7 +35,12 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from repro.core import faults as faults_mod
+from repro.core.faults import declare_site
 from repro.core.timeline import Timeline
+
+# Injection seam this module owns (see faults.FAULT_SITES): per-rail
+# dropout masks applied by the trace-sensor banks.
+_SITE_TRACE_BANK = declare_site("sensors.trace_bank")
 
 __all__ = [
     "SensorSpec", "DEFAULT_IDLE_POWER", "idle_channel",
@@ -63,6 +68,8 @@ def idle_channel(domains: "tuple[str, ...]") -> int:
     """
     try:
         return domains.index("package")
+    # audit: allow(no-silent-except) documented fallback: axes without a
+    # "package" rail blend idle power into channel 0 by contract
     except ValueError:
         return 0
 

@@ -1,0 +1,109 @@
+"""Recompile-count guard: one (ModelConfig, shape) key means exactly one
+compile. The serve decode step and the fused device-pipeline chunk steps
+are traced once and reused across requests/chunks/runs — a shape or
+hashable-config leak here multiplies latency by the compile time and
+breaks the paper's overhead budget silently (everything still computes
+the right numbers, just slowly)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.analysis.jaxpr_audit import jit_cache_size
+from repro.configs.registry import get_config
+from repro.core import device_pipeline as dp
+from repro.core.sensors import InstantTraceSensor
+from repro.core.timeline import RegionCost, synthesize
+from repro.models import model as M
+from repro.serve.engine import Engine, Request, ServeConfig, _jitted_fns
+
+
+def _fresh_cfg():
+    """A config no other test shares, so the session-wide lru-cached
+    jitted fns start cold for this module."""
+    cfg = get_config("qwen3-1.7b").reduced()
+    return dataclasses.replace(cfg, vocab_size=cfg.vocab_size + 3)
+
+
+def test_engine_decode_compiles_once_across_requests():
+    cfg = _fresh_cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, ServeConfig(max_batch=3, max_len=64,
+                                          eos_token=-1))
+    decode, reset = _jitted_fns(cfg)
+    assert decode is eng._decode_masked     # config-keyed cache shared
+    assert jit_cache_size(decode) == 0
+
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, n)
+                    .astype(np.int32),
+                    max_new_tokens=6)
+            for i, n in enumerate((5, 3, 9, 4))]
+    # Staggered multi-request run: prefills at several depths, ragged
+    # decode, slot reuse after the first requests drain.
+    eng.add_request(reqs[0])
+    eng.step()
+    eng.add_request(reqs[1])
+    eng.add_request(reqs[2])
+    for _ in range(30):
+        eng.step()
+        if all(r is None for r in eng.slot_req):
+            break
+    eng.add_request(reqs[3])                # reuses a drained slot
+    for _ in range(30):
+        eng.step()
+        if all(r is None for r in eng.slot_req):
+            break
+    assert all(r.done for r in reqs)
+
+    assert jit_cache_size(decode) == 1, \
+        "decode step recompiled within one (config, shape) key"
+    assert jit_cache_size(reset) == 1
+
+    # A second engine over the same config keeps sharing the same trace.
+    eng2 = Engine(cfg, params, ServeConfig(max_batch=3, max_len=64,
+                                           eos_token=-1))
+    eng2.run_until_drained([Request(rid=99,
+                                    prompt=np.array([1, 2], np.int32),
+                                    max_new_tokens=4)])
+    assert jit_cache_size(decode) == 1
+    assert jit_cache_size(reset) == 1
+
+
+_GUARD_CHUNK = 333        # unique chunk size => this module owns the key
+
+
+def _timeline(seed):
+    costs = [RegionCost("mem", flops=1e10, hbm_bytes=5e10, invocations=4),
+             RegionCost("alu", flops=6e11, hbm_bytes=2e9, invocations=4),
+             RegionCost("opt", flops=2e10, hbm_bytes=4e10, invocations=1)]
+    return synthesize(costs, steps=40, seed=seed)
+
+
+def test_region_chunk_step_compiles_once_across_runs():
+    spec = InstantTraceSensor.make_spec()
+    dtls = [_timeline(s).to_device() for s in (0, 1)]
+    assert dtls[0].grid_k == dtls[1].grid_k, "fixture must share the key"
+    for seed, dtl in enumerate(dtls):
+        dp.run_region_pipeline(dtl, spec, period=5e-3, seed=seed,
+                               chunk_size=_GUARD_CHUNK)
+    fn = dp._region_run_fn(_GUARD_CHUNK, spec, dtls[0].num_regions, False,
+                           dtls[0].grid_k)
+    assert jit_cache_size(fn) == 1, \
+        "region chunk step recompiled within one (spec, shape) key"
+
+
+def test_combo_chunk_step_compiles_once_across_runs():
+    from repro.core.device_pipeline import DeviceTimeline
+
+    spec = InstantTraceSensor.make_spec()
+    dtl = DeviceTimeline.from_timelines([_timeline(0), _timeline(1)])
+    for seed in (0, 1):
+        dp.run_combo_pipeline(dtl, spec, period=5e-3, seed=seed,
+                              chunk_size=_GUARD_CHUNK)
+    pack = dp._pack_spec(dtl.num_regions, dtl.num_workers)
+    step = dp._combo_step_fn(_GUARD_CHUNK, spec, dtl.grid_k, pack)
+    assert jit_cache_size(step) == 1, \
+        "combo chunk step recompiled within one (spec, shape) key"
