@@ -13,7 +13,8 @@ import sys
 def main() -> None:
     from benchmarks import (aggregation, domains, exchange, kernels,
                             kmeans_hotspot, memory_power, ocean_finegrain,
-                            pipeline, sampling_period, spill, validation)
+                            pipeline, sampling_period, serve_recovery,
+                            spill, validation)
     mods = [
         ("sampling_period (Fig 4/5)", sampling_period),
         ("validation (Fig 6 / §5)", validation),
@@ -26,6 +27,8 @@ def main() -> None:
         ("spill (full vs incremental delta publishing)", spill),
         ("pipeline (device-resident fused sampling)", pipeline),
         ("domains (multi-rail attribution, D=1 vs D=3)", domains),
+        ("serve_recovery (shed rate, snapshot + restore cost)",
+         serve_recovery),
     ]
     all_rows = ["name,us_per_call,derived"]
     for title, mod in mods:

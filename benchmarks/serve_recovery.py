@@ -1,0 +1,156 @@
+"""Serving robustness benchmark: overload shed-rate, snapshot overhead,
+restore-replay cost.
+
+Three costs bound how cheaply the serving seam's failure model can be
+kept always-on (the same budget argument the spill benchmark makes for
+the profiling fleet):
+
+* **overload shed-rate** — flood a B-slot engine with 4×B requests
+  through a bounded queue and measure the fraction shed by the ladder
+  versus completed (and that every submitted request is accounted for);
+* **snapshot overhead** — wall cost of one durable `snap_%09d` publish
+  (manifest+CRC+rename) relative to one decode step, i.e. what a
+  snapshot-every-k-steps cadence adds to serving latency;
+* **restore-replay cost** — wall cost of `restore_engine` replaying the
+  prompt+generated prefixes, the price of bit-exactness paid once per
+  crash (scales with live tokens at kill time, not with run length).
+
+Run at B ∈ {8, 32}; emits CSV rows plus ``BENCH_serve_recovery.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+
+_JSON_PATH = pathlib.Path(__file__).with_name("BENCH_serve_recovery.json")
+
+BATCHES = (8, 32)
+MAX_NEW = 6
+PROMPT_LEN = 5
+
+
+def _engine(cfg, params, B, queue_capacity=None):
+    from repro.serve.engine import Engine, ServeConfig
+    from repro.serve.scheduler import OverloadPolicy, ServeScheduler
+    scfg = ServeConfig(max_batch=B, max_len=64, eos_token=-1)
+    sched = None
+    if queue_capacity is not None:
+        sched = ServeScheduler(OverloadPolicy(
+            queue_capacity=queue_capacity,
+            backpressure_at=max(1, queue_capacity // 4),
+            shed_at=max(1, queue_capacity // 2),
+            widen_at=queue_capacity))
+    return Engine(cfg, params, scfg, scheduler=sched)
+
+
+def _requests(cfg, n, seed=0):
+    from repro.serve.engine import Request
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(1, cfg.vocab_size, PROMPT_LEN)
+                    .astype(np.int32), max_new_tokens=MAX_NEW,
+                    priority=i % 3) for i in range(n)]
+
+
+def _bench_batch(cfg, params, B):
+    from repro.serve.engine import Engine
+    from repro.serve.recovery import restore_engine
+    from repro.serve.scheduler import AdmissionError
+
+    out = {}
+
+    # -- overload shed-rate: 4B requests into a B-deep queue ----------------
+    eng = _engine(cfg, params, B, queue_capacity=B)
+    submitted = rejected = 0
+    for r in _requests(cfg, 4 * B):
+        try:
+            eng.submit(r)
+            submitted += 1
+        except AdmissionError:
+            rejected += 1
+    steps = 0
+    t0 = time.perf_counter()
+    while (any(s is not None for s in eng.slot_req)
+           or len(eng.scheduler.queue)):
+        eng.step()
+        steps += 1
+    drain_s = time.perf_counter() - t0
+    rep = eng.report
+    total = 4 * B
+    out["shed_rate"] = rep.shed / total
+    out["completed"] = rep.completed
+    out["accounted"] = rep.completed + rep.shed
+    out["overload_steps"] = steps
+    out["overload_drain_s"] = drain_s
+
+    # -- snapshot overhead vs decode step -----------------------------------
+    eng = _engine(cfg, params, B)
+    for r in _requests(cfg, B, seed=1):
+        eng.add_request(r)
+    t0 = time.perf_counter()
+    eng.step()
+    step_s = time.perf_counter() - t0
+    td = tempfile.mkdtemp(prefix="serve_snap_")
+    try:
+        t0 = time.perf_counter()
+        eng.snapshot(td)
+        snap_s = time.perf_counter() - t0
+        live_tokens = int(sum(len(r.prompt) + len(r.out_tokens)
+                              for r in eng.slot_req if r is not None))
+
+        # -- restore-replay cost -------------------------------------------
+        t0 = time.perf_counter()
+        restored = restore_engine(cfg, params, eng.scfg, td)
+        restore_s = time.perf_counter() - t0
+        assert restored.step_count == eng.step_count
+    finally:
+        shutil.rmtree(td, ignore_errors=True)
+    out["decode_step_us"] = step_s * 1e6
+    out["snapshot_us"] = snap_s * 1e6
+    out["snapshot_vs_step"] = snap_s / step_s
+    out["restore_us"] = restore_s * 1e6
+    out["live_tokens_at_snapshot"] = live_tokens
+    out["restore_us_per_token"] = restore_s * 1e6 / max(live_tokens, 1)
+    return out
+
+
+def run(verbose: bool = True) -> list[str]:
+    import jax
+    from repro.configs.registry import get_config
+    from repro.models import model as M
+
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    rows: list[str] = []
+    results: dict[str, dict] = {}
+    for B in BATCHES:
+        r = _bench_batch(cfg, params, B)
+        results[f"B{B}"] = r
+        rows.append(csv_row(
+            f"serve_overload_shed_B{B}", r["overload_drain_s"] * 1e6,
+            f"shed_rate={r['shed_rate']:.3f} "
+            f"completed={r['completed']} accounted={r['accounted']}"))
+        rows.append(csv_row(
+            f"serve_snapshot_B{B}", r["snapshot_us"],
+            f"x{r['snapshot_vs_step']:.2f}_decode_step"))
+        rows.append(csv_row(
+            f"serve_restore_B{B}", r["restore_us"],
+            f"{r['restore_us_per_token']:.1f}us_per_live_token"))
+    _JSON_PATH.write_text(json.dumps(
+        {"batches": list(BATCHES), "max_new_tokens": MAX_NEW,
+         "prompt_len": PROMPT_LEN, "results": results}, indent=2))
+    if verbose:
+        print("\n".join(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -222,6 +222,11 @@ DETERMINISM_CRITICAL_MODULES = (
     "core/faults.py",
     "core/exchange.py",
     "kernels/sample_attr/*",
+    # Serving-seam replayability: deadlines, budgets, admission order
+    # and snapshot/restore are all keyed on the engine step clock — a
+    # wall-clock read here would break bit-exact kill/restore.
+    "serve/scheduler.py",
+    "serve/recovery.py",
 )
 
 _WALLCLOCK = frozenset({

@@ -87,7 +87,7 @@ import re
 import shutil
 import time
 import weakref
-from typing import Mapping, Sequence
+from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
@@ -639,6 +639,12 @@ class QuorumPolicy:
         fold or quarantining.
     backoff:       initial inter-attempt sleep, doubled each retry
         (0 disables sleeping — tests).
+    sleep_fn:      how the inter-attempt backoff actually waits; defaults
+        to ``time.sleep``. Chaos tests exercising the retry ladder pass
+        a recording stub so a multi-retry scenario replays instantly and
+        deterministically instead of burning real wall-clock time. Only
+        ever called *between* attempts — never after the final failed
+        one (there is nothing left to wait for).
     drop_stale:    exclude stale hosts from the merge entirely instead
         of merging-and-disclosing.
     """
@@ -648,6 +654,7 @@ class QuorumPolicy:
     watermarks: Mapping[int, int] | None = None
     retries: int = 3
     backoff: float = 0.05
+    sleep_fn: Callable[[float], None] = time.sleep
     drop_stale: bool = False
 
 
@@ -780,7 +787,10 @@ def _restore_degraded(path: str, host_id: int, policy: QuorumPolicy,
     best: tuple[PackedShard, int, tuple[int, ...], int] | None = None
     for attempt in range(1, attempts + 1):
         if attempt > 1 and delay > 0:
-            time.sleep(delay)
+            # Between attempts only: the final failed attempt falls
+            # straight through to the degraded/quarantine verdict with
+            # no trailing wait.
+            policy.sleep_fn(delay)
             delay *= 2
         epoch = ckpt.latest_step(hd)
         if epoch is None:

@@ -190,6 +190,21 @@ class FaultPlan:
                      control thread raises (None → never).
     dropouts:        :class:`ChannelDropout` specs applied by the trace
                      sensor banks.
+    serve_crashes:   engine step-clock values at which ``Engine.step``
+                     raises :class:`InjectedCrash` *before* mutating any
+                     host or device state for that step (the serving
+                     process dies between steps; a restore from the last
+                     durable snapshot must replay bit-exactly).
+    snapshot_failures: engine step-clock values whose serve snapshot
+                     publish raises a transient :class:`SpillError`
+                     (succeeds if re-attempted at a later step). Torn /
+                     corrupt snapshot *bytes* are modeled by
+                     ``leaf_faults`` matching the snapshot paths — the
+                     snapshot writer shares the ckpt leaf codec.
+    admission_faults: submit sequence numbers (0-based, per scheduler)
+                     whose admission raises a transient typed admission
+                     error — exercises counted-never-silent rejection
+                     paths without a real overload.
     """
     seed: int = 0
     crashes: tuple[tuple[int, int], ...] = ()
@@ -198,6 +213,9 @@ class FaultPlan:
     leaf_faults: tuple[LeafFault, ...] = ()
     sampler_fail_after: int | None = None
     dropouts: tuple[ChannelDropout, ...] = ()
+    serve_crashes: tuple[int, ...] = ()
+    snapshot_failures: tuple[int, ...] = ()
+    admission_faults: tuple[int, ...] = ()
 
     # -- spiller seam ---------------------------------------------------------
     def crash_at(self, host_id: int, epoch: int) -> bool:
@@ -247,6 +265,16 @@ class FaultPlan:
     def sampler_should_fail(self, samples_taken: int) -> bool:
         return (self.sampler_fail_after is not None
                 and samples_taken >= self.sampler_fail_after)
+
+    # -- serving seam ---------------------------------------------------------
+    def serve_crash_at(self, step: int) -> bool:
+        return step in self.serve_crashes
+
+    def snapshot_fails(self, step: int) -> bool:
+        return step in self.snapshot_failures
+
+    def admission_fails(self, seq: int) -> bool:
+        return seq in self.admission_faults
 
     # -- sensor seam ----------------------------------------------------------
     def dropout_mask(self, domains: Sequence[str],
@@ -310,6 +338,9 @@ FAULT_SITES: tuple[str, ...] = (
     "ckpt.manifest_read",     # read_manifest_meta manifest corruption
     "sampler.loop",           # HostSampler control-thread death
     "sensors.trace_bank",     # trace-sensor per-rail dropouts
+    "serve.step.crash",       # Engine.step process-death injection
+    "serve.snapshot.write",   # serve snapshot publish failures
+    "serve.admission",        # scheduler submit-time transient faults
 )
 
 _DECLARED: dict[str, str] = {}

@@ -270,16 +270,32 @@ class SampleBuffer:
     ``channels > 1`` stores one power vector per sample (multi-rail host
     sensor banks, :class:`repro.core.sensors.HostSensorBank`); drains
     then yield [n, channels] power matrices instead of [n] vectors.
+
+    ``max_capacity`` bounds growth: once the buffer holds that many
+    undrained samples, further appends are *dropped and counted*
+    (:attr:`overruns`) instead of growing without bound — a consumer
+    stalled for longer than the burst budget (e.g. a long prefill loop
+    that never drains) loses the newest samples, never corrupts the
+    stream, and the loss is observable. ``None`` (default) keeps the
+    unbounded doubling behavior.
     """
 
-    def __init__(self, capacity: int = 4096, channels: int = 1):
+    def __init__(self, capacity: int = 4096, channels: int = 1,
+                 max_capacity: int | None = None):
         if channels < 1:
             raise ValueError(f"channels must be >= 1; got {channels}")
+        if max_capacity is not None and max_capacity < 1:
+            raise ValueError(
+                f"max_capacity must be >= 1; got {max_capacity}")
         self.channels = channels
         cap = max(capacity, 16)
+        if max_capacity is not None:
+            cap = min(cap, max_capacity)
+        self.max_capacity = max_capacity
         self._rids = np.empty(cap, dtype=np.int32)
         self._pows = np.empty((cap, channels), dtype=np.float64)
         self._n = 0
+        self.overruns = 0
         self._lock = threading.Lock()
 
     def __len__(self) -> int:
@@ -289,10 +305,19 @@ class SampleBuffer:
         with self._lock:
             n = self._n
             if n == len(self._rids):
+                if (self.max_capacity is not None
+                        and n >= self.max_capacity):
+                    self.overruns += 1
+                    return
+                grow = len(self._rids)
+                if self.max_capacity is not None:
+                    grow = min(grow, self.max_capacity - n)
                 self._rids = np.concatenate(
-                    [self._rids, np.empty_like(self._rids)])
+                    [self._rids, np.empty(grow, dtype=self._rids.dtype)])
                 self._pows = np.concatenate(
-                    [self._pows, np.empty_like(self._pows)])
+                    [self._pows,
+                     np.empty((grow, self.channels),
+                              dtype=self._pows.dtype)])
             self._rids[n] = rid
             self._pows[n] = power      # scalar broadcasts; vector stores
             self._n = n + 1
@@ -331,6 +356,7 @@ class HostSampler:
 
     def __init__(self, marker: RegionMarker, sensor, *, period: float,
                  jitter: float = 200e-6, seed: int = 0,
+                 buffer_capacity: int | None = None,
                  faults: "object | None" = None):
         from repro.core import faults as faults_mod
         self.marker = marker
@@ -343,7 +369,8 @@ class HostSampler:
         self._rng = np.random.default_rng(seed)
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
-        self._buf = SampleBuffer(channels=len(self.domains))
+        self._buf = SampleBuffer(channels=len(self.domains),
+                                 max_capacity=buffer_capacity)
         self._t0 = 0.0
         self._t1 = 0.0
         # Captured at construction: contextvars set by the caller are
@@ -431,6 +458,12 @@ class HostSampler:
         """
         self._raise_failure()
         return self._buf.drain()
+
+    @property
+    def buffer_overruns(self) -> int:
+        """Samples dropped because the bounded buffer was full at append
+        time (see :class:`SampleBuffer`). Always 0 when unbounded."""
+        return self._buf.overruns
 
     @property
     def elapsed(self) -> float:

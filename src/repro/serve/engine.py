@@ -25,12 +25,21 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import regions as regions_mod
 from repro.core.estimator import EstimateSet
+from repro.core.faults import InjectedCrash, declare_site, resolve_plan
 from repro.core.sampler import HostSampler, RegionMarker
 from repro.core.sensors import available_host_sensor
-from repro.core.streaming import StreamingAggregator
+from repro.core.streaming import (StreamingAggregator,
+                                  StreamingCombinationAggregator)
 from repro.models import model as M
+from repro.serve.scheduler import ServeScheduler, ServeTimeoutError
 
-__all__ = ["ServeConfig", "Request", "Engine", "PhaseEnergyAccountant"]
+__all__ = ["ServeConfig", "Request", "Engine", "PhaseEnergyAccountant",
+           "ServeTimeoutError"]
+
+# Injection seam this module owns (see faults.FAULT_SITES): the engine
+# step loop can be killed at a chosen step-clock value, before any state
+# mutation, to exercise snapshot/restore.
+_SITE_STEP_CRASH = declare_site("serve.step.crash")
 
 
 class PhaseEnergyAccountant:
@@ -72,17 +81,32 @@ class PhaseEnergyAccountant:
                  seed: int = 0, sensor=None, spill_dir: str | None = None,
                  host_id: int = 0, spill_every: int = 50,
                  spill_mode: str = "delta", compact_every: int = 16,
-                 spill_retries: int = 3, faults=None):
+                 spill_retries: int = 3, faults=None,
+                 track_requests: bool = False,
+                 buffer_capacity: int | None = None):
         self.marker = RegionMarker()
         self.sampler = HostSampler(self.marker,
                                    sensor or available_host_sensor(),
-                                   period=period, jitter=jitter, seed=seed)
+                                   period=period, jitter=jitter, seed=seed,
+                                   buffer_capacity=buffer_capacity)
+        self._base_period = period
         # A multi-channel sensor bank (e.g. sensors.HostSensorBank over
         # PKG + DRAM rails) widens the accumulators to one column per
         # rail: estimates() then reports per-phase × per-domain energy.
         self.domains = self.sampler.domains
         self.agg = StreamingAggregator(len(regions_mod.registry.names),
                                        domains=self.domains)
+        # Per-request attribution (the serving budget meter): request id
+        # becomes a combination axis — width-2 (phase_rid, request_id)
+        # rows through the same CombinationInterner path the §4.4
+        # multi-worker attribution uses. A sample taken while k requests
+        # are in flight is split 1/k across them, so the combination
+        # psums partition the phase psums exactly (no double count).
+        self.track_requests = track_requests
+        self.request_agg = (StreamingCombinationAggregator(
+            domains=self.domains) if track_requests else None)
+        self._req_energy: dict[int, float] = {}   # cumulative J / request
+        self._req_charges: dict[int, float] = {}  # J since last take
         self.spill_dir = spill_dir
         self.host_id = host_id
         self.spill_every = spill_every
@@ -120,6 +144,7 @@ class PhaseEnergyAccountant:
                 # process's session time, inflating every p_hat.
                 self._elapsed_offset = float(
                     meta.get("extra", {}).get("elapsed", 0.0))
+        self._last_drain_elapsed = self._elapsed_offset
 
     def __enter__(self) -> "PhaseEnergyAccountant":
         self._ctx = contextlib.ExitStack()
@@ -138,18 +163,47 @@ class PhaseEnergyAccountant:
             # queued behind drains that will never come.
             self.spill(raise_on_failure=True)
 
-    def drain(self) -> int:
+    def drain(self, active_requests=None) -> int:
         """Fold samples collected since the last drain; returns the count.
 
         Each call is one scheduler epoch; periodic durable spills happen
         here when configured.
+
+        With ``track_requests`` set, ``active_requests`` names the
+        request ids in flight while these samples were taken: each
+        sample's power is split equally across them and folded into the
+        per-(phase, request) combination table, and each request is
+        charged its share of the wall-time × mean-power energy since the
+        previous drain (consumed by the engine via
+        :meth:`take_request_charges` to enforce budgets).
         """
         rids, pows = self.sampler.drain()
+        now = self.elapsed
+        dt = max(now - self._last_drain_elapsed, 0.0)
+        self._last_drain_elapsed = now
         if len(rids):
             names = regions_mod.registry.names
             if len(names) > self.agg.num_regions:
                 self.agg.grow(len(names))
             self.agg.update(rids, pows)
+            if self.track_requests and active_requests:
+                reqs = sorted({int(r) for r in active_requests})
+                k = len(reqs)
+                pows_arr = np.asarray(pows, np.float64)
+                total = (pows_arr if pows_arr.ndim == 1
+                         else pows_arr.sum(axis=1))
+                share = dt * float(total.mean()) / k
+                n = len(rids)
+                mat = np.empty((n * k, 2), np.int64)
+                for j, r in enumerate(reqs):
+                    mat[j * n:(j + 1) * n, 0] = rids
+                    mat[j * n:(j + 1) * n, 1] = r
+                    self._req_energy[r] = (
+                        self._req_energy.get(r, 0.0) + share)
+                    self._req_charges[r] = (
+                        self._req_charges.get(r, 0.0) + share)
+                self.request_agg.update(
+                    mat, np.concatenate([pows_arr / k] * k, axis=0))
         self._epoch += 1
         if self.spill_dir is not None and (
                 self._spill_pending
@@ -162,6 +216,17 @@ class PhaseEnergyAccountant:
     def elapsed(self) -> float:
         """Accounted wall time: this session plus any resumed sessions."""
         return self._elapsed_offset + self.sampler.elapsed
+
+    @property
+    def epoch(self) -> int:
+        """Drain epochs completed (the spill fence's clock)."""
+        return self._epoch
+
+    @property
+    def last_spill_epoch(self) -> int | None:
+        """Epoch of the last durable shard publish, if any — recorded in
+        engine snapshots as the energy never-double-count fence."""
+        return self._last_spill_epoch
 
     def spill(self, *, raise_on_failure: bool = False) -> str | None:
         """Durably publish this host's current shard (atomic, CRC'd).
@@ -202,6 +267,64 @@ class PhaseEnergyAccountant:
         self._spill_pending = False
         self._last_spill_epoch = self._epoch
         self._last_spill_path = out
+        return out
+
+    # -- serving hooks --------------------------------------------------------
+    @property
+    def sampling_period(self) -> float:
+        """The live sampling period (the control thread reads it each
+        iteration, so ladder widening takes effect immediately)."""
+        return self.sampler.period
+
+    def scale_period(self, factor: float) -> None:
+        """Overload-ladder hook: widen the sampling period so the
+        monitor stops competing with overloaded serving work (the
+        energy-monitoring-cost critique from PAPERS.md). Scales from the
+        construction-time base, so repeated calls don't compound."""
+        self.sampler.period = self._base_period * float(factor)
+
+    def reset_period(self) -> None:
+        """Undo :meth:`scale_period` on ladder de-escalation."""
+        self.sampler.period = self._base_period
+
+    @property
+    def buffer_overruns(self) -> int:
+        """Samples dropped because the bounded ring was full — each one
+        counted by the buffer, surfaced here for the ServeReport."""
+        return self.sampler.buffer_overruns
+
+    def take_request_charges(self) -> dict[int, float]:
+        """Measured per-request joules accumulated since the last call
+        (engine-side budget enforcement consumes these every step)."""
+        out, self._req_charges = self._req_charges, {}
+        return out
+
+    def request_energy(self) -> dict[int, float]:
+        """Cumulative measured J per request id (J/request headline)."""
+        return dict(self._req_energy)
+
+    def request_phase_energy(self) -> dict[int, dict[str, float]]:
+        """Measured per-request × per-phase energy [J].
+
+        The combination view of the same samples :meth:`estimates`
+        aggregates per phase: each (phase, request) cell gets
+        ``elapsed × psum_cell / n_total``, with psums split 1/k across
+        the requests in flight at sample time — summing a phase's cells
+        over requests recovers that phase's energy for the sampled
+        in-flight intervals (no sample is double-counted).
+        """
+        if self.request_agg is None:
+            raise RuntimeError("accountant built without track_requests")
+        out: dict[int, dict[str, float]] = {}
+        if self.agg.n_total == 0:
+            return out
+        names = regions_mod.registry.names
+        inner = self.request_agg.agg
+        scale = self.elapsed / self.agg.n_total
+        for cid, (phase_rid, rid) in enumerate(
+                self.request_agg.interner.combos):
+            e = scale * float(inner.chan_psum[cid].sum())
+            out.setdefault(int(rid), {})[names[int(phase_rid)]] = e
         return out
 
     def estimates(self, alpha: float = 0.05) -> EstimateSet:
@@ -261,6 +384,11 @@ class ServeConfig:
     max_len: int = 512
     eos_token: int = 0
     cache_dtype: str = "bfloat16"
+    # Deterministic energy proxy: J charged per slot per decode step (and
+    # per prompt token at prefill) against each request's budget. Replayable
+    # under the step clock — measured charges from a track_requests
+    # accountant are added on top when one is attached.
+    step_energy: float | None = None
 
 
 @dataclasses.dataclass
@@ -270,6 +398,13 @@ class Request:
     max_new_tokens: int = 32
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # -- scheduling contract (engine step clock, never wall clock) ----------
+    priority: int = 0               # higher admits first / sheds last
+    deadline: int | None = None     # max steps after submit (incl. queue wait)
+    energy_budget: float | None = None  # max charged J before mid-decode abort
+    status: str = "queued"
+    energy_j: float = 0.0           # charged so far (proxy + measured)
+    submit_step: int = 0
 
 
 class Engine:
@@ -277,11 +412,20 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig,
                  *, sample: Callable | None = None,
-                 accountant: PhaseEnergyAccountant | None = None):
+                 accountant: PhaseEnergyAccountant | None = None,
+                 scheduler: ServeScheduler | None = None, faults=None):
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
         self.accountant = accountant
+        self.scheduler = scheduler or ServeScheduler()
+        self.report = self.scheduler.report
+        # Deterministic step clock: number of completed engine steps.
+        # Deadlines, budgets, snapshots and injected crashes are all
+        # keyed on it, never on wall time.
+        self.step_count = 0
+        self._faults = faults
+        self._requests: dict[int, Request] = {}
         B, T = serve_cfg.max_batch, serve_cfg.max_len
         dt = jnp.bfloat16 if serve_cfg.cache_dtype == "bfloat16" else jnp.float32
         self.cache = M.init_cache(cfg, B, T, dtype=dt)
@@ -304,7 +448,7 @@ class Engine:
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
-    def add_request(self, req: Request) -> bool:
+    def _validate(self, req: Request) -> None:
         if len(req.prompt) == 0:
             # Without at least one prompt token there are no logits to
             # sample the first output token from (and the teacher-forced
@@ -318,11 +462,34 @@ class Engine:
                 f"request {req.rid}: prompt length {len(req.prompt)} "
                 f"does not fit max_len {self.scfg.max_len} "
                 f"(need len(prompt) + 1 <= max_len)")
-        slots = self._free_slots()
-        if not slots:
+
+    def submit(self, req: Request) -> None:
+        """Queue-admission edge: enqueue for the scheduler to admit as
+        slots free up. Raises typed ``AdmissionError`` subclasses on
+        rejection — every rejection is counted in :attr:`report` first,
+        never silent. ``add_request`` remains the direct-placement path
+        (bypasses the queue; returns False when no slot is free)."""
+        self._validate(req)
+        self._requests[req.rid] = req
+        self.scheduler.submit(req, self.step_count)
+
+    def add_request(self, req: Request) -> bool:
+        self._validate(req)
+        if not self._free_slots():
             return False
-        s = slots[0]
+        if req.rid not in self.report:
+            self.report.open(req.rid, status="queued",
+                             step=self.step_count, priority=req.priority)
+            req.submit_step = self.step_count
+        self._place(req)
+        return True
+
+    def _place(self, req: Request) -> None:
+        """Prefill ``req`` into the first free slot (caller checked one
+        exists) and mark it admitted."""
+        s = self._free_slots()[0]
         self.slot_req[s] = req
+        self._requests[req.rid] = req
         mask = np.zeros(len(self.slot_req), bool)
         mask[s] = True
         # Zero the claimed slot's cache state: recurrent SSM/xLSTM state
@@ -349,54 +516,170 @@ class Engine:
                 logits, self.cache = self._decode_masked(
                     self.params, jnp.asarray(self.tokens.copy()),
                     self.cache, jnp.asarray(cur.copy()), jnp.asarray(mask))
+                if self.accountant is not None and t % 32 == 31:
+                    # A long prefill is many sampler periods with no
+                    # scheduler step in between: drain mid-loop so the
+                    # bounded ring can't overrun (satellite of the
+                    # never-silent contract — overruns that do happen
+                    # are counted, see SampleBuffer.overruns).
+                    self.accountant.drain(active_requests=(req.rid,))
         self.slot_len[s] = len(req.prompt)
         self.tokens[s, 0] = int(np.asarray(
             self.sample(logits[s:s + 1, -1, :]))[0])
-        return True
+        rec = self.report.set_status(req.rid, "admitted")
+        rec.admit_step = self.step_count
+        req.status = "admitted"
+        if self.scfg.step_energy is not None:
+            self._charge(req, self.scfg.step_energy * len(req.prompt))
+        if self.accountant is not None:
+            self.accountant.drain(active_requests=(req.rid,))
+            self._apply_measured_charges()
+
+    # -- energy charging -------------------------------------------------------
+    def _charge(self, req: Request, joules: float) -> None:
+        req.energy_j += joules
+        if req.rid in self.report:
+            self.report.request(req.rid).energy_j = req.energy_j
+
+    def _apply_measured_charges(self) -> None:
+        if self.accountant is None or not self.accountant.track_requests:
+            return
+        for rid, dj in self.accountant.take_request_charges().items():
+            req = self._requests.get(rid)
+            if req is not None:
+                self._charge(req, dj)
+
+    def _widen_sampling(self, factor: float) -> None:
+        if self.accountant is not None:
+            self.accountant.scale_period(factor)
+
+    def _restore_sampling(self) -> None:
+        if self.accountant is not None:
+            self.accountant.reset_period()
 
     def step(self) -> list[Request]:
-        """One decode step for all active slots; returns finished requests."""
+        """One engine step: admit queued requests into free slots, run
+        the overload ladder, decode every active slot one token, charge
+        energy, and enforce deadlines/budgets. Returns requests that
+        left their slot this step — completed (``done=True``) or aborted
+        (typed status, partial ``out_tokens``, ``done=False``)."""
+        step = self.step_count
+        plan = resolve_plan(self._faults)
+        if plan is not None and plan.serve_crash_at(step):
+            # Before ANY mutation: a killed step leaves the engine
+            # exactly as the previous step published it, so the
+            # snapshot/restore contract is bit-exact.
+            raise InjectedCrash(
+                f"injected crash at engine step {step} "
+                f"({_SITE_STEP_CRASH})")
+        while self._free_slots():
+            req = self.scheduler.admit(step)
+            if req is None:
+                break
+            self._place(req)
+        self.scheduler.tick(step, widen_fn=self._widen_sampling,
+                            unwiden_fn=self._restore_sampling)
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
-            return []
-        # Mask writes to active slots: free slots must not advance their
-        # recurrent state on the garbage tokens left in their rows.
-        mask = np.asarray([r is not None for r in self.slot_req])
-        with regions_mod.region("serve/decode"):
-            # Fresh host buffers (see prefill loop): the scheduler
-            # mutates self.tokens/slot_len right after this dispatch.
-            logits, self.cache = self._decode_masked(
-                self.params, jnp.asarray(self.tokens.copy()), self.cache,
-                jnp.asarray(self.slot_len.astype(np.int32)),
-                jnp.asarray(mask))
-        nxt = np.asarray(self.sample(logits[:, -1, :]))
-        finished = []
-        for s in active:
-            r = self.slot_req[s]
-            r.out_tokens.append(int(self.tokens[s, 0]))
-            self.slot_len[s] += 1
-            self.tokens[s, 0] = int(nxt[s])
-            hit_eos = int(nxt[s]) == self.scfg.eos_token
-            if (len(r.out_tokens) >= r.max_new_tokens or hit_eos
-                    or self.slot_len[s] >= self.scfg.max_len - 1):
-                r.done = True
+        finished: list[Request] = []
+        if active:
+            # Mask writes to active slots: free slots must not advance
+            # their recurrent state on the garbage tokens in their rows.
+            mask = np.asarray([r is not None for r in self.slot_req])
+            with regions_mod.region("serve/decode"):
+                # Fresh host buffers (see prefill loop): the scheduler
+                # mutates self.tokens/slot_len right after this dispatch.
+                logits, self.cache = self._decode_masked(
+                    self.params, jnp.asarray(self.tokens.copy()),
+                    self.cache,
+                    jnp.asarray(self.slot_len.astype(np.int32)),
+                    jnp.asarray(mask))
+            nxt = np.asarray(self.sample(logits[:, -1, :]))
+            for s in active:
+                r = self.slot_req[s]
+                r.out_tokens.append(int(self.tokens[s, 0]))
+                self.slot_len[s] += 1
+                self.tokens[s, 0] = int(nxt[s])
+                if self.scfg.step_energy is not None:
+                    self._charge(r, self.scfg.step_energy)
+                hit_eos = int(nxt[s]) == self.scfg.eos_token
+                if (len(r.out_tokens) >= r.max_new_tokens or hit_eos
+                        or self.slot_len[s] >= self.scfg.max_len - 1):
+                    r.done = True
+                    self._release(s, "completed", step)
+                    finished.append(r)
+        if self.accountant is not None:
+            # Fold freshly sampled (phase, power) pairs into the
+            # streaming accumulators; the raw stream never accumulates.
+            rids = tuple(r.rid for r in self.slot_req if r is not None)
+            self.accountant.drain(active_requests=rids or None)
+            self._apply_measured_charges()
+            self.report.buffer_overruns = self.accountant.buffer_overruns
+        # Deadline / budget enforcement after this step's work is charged:
+        # the violator leaves with partial output and a typed status.
+        for s, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            age = (step + 1) - self.report.request(r.rid).submit_step
+            if r.deadline is not None and age >= r.deadline:
+                self._release(
+                    s, "aborted_deadline", step,
+                    error=f"deadline {r.deadline} steps reached "
+                          f"(age {age} at end of step {step})")
                 finished.append(r)
-                self.slot_req[s] = None
-                self.slot_len[s] = 0
+            elif (r.energy_budget is not None
+                    and r.energy_j > r.energy_budget):
+                self._release(
+                    s, "aborted_budget", step,
+                    error=f"charged {r.energy_j:.6g} J exceeds budget "
+                          f"{r.energy_budget:.6g} J")
+                finished.append(r)
+        self.step_count = step + 1
         return finished
+
+    def _release(self, s: int, status: str, step: int,
+                 error: str | None = None) -> None:
+        r = self.slot_req[s]
+        r.status = status
+        rec = self.report.set_status(r.rid, status, step=step, error=error)
+        rec.tokens_out = len(r.out_tokens)
+        self.slot_req[s] = None
+        self.slot_len[s] = 0
 
     def run_until_drained(self, requests: list[Request],
                           max_steps: int = 10_000) -> list[Request]:
+        """Drive the engine until every pending, queued and in-flight
+        request has left its slot. Raises :class:`ServeTimeoutError`
+        carrying the undrained request ids if ``max_steps`` elapses with
+        work still outstanding — never a silent partial return."""
         done: list[Request] = []
         pending = list(requests)
         for _ in range(max_steps):
             while pending and self._free_slots():
                 self.add_request(pending.pop(0))
             done += self.step()
-            if self.accountant is not None:
-                # Fold freshly sampled (phase, power) pairs into the
-                # streaming accumulators; the raw stream never accumulates.
-                self.accountant.drain()
-            if not pending and all(r is None for r in self.slot_req):
-                break
-        return done
+            if (not pending and not len(self.scheduler.queue)
+                    and all(r is None for r in self.slot_req)):
+                return done
+        undrained = sorted(
+            [r.rid for r in pending]
+            + [r.rid for r in self.slot_req if r is not None]
+            + [e[2].rid for e in self.scheduler.queue.snapshot()])
+        raise ServeTimeoutError(
+            f"{len(undrained)} request(s) undrained after {max_steps} "
+            f"steps: {undrained}", undrained)
+
+    # -- durability ------------------------------------------------------------
+    def snapshot(self, path: str) -> str:
+        """Publish a durable crash-recovery snapshot under ``path``
+        (see :mod:`repro.serve.recovery` for the contract)."""
+        from repro.serve.recovery import snapshot as _snapshot
+        return _snapshot(self, path)
+
+    @classmethod
+    def restore(cls, cfg: ModelConfig, params, serve_cfg: ServeConfig,
+                path: str, **kwargs) -> "Engine":
+        """Rebuild an engine from its last durable snapshot, replaying
+        generated prefixes so subsequent tokens are bit-exact with the
+        uninterrupted run (:func:`repro.serve.recovery.restore_engine`)."""
+        from repro.serve.recovery import restore_engine
+        return restore_engine(cfg, params, serve_cfg, path, **kwargs)

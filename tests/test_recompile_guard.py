@@ -72,6 +72,39 @@ def test_engine_decode_compiles_once_across_requests():
     assert jit_cache_size(reset) == 1
 
 
+def test_snapshot_restore_and_aborts_add_no_compile_keys(tmp_path):
+    # The reworked engine paths — queue-driven admission, budget/deadline
+    # aborts, snapshot publish and restore-replay — must all reuse the
+    # one (config, shape) decode trace: replay teacher-forces through
+    # the SAME masked decode step at the same shapes.
+    cfg = dataclasses.replace(_fresh_cfg(), vocab_size=_fresh_cfg()
+                              .vocab_size + 4)   # own key for this test
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(max_batch=2, max_len=48, eos_token=-1,
+                       step_energy=1.0)
+    decode, reset = _jitted_fns(cfg)
+    assert jit_cache_size(decode) == 0
+
+    rng = np.random.default_rng(3)
+    eng = Engine(cfg, params, scfg)
+    eng.submit(Request(0, rng.integers(1, cfg.vocab_size, 5)
+                       .astype(np.int32), max_new_tokens=8))
+    eng.submit(Request(1, rng.integers(1, cfg.vocab_size, 4)
+                       .astype(np.int32), max_new_tokens=12,
+                       energy_budget=6.0))      # budget-aborts mid-decode
+    eng.step()
+    eng.step()
+    eng.snapshot(str(tmp_path))
+    assert jit_cache_size(decode) == 1
+
+    restored = Engine.restore(cfg, params, scfg, str(tmp_path))
+    restored.run_until_drained([])              # replay + finish + abort
+    assert restored.report.aborted_budget == 1
+    assert jit_cache_size(decode) == 1, \
+        "snapshot/restore or abort path introduced a new compile key"
+    assert jit_cache_size(reset) == 1
+
+
 _GUARD_CHUNK = 333        # unique chunk size => this module owns the key
 
 

@@ -1,0 +1,176 @@
+"""Tier-1 serving-seam tests: queue-driven engine runs, step-clock
+deadlines and energy budgets, typed drain timeouts, and the
+per-request energy attribution path (deterministic — the accountant's
+sampler is stubbed, so no timing dependence).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.core import regions as regions_mod
+from repro.core.sampler import SampleBuffer
+from repro.models import model as M
+from repro.serve.engine import (Engine, PhaseEnergyAccountant, Request,
+                                ServeConfig, ServeTimeoutError)
+
+ARCH = "qwen3-1.7b"
+
+
+@pytest.fixture(scope="module")
+def arch_setup():
+    cfg = get_config(ARCH).reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompt(cfg, n=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+
+
+# -- queue-driven engine -------------------------------------------------------
+
+def test_submit_path_matches_direct_path(arch_setup):
+    cfg, params = arch_setup
+    scfg = ServeConfig(max_batch=2, max_len=48)
+    reqs = lambda: [Request(i, _prompt(cfg, 4 + i, seed=i), max_new_tokens=4)
+                    for i in range(3)]
+    direct = Engine(cfg, params, scfg)
+    ref = {r.rid: list(r.out_tokens)
+           for r in direct.run_until_drained(reqs())}
+    queued = Engine(cfg, params, scfg)
+    for r in reqs():
+        queued.submit(r)
+    got = {r.rid: list(r.out_tokens) for r in queued.run_until_drained([])}
+    assert got == ref
+    assert queued.report.completed == 3
+
+
+def test_deadline_abort_returns_partial_output(arch_setup):
+    cfg, params = arch_setup
+    eng = Engine(cfg, params, ServeConfig(max_batch=1, max_len=48))
+    eng.submit(Request(0, _prompt(cfg), max_new_tokens=30, deadline=3))
+    done = eng.run_until_drained([])
+    (r,) = done
+    assert r.status == "aborted_deadline" and not r.done
+    assert 0 < len(r.out_tokens) <= 3          # partial, not silent loss
+    rec = eng.report.request(0)
+    assert rec.status == "aborted_deadline" and rec.error
+    assert rec.tokens_out == len(r.out_tokens)
+
+
+def test_energy_budget_abort_mid_decode(arch_setup):
+    cfg, params = arch_setup
+    scfg = ServeConfig(max_batch=1, max_len=48, step_energy=1.0)
+    prompt = _prompt(cfg, 4)
+    eng = Engine(cfg, params, scfg)
+    # Budget covers prefill (4 J) + 2 decode steps; the 3rd decode
+    # charge crosses it and the request leaves with 3 partial tokens.
+    eng.submit(Request(0, prompt, max_new_tokens=30, energy_budget=6.0))
+    (r,) = eng.run_until_drained([])
+    assert r.status == "aborted_budget" and not r.done
+    assert len(r.out_tokens) == 3
+    assert r.energy_j == pytest.approx(7.0)    # the violating charge
+    assert eng.report.aborted_budget == 1
+
+
+def test_run_until_drained_timeout_is_typed(arch_setup):
+    cfg, params = arch_setup
+    eng = Engine(cfg, params, ServeConfig(max_batch=1, max_len=64))
+    reqs = [Request(i, _prompt(cfg, 3, seed=i), max_new_tokens=40)
+            for i in range(3)]
+    with pytest.raises(ServeTimeoutError) as ei:
+        eng.run_until_drained(reqs, max_steps=5)
+    # Every abandoned request is named: the in-flight one plus the
+    # ones still pending — never a silent partial return.
+    assert set(ei.value.undrained) == {0, 1, 2}
+
+
+# -- per-request attribution (deterministic: stubbed sampler) -----------------
+
+class _FakeSampler:
+    def __init__(self):
+        self.period = 2e-3
+        self.elapsed = 0.0
+        self.buffer_overruns = 0
+        self.queue = []
+
+    def drain(self):
+        if self.queue:
+            return self.queue.pop(0)
+        return np.empty(0, np.int64), np.empty(0)
+
+
+def _acct_with_fake():
+    acct = PhaseEnergyAccountant(track_requests=True)
+    acct.sampler = _FakeSampler()
+    return acct
+
+
+def test_request_energy_split_partitions_samples():
+    rid = regions_mod.registry.intern("serve/decode")
+    acct = _acct_with_fake()
+    # Epoch 1: one sample at 100 W while requests 1 and 2 are in flight.
+    acct.sampler.queue.append((np.asarray([rid]), np.asarray([100.0])))
+    acct.sampler.elapsed = 1.0
+    acct.drain(active_requests=(1, 2))
+    # Epoch 2: one sample at 200 W, only request 2 remains.
+    acct.sampler.queue.append((np.asarray([rid]), np.asarray([200.0])))
+    acct.sampler.elapsed = 2.0
+    acct.drain(active_requests=(2,))
+    assert acct.request_energy() == pytest.approx({1: 50.0, 2: 250.0})
+    per_phase = acct.request_phase_energy()
+    name = regions_mod.registry.names[rid]
+    assert per_phase[1][name] == pytest.approx(50.0)
+    assert per_phase[2][name] == pytest.approx(250.0)
+    # Per-request cells partition the phase total: no double count.
+    est = acct.estimates()
+    phase_total = float(est.table.e_hat[list(est.table.names).index(name)])
+    assert sum(sum(d.values()) for d in per_phase.values()) == (
+        pytest.approx(phase_total))
+
+
+def test_take_request_charges_consumes_delta():
+    rid = regions_mod.registry.intern("serve/decode")
+    acct = _acct_with_fake()
+    acct.sampler.queue.append((np.asarray([rid]), np.asarray([10.0])))
+    acct.sampler.elapsed = 1.0
+    acct.drain(active_requests=(7,))
+    assert acct.take_request_charges() == pytest.approx({7: 10.0})
+    assert acct.take_request_charges() == {}     # consumed
+    assert acct.request_energy() == pytest.approx({7: 10.0})  # cumulative
+
+
+def test_scale_period_is_idempotent_from_base():
+    acct = _acct_with_fake()
+    base = acct.sampler.period
+    acct.scale_period(4.0)
+    acct.scale_period(4.0)                       # does not compound
+    assert acct.sampler.period == pytest.approx(base * 4.0)
+    acct.reset_period()
+    assert acct.sampler.period == pytest.approx(base)
+
+
+# -- bounded sample ring (satellite: overruns counted, never silent) ----------
+
+def test_sample_buffer_bounded_growth_counts_drops():
+    buf = SampleBuffer(capacity=16, max_capacity=20)
+    for i in range(30):
+        buf.append(i % 3, 1.0)
+    assert buf.overruns == 10                    # 20 kept, 10 dropped
+    rids, pows = buf.drain()
+    assert len(rids) == 20
+    assert buf.overruns == 10                    # counter survives drain
+    buf.append(0, 1.0)                           # room again after drain
+    assert buf.overruns == 10
+
+
+def test_sample_buffer_unbounded_never_drops():
+    buf = SampleBuffer(capacity=4)
+    for i in range(100):
+        buf.append(0, 1.0)
+    assert buf.overruns == 0
+    assert len(buf.drain()[0]) == 100

@@ -1,0 +1,266 @@
+"""Chaos suite for the serving seam: kill/restore, snapshot faults,
+overload shedding, energy fences.
+
+The acceptance scenario: an engine killed at an injected
+``serve.step.crash``, restored from its last durable snapshot, yields
+per-request token streams bit-exact to the uninterrupted run, with full
+``ServeReport`` provenance (including shed and budget-aborted requests)
+and no energy sample double-published past the spill-epoch fence.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.core import exchange as ex
+from repro.core import faults
+from repro.core.faults import (CorruptShardError, FaultPlan, InjectedCrash,
+                               LeafFault, MissingArtifactError, SpillError,
+                               TornWriteError)
+from repro.models import model as M
+from repro.serve.engine import Engine, PhaseEnergyAccountant, Request, ServeConfig
+from repro.serve.recovery import restore_engine, snapshot
+from repro.serve.scheduler import OverloadPolicy, ServeScheduler
+
+pytestmark = pytest.mark.chaos
+
+ARCH = "qwen3-1.7b"
+
+
+@pytest.fixture(scope="module")
+def arch_setup():
+    cfg = get_config(ARCH).reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, n, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, size=int(rng.integers(3, 8)))
+            .astype(np.int32) for _ in range(n)]
+
+
+def _drive(eng, done):
+    """Step until queue + slots drain; appends finished to ``done``."""
+    for _ in range(500):
+        done += eng.step()
+        if (not any(r is not None for r in eng.slot_req)
+                and not len(eng.scheduler.queue)):
+            return
+    raise AssertionError("engine did not drain")
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: kill at serve.step.crash, restore, bit-exact streams +
+# full provenance for every request including shed and budget-aborted.
+# ---------------------------------------------------------------------------
+
+def test_kill_restore_bit_exact_with_provenance(arch_setup, tmp_path):
+    cfg, params = arch_setup
+    scfg = ServeConfig(max_batch=2, max_len=64, step_energy=1.0)
+    prompts = _prompts(cfg, 5)
+    policy = OverloadPolicy(queue_capacity=3, backpressure_at=1,
+                            shed_at=2, widen_at=3)
+
+    def mk_reqs():
+        reqs = [Request(i, prompts[i].copy(), max_new_tokens=5,
+                        priority=i) for i in range(4)]
+        # rid 4: budget covers prefill + 2 decode steps, then aborts.
+        reqs.append(Request(4, prompts[4].copy(), max_new_tokens=16,
+                            priority=9,
+                            energy_budget=len(prompts[4]) + 2.0))
+        return reqs
+
+    def run(eng_factory, snap_dir=None, crash_plan=None):
+        eng = eng_factory()
+        shed_rids = []
+        for r in mk_reqs():
+            try:
+                eng.submit(r)
+            except Exception:        # queue-full rejections are typed+counted
+                shed_rids.append(r.rid)
+        done = []
+        for _ in range(500):
+            if snap_dir is not None and eng.step_count % 2 == 0:
+                eng.snapshot(snap_dir)
+            done += eng.step()
+            if (not any(s is not None for s in eng.slot_req)
+                    and not len(eng.scheduler.queue)):
+                break
+        return eng, done
+
+    # Uninterrupted reference.
+    ref_eng, ref_done = run(lambda: Engine(
+        cfg, params, scfg, scheduler=ServeScheduler(policy)))
+    ref_streams = {r.rid: list(r.out_tokens) for r in ref_done}
+
+    # Interrupted: crash at step 5, restore from last snapshot, finish.
+    snap = str(tmp_path / "snaps")
+    plan = FaultPlan(seed=7, serve_crashes=(5,))
+    with pytest.raises(InjectedCrash):
+        run(lambda: Engine(cfg, params, scfg,
+                           scheduler=ServeScheduler(policy), faults=plan),
+            snap_dir=snap)
+
+    eng2 = restore_engine(cfg, params, scfg, snap)
+    assert eng2.step_count <= 5
+    done2 = []
+    _drive(eng2, done2)
+    got = {r.rid: list(r.out_tokens) for r in done2}
+
+    # Bit-exact: every request that reached a terminal state after the
+    # restore matches the uninterrupted run token for token.
+    for rid, toks in got.items():
+        assert toks == ref_streams[rid], f"request {rid} diverged"
+
+    # Full provenance: every submitted request has a record; the shed
+    # and budget-aborted ones are counted, never silent.
+    rep, ref_rep = eng2.report, ref_eng.report
+    assert {r.rid for r in rep.requests} == set(range(5))
+    by = rep.by_status()
+    assert by == ref_rep.by_status()   # same terminal outcome per request
+    assert rep.aborted_budget == 1 and rep.request(4).status == "aborted_budget"
+    assert rep.shed + rep.rejected_full >= 1
+    assert all(rep.request(r.rid).recovered for r in done2)
+    assert rep.coverage()["counters"]["completed"] == rep.completed
+
+
+# ---------------------------------------------------------------------------
+# Snapshot durability faults: transient typed failures, corruption
+# detection through the shared ckpt codec, missing-artifact typing.
+# ---------------------------------------------------------------------------
+
+def test_snapshot_fault_is_transient_and_typed(arch_setup, tmp_path):
+    cfg, params = arch_setup
+    scfg = ServeConfig(max_batch=1, max_len=32)
+    eng = Engine(cfg, params, scfg,
+                 faults=FaultPlan(seed=0, snapshot_failures=(0,)))
+    eng.add_request(Request(0, _prompts(cfg, 1)[0], max_new_tokens=3))
+    with pytest.raises(TornWriteError):
+        eng.snapshot(str(tmp_path))
+    assert not any((tmp_path / p).exists() for p in ("LATEST",))
+    eng.step()                                  # step clock advances
+    out = eng.snapshot(str(tmp_path))           # transient: next step fine
+    assert out.endswith("snap_000000001")
+    restored = restore_engine(cfg, params, scfg, str(tmp_path))
+    assert restored.step_count == 1
+
+
+def test_snapshot_corruption_surfaces_typed(arch_setup, tmp_path):
+    cfg, params = arch_setup
+    scfg = ServeConfig(max_batch=1, max_len=32)
+    eng = Engine(cfg, params, scfg)
+    eng.add_request(Request(0, _prompts(cfg, 1)[0], max_new_tokens=3))
+    eng.step()
+    with faults.install(FaultPlan(seed=1, leaf_faults=(
+            LeafFault(match="snap_000000001/arr_00000"),))):
+        eng.snapshot(str(tmp_path))             # storage rot on write
+        with pytest.raises(SpillError):         # CRC catches it at read
+            restore_engine(cfg, params, scfg, str(tmp_path))
+
+
+def test_restore_without_snapshot_is_missing_artifact(arch_setup, tmp_path):
+    cfg, params = arch_setup
+    with pytest.raises(MissingArtifactError):
+        restore_engine(cfg, params, ServeConfig(max_batch=1, max_len=32),
+                       str(tmp_path))
+
+
+def test_restore_rejects_geometry_mismatch(arch_setup, tmp_path):
+    cfg, params = arch_setup
+    scfg = ServeConfig(max_batch=2, max_len=32)
+    eng = Engine(cfg, params, scfg)
+    eng.snapshot(str(tmp_path))
+    with pytest.raises(ValueError):
+        restore_engine(cfg, params, ServeConfig(max_batch=4, max_len=32),
+                       str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# Overload: flood past capacity — backpressure, shed, sampling-period
+# widening; every transition and victim recorded.
+# ---------------------------------------------------------------------------
+
+def test_overload_ladder_sheds_and_widens(arch_setup):
+    cfg, params = arch_setup
+    scfg = ServeConfig(max_batch=1, max_len=48)
+    acct = PhaseEnergyAccountant(period=2e-3, track_requests=True)
+    sched = ServeScheduler(OverloadPolicy(
+        queue_capacity=8, backpressure_at=2, shed_at=4, widen_at=6))
+    eng = Engine(cfg, params, scfg, accountant=acct, scheduler=sched)
+    prompts = _prompts(cfg, 8, seed=11)
+    with acct:
+        submitted = rejected = 0
+        for i in range(8):
+            try:
+                eng.submit(Request(i, prompts[i], max_new_tokens=3,
+                                   priority=i % 3))
+                submitted += 1
+            except Exception:
+                rejected += 1
+        done = []
+        # One step under full load: ladder must escalate to `degraded`
+        # and widen the accountant's sampling period.
+        done += eng.step()
+        assert eng.scheduler.level == 3
+        assert acct.sampling_period == pytest.approx(
+            2e-3 * sched.policy.widen_factor)
+        _drive(eng, done)
+    # De-escalated on drain: period restored, transitions recorded.
+    assert acct.sampling_period == pytest.approx(2e-3)
+    rep = eng.report
+    assert rep.shed >= 1                       # ladder shed queued work
+    assert [t[2] for t in rep.transitions][-1] == "normal"
+    assert rep.completed == len([r for r in done
+                                 if r.status == "completed"])
+    # Conservation of provenance: every submitted request terminal
+    # (rejected_full is a sub-count of shed, not additive).
+    assert rep.completed + rep.shed == 8
+    assert rep.rejected_full <= rep.shed
+
+
+# ---------------------------------------------------------------------------
+# Energy fence: a restored accountant resumes behind the spill-epoch
+# fence — re-publishing pre-crash epochs is refused, never doubled.
+# ---------------------------------------------------------------------------
+
+def test_energy_spill_fence_never_double_counts(arch_setup, tmp_path):
+    cfg, params = arch_setup
+    scfg = ServeConfig(max_batch=1, max_len=32)
+    spill = str(tmp_path / "shards")
+    snaps = str(tmp_path / "snaps")
+    prompts = _prompts(cfg, 2, seed=5)
+
+    acct = PhaseEnergyAccountant(period=1e-3, spill_dir=spill,
+                                 spill_every=1)
+    eng = Engine(cfg, params, scfg, accountant=acct,
+                 faults=FaultPlan(seed=2, serve_crashes=(3,)))
+    with pytest.raises(InjectedCrash):
+        with acct:
+            eng.submit(Request(0, prompts[0], max_new_tokens=8))
+            while True:
+                eng.snapshot(snaps)
+                eng.step()
+    published = ex.restore_shard(spill, 0)[0].counts.sum()
+
+    # Restart: same spill_dir/host_id resumes from LATEST shard; the
+    # snapshot's fence records what was durable at kill time.
+    acct2 = PhaseEnergyAccountant(period=1e-3, spill_dir=spill,
+                                  spill_every=1)
+    assert acct2.agg.counts.sum() == published     # resumed, not reset
+    eng2 = restore_engine(cfg, params, scfg, snaps, accountant=acct2)
+    assert eng2.restored_fence is not None
+    assert acct2.epoch >= (eng2.restored_fence["last_spill_epoch"] or 0)
+    with acct2:
+        done = []
+        _drive(eng2, done)
+    final = ex.restore_shard(spill, 0)[0]
+    # Monotone fence: the re-published shard extends the pre-crash one
+    # (cumulative counts never shrink and are exactly the resumed
+    # aggregator's — pre-crash samples ride once, not twice).
+    assert final.counts.sum() == acct2.agg.counts.sum() >= published
+    # And the spiller refuses to travel back behind the fence.
+    with pytest.raises(ValueError):
+        ex.ShardSpiller(spill, 0).spill(acct2.agg, epoch=1)

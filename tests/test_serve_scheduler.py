@@ -1,0 +1,217 @@
+"""Admission control, deadlines, energy budgets, overload ladder.
+
+The scheduler half is pure host logic (no model needed); the engine
+integration tests run on one reduced architecture. Everything is keyed
+on the deterministic engine step clock, so every scenario here is
+exactly replayable.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.faults import FaultPlan
+from repro.serve.scheduler import (AdmissionQueue, DeadlineExceededError,
+                                   EnergyBudgetExceededError, OverloadPolicy,
+                                   QueueFullError, RequestRecord, ServeReport,
+                                   ServeScheduler, AdmissionError)
+
+
+class _Req:
+    """Duck-typed stand-in for engine.Request at the scheduler seam."""
+
+    def __init__(self, rid, priority=0, deadline=None):
+        self.rid = rid
+        self.priority = priority
+        self.deadline = deadline
+        self.status = "queued"
+        self.submit_step = 0
+
+
+# -- queue order ---------------------------------------------------------------
+
+def test_pop_best_priority_then_fifo():
+    q = AdmissionQueue(8)
+    q.push(0, 0, "a")
+    q.push(2, 1, "b")
+    q.push(2, 2, "c")
+    q.push(1, 3, "d")
+    assert [q.pop_best() for _ in range(4)] == ["b", "c", "d", "a"]
+    assert q.pop_best() is None
+
+
+def test_shed_worst_lowest_priority_youngest_first():
+    q = AdmissionQueue(8)
+    q.push(1, 0, "old-low")
+    q.push(1, 1, "new-low")
+    q.push(5, 2, "high")
+    assert q.shed_worst() == "new-low"
+    assert q.shed_worst() == "old-low"
+    assert q.shed_worst() == "high"
+
+
+def test_queue_capacity_enforced():
+    q = AdmissionQueue(2)
+    q.push(0, 0, "a")
+    q.push(0, 1, "b")
+    with pytest.raises(QueueFullError):
+        q.push(9, 2, "c")
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(min_value=1, max_value=30),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_admission_order_deterministic_under_equal_priorities(n, seed):
+    # Satellite: under equal priorities, admission order is exactly the
+    # submit order — a pure function of the submit sequence, never of
+    # hashes, arrival timing, or dict iteration order.
+    rng = np.random.default_rng(seed)
+    prio = int(rng.integers(0, 3))
+    q1, q2 = AdmissionQueue(n), AdmissionQueue(n)
+    for s in range(n):
+        q1.push(prio, s, s)
+        q2.push(prio, s, s)
+    order1 = [q1.pop_best() for _ in range(n)]
+    order2 = [q2.pop_best() for _ in range(n)]
+    assert order1 == order2 == list(range(n))
+
+
+# -- policy validation ---------------------------------------------------------
+
+def test_policy_threshold_ordering_validated():
+    with pytest.raises(ValueError):
+        OverloadPolicy(queue_capacity=8, backpressure_at=4, shed_at=2,
+                       widen_at=6)
+    with pytest.raises(ValueError):
+        OverloadPolicy(queue_capacity=4, backpressure_at=1, shed_at=2,
+                       widen_at=8)
+    with pytest.raises(ValueError):
+        OverloadPolicy(widen_factor=0.5)
+
+
+# -- scheduler semantics -------------------------------------------------------
+
+def _sched(cap=4, bp=None, shed=None, widen=None, **kw):
+    bp = bp if bp is not None else max(1, cap // 2)
+    shed = shed if shed is not None else max(bp, cap - 1)
+    widen = widen if widen is not None else cap
+    return ServeScheduler(OverloadPolicy(
+        queue_capacity=cap, backpressure_at=bp, shed_at=shed,
+        widen_at=widen), **kw)
+
+
+def test_queue_full_rejection_is_counted_and_typed():
+    s = _sched(cap=2)
+    s.submit(_Req(0), 0)
+    s.submit(_Req(1), 0)
+    with pytest.raises(QueueFullError):
+        s.submit(_Req(2), 0)
+    assert s.report.rejected_full == 1
+    assert s.report.request(2).status == "shed"
+    assert s.report.request(2).reason == "queue_full"
+
+
+def test_higher_priority_displaces_queued_lowest():
+    s = _sched(cap=2)
+    s.submit(_Req(0, priority=0), 0)
+    s.submit(_Req(1, priority=1), 0)
+    s.submit(_Req(2, priority=5), 1)      # displaces rid 0
+    assert s.report.request(0).status == "shed"
+    assert s.report.shed == 1
+    assert s.admit(1).rid == 2
+    assert s.admit(1).rid == 1
+
+
+def test_deadline_expires_in_queue():
+    s = _sched()
+    s.submit(_Req(0, deadline=2), 0)
+    s.submit(_Req(1), 0)
+    assert s.admit(5).rid == 1            # rid 0 expired waiting
+    rec = s.report.request(0)
+    assert rec.status == "aborted_deadline"
+    assert s.report.aborted_deadline == 1
+    with pytest.raises(DeadlineExceededError):
+        s.submit(_Req(2, deadline=0), 5)
+
+
+def test_ladder_sheds_and_records_transitions():
+    widened = []
+    s = _sched(cap=6, bp=2, shed=4, widen=5)
+    for rid in range(5):
+        s.submit(_Req(rid, priority=rid), 0)
+    s.tick(0, widen_fn=widened.append, unwiden_fn=lambda: widened.append(0))
+    # shed down to backpressure_at=2, lowest-priority victims first
+    assert s.report.shed == 3
+    assert [r.rid for r in s.report.requests
+            if r.status == "shed"] == [0, 1, 2]
+    assert widened == [s.policy.widen_factor]
+    # drain the queue -> de-escalates and unwidens
+    while s.admit(1) is not None:
+        pass
+    s.tick(1, widen_fn=widened.append,
+           unwiden_fn=lambda: widened.append(0))
+    assert widened[-1] == 0
+    levels = [(t[1], t[2]) for t in s.report.transitions]
+    assert levels[0][1] == "degraded"
+    assert levels[-1][1] == "normal"
+
+
+def test_injected_admission_fault_is_counted():
+    plan = FaultPlan(seed=0, admission_faults=(1,))
+    s = _sched(faults=plan)
+    s.submit(_Req(0), 0)
+    with pytest.raises(AdmissionError):
+        s.submit(_Req(1), 0)              # submit seq 1 faulted
+    assert s.report.admission_faults == 1
+    s.submit(_Req(2), 0)                  # transient: next submit fine
+    assert len(s.queue) == 2
+
+
+def test_duplicate_rid_rejected():
+    s = _sched()
+    s.submit(_Req(7), 0)
+    with pytest.raises(ValueError):
+        s.submit(_Req(7), 1)
+
+
+# -- report provenance ---------------------------------------------------------
+
+def test_report_round_trips_json():
+    s = _sched(cap=2)
+    s.submit(_Req(0), 0)
+    s.submit(_Req(1, priority=3), 0)
+    with pytest.raises(QueueFullError):
+        s.submit(_Req(2), 1)
+    s.report.transition(1, "normal", "backpressure", "depth 2")
+    blob = s.report.to_json()
+    back = ServeReport.from_json(blob)
+    assert back.to_json() == blob
+    assert back.rejected_full == 1
+    assert back.request(1).priority == 3
+    cov = back.coverage()
+    assert cov["counters"]["rejected_full"] == 1
+    assert "2" in cov["requests"]
+
+
+def test_unknown_status_rejected():
+    rep = ServeReport()
+    rep.open(0, status="queued", step=0)
+    with pytest.raises(ValueError):
+        rep.set_status(0, "vanished")
+
+
+def test_record_statuses_cover_contract():
+    # The provenance vocabulary the ISSUE pins: every terminal path has
+    # a distinct, countable status.
+    rec = RequestRecord(rid=0, status="queued")
+    for status in ("admitted", "completed", "shed", "aborted_deadline",
+                   "aborted_budget", "recovered"):
+        rep = ServeReport()
+        rep.open(0, status="queued", step=0)
+        rep.set_status(0, status, step=1)
+    assert rec.to_json()["rid"] == 0
