@@ -14,7 +14,7 @@ def main() -> None:
     from benchmarks import (aggregation, domains, exchange, kernels,
                             kmeans_hotspot, memory_power, ocean_finegrain,
                             pipeline, sampling_period, serve_recovery,
-                            spill, validation)
+                            sketch, spill, validation)
     mods = [
         ("sampling_period (Fig 4/5)", sampling_period),
         ("validation (Fig 6 / §5)", validation),
@@ -25,6 +25,7 @@ def main() -> None:
         ("aggregation (streaming engine)", aggregation),
         ("exchange (cross-host shard reduction)", exchange),
         ("spill (full vs incremental delta publishing)", spill),
+        ("sketch (bounded heavy-hitters memory sweep)", sketch),
         ("pipeline (device-resident fused sampling)", pipeline),
         ("domains (multi-rail attribution, D=1 vs D=3)", domains),
         ("serve_recovery (shed rate, snapshot + restore cost)",

@@ -1,0 +1,144 @@
+"""Bounded-state attribution benchmark: heavy-hitters tier memory sweep.
+
+The exact combination table grows with every distinct (region, worker)
+row it ever sees — unbounded on adversarial/streaming workloads (ALEA
+targets always-on profiling; a profiler whose RSS tracks workload
+cardinality is an outage, not an observer). The heavy-hitters tier
+(``StreamingCombinationAggregator(k=...)``, see ``repro.core.sketch``)
+caps the table at k identified rows plus one ``other`` row per region
+while keeping per-region totals bit-exact.
+
+This benchmark streams ``ALEA_BENCH_SKETCH_DISTINCT`` (default
+``10000,100000,1000000``) distinct combination rows through the exact
+aggregator and through bounded tables at k ∈ {256, 4096}, recording
+resident rows and attribution-state bytes (key matrix + counts + Σpow
++ Σpow²) at each cardinality.
+
+Emits CSV rows plus ``BENCH_sketch.json``. **Gate** (checked into the
+JSON as ``gate_pass``): each bounded configuration's state bytes stay
+flat within 1.5× across the full sweep — 100× distinct growth must not
+buy more than 1.5× memory — while exact state grows with cardinality.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.streaming import StreamingCombinationAggregator
+
+_JSON_PATH = pathlib.Path(__file__).with_name("BENCH_sketch.json")
+
+REGIONS = 8
+CHUNK = 1 << 15
+HEAD = 128          # hot rows repeated every chunk (the heavy hitters)
+GATE_RATIO = 1.5
+
+
+def _distinct_sweep() -> list[int]:
+    raw = os.environ.get("ALEA_BENCH_SKETCH_DISTINCT",
+                         "10000,100000,1000000")
+    return [int(v) for v in raw.split(",") if v]
+
+
+def _state_bytes(agg: StreamingCombinationAggregator) -> int:
+    """Resident attribution state: key matrix + (counts, Σpow, Σpow²)."""
+    n = len(agg.interner)
+    mat = agg.interner.combo_matrix()
+    return int(mat.nbytes + agg.agg.counts[:n].nbytes
+               + agg.agg.chan_psum[:n].nbytes
+               + agg.agg.chan_psumsq[:n].nbytes)
+
+
+def _stream(distinct: int, seed: int):
+    """Chunked (rows, powers) stream covering ``distinct`` unique
+    width-2 rows once each (the unbounded tail), plus a hot HEAD reseen
+    every chunk so the tier has heavy hitters to keep."""
+    rng = np.random.default_rng(seed)
+    ids = rng.permutation(distinct)
+    head = np.stack([np.arange(HEAD) % REGIONS,
+                     np.arange(HEAD) // REGIONS], 1).astype(np.int64)
+    for lo in range(0, distinct, CHUNK):
+        tail_ids = ids[lo:lo + CHUNK]
+        tail = np.stack([tail_ids % REGIONS,
+                         HEAD // REGIONS + tail_ids // REGIONS],
+                        1).astype(np.int64)
+        mat = np.concatenate([head, tail])
+        pows = rng.integers(50 * 64, 200 * 64, len(mat)) / 64.0
+        yield mat, pows
+
+
+def _run_mode(k: int | None, distinct: int) -> dict:
+    agg = StreamingCombinationAggregator(k=k)
+    t0 = time.perf_counter()
+    n_samples = 0
+    for mat, pows in _stream(distinct, seed=0):
+        agg.update(mat, pows)
+        n_samples += len(mat)
+    dt = time.perf_counter() - t0
+    return {"rows": len(agg.interner),
+            "state_bytes": _state_bytes(agg),
+            "tail_folds": agg.tail_folds,
+            "evictions": agg.evictions,
+            "sec": dt,
+            "us_per_ksample": dt / n_samples * 1e9}
+
+
+def run(verbose: bool = True) -> list[str]:
+    sweep = _distinct_sweep()
+    ks: list[int | None] = [None, 256, 4096]
+
+    record: dict = {"distinct_sweep": sweep, "regions": REGIONS,
+                    "head": HEAD, "gate_ratio": GATE_RATIO, "modes": {}}
+    out_rows: list[tuple[str, float, str]] = []
+    for k in ks:
+        label = "exact" if k is None else f"k{k}"
+        per = {}
+        for d in sweep:
+            per[str(d)] = _run_mode(k, d)
+        record["modes"][label] = per
+        worst = per[str(max(sweep))]
+        out_rows.append((f"sketch/{label}/d{max(sweep)}",
+                         worst["us_per_ksample"],
+                         f"{worst['rows']} rows "
+                         f"{worst['state_bytes'] / 1024:.1f} KiB "
+                         f"{worst['tail_folds']} folds"))
+
+    # Gate: bounded state flat within GATE_RATIO across the sweep.
+    # Only saturated points count (distinct >= k): below saturation the
+    # table legitimately tracks cardinality — the cap hasn't engaged.
+    gate = True
+    for k in ks:
+        if k is None:
+            continue
+        per = record["modes"][f"k{k}"]
+        sizes = [per[str(d)]["state_bytes"] for d in sweep if d >= k]
+        if len(sizes) < 2:
+            continue
+        ratio = max(sizes) / min(sizes)
+        record["modes"][f"k{k}"]["spread"] = ratio
+        gate &= ratio <= GATE_RATIO
+    record["gate_pass"] = bool(gate)
+    exact_growth = (
+        record["modes"]["exact"][str(max(sweep))]["state_bytes"]
+        / record["modes"]["exact"][str(min(sweep))]["state_bytes"])
+    record["exact_growth"] = exact_growth
+    out_rows.append(("sketch/gate_flat_memory", 0.0,
+                     f"{'PASS' if gate else 'FAIL'}: bounded spread <= "
+                     f"{GATE_RATIO}x while exact grew {exact_growth:.0f}x"))
+
+    _JSON_PATH.write_text(json.dumps(record, indent=2))
+    if verbose:
+        for nm, us, d_ in out_rows:
+            print(f"{nm:40s} {us:12.1f}us {d_}")
+        print(f"wrote {_JSON_PATH}")
+    return [csv_row(nm, us, d_) for nm, us, d_ in out_rows]
+
+
+if __name__ == "__main__":
+    run()

@@ -18,9 +18,13 @@ jitted hot paths *without running them* and reports, per path:
   implicit ``convert_element_type`` widenings to f64.
 
 Audited paths: the device-pipeline region run and fused combo chunk
-step at D=1 and D=3 (scalar vs multi-rail substrate), the serve decode
-step for each KV-cache family (dense / MoE / recurrent / hybrid), and
-the exchange collectives (psum all-reduce, combination all-gather).
+step at D=1 and D=3 (scalar vs multi-rail substrate), the miss-path
+admit-or-fold scatter (``_combo_fold`` — the step bounded runs lean on
+whenever the heavy-hitters tier folds tail combinations, so its carry
+donation and f64 inventory are ratcheted like the steady-state step's),
+the serve decode step for each KV-cache family (dense / MoE /
+recurrent / hybrid), and the exchange collectives (psum all-reduce,
+combination all-gather).
 Path construction is shape-only where params would be large
 (``jax.eval_shape``); nothing here compiles or executes device code
 beyond tracing/lowering.
@@ -332,6 +336,55 @@ def _combo_d1() -> PathReport:
 def _combo_d3() -> PathReport:
     stats, donated = _combo_audit(domains=True)
     return PathReport.from_stats("device_pipeline/combo_step/d3", stats,
+                                 donated=donated)
+
+
+def _fold_audit(domains: bool) -> tuple:
+    """(stats, donation) of the miss-path admit-or-fold scatter.
+
+    ``_combo_fold`` is the host-assisted half of every miss chunk: the
+    recomputed per-sample channel powers scatter into the donated carry
+    at host-resolved combination ids (padded with the out-of-bounds cap
+    index). Bounded runs (``max_combinations``) take this path for all
+    folded-tail traffic, so it is steady-state there — donation of the
+    5 carry leaves must alias or peak memory doubles per miss chunk.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core import device_pipeline as dp
+
+    n_chan = dp.num_channels(3 if domains else 1)
+    cap = dp._TABLE_MIN
+    with enable_x64():
+        stat_shape = (cap,) if n_chan == 1 else (cap, n_chan)
+        carry = (jnp.zeros(cap, jnp.int64),
+                 jnp.zeros(stat_shape, jnp.float64),
+                 jnp.zeros(stat_shape, jnp.float64),
+                 jnp.zeros((), jnp.int64),
+                 -jnp.ones((), jnp.float64))
+        pows = (jnp.zeros(_CHUNK, jnp.float64) if n_chan == 1
+                else jnp.zeros((n_chan, _CHUNK), jnp.float64))
+        args = (carry, jnp.full(_CHUNK, cap, jnp.int64), pows,
+                jnp.zeros(_CHUNK, jnp.bool_))
+        jaxpr = jax.make_jaxpr(dp._combo_fold)(*args)
+        donated = donation_of_jitted(dp._combo_fold_jit, *args,
+                                     expected=len(jax.tree.leaves(carry)))
+    return audit_jaxpr(jaxpr), donated
+
+
+@_hot_path("device_pipeline/combo_fold/d1")
+def _fold_d1() -> PathReport:
+    stats, donated = _fold_audit(domains=False)
+    return PathReport.from_stats("device_pipeline/combo_fold/d1", stats,
+                                 donated=donated)
+
+
+@_hot_path("device_pipeline/combo_fold/d3")
+def _fold_d3() -> PathReport:
+    stats, donated = _fold_audit(domains=True)
+    return PathReport.from_stats("device_pipeline/combo_fold/d3", stats,
                                  donated=donated)
 
 

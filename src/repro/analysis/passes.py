@@ -221,6 +221,11 @@ DETERMINISM_CRITICAL_MODULES = (
     "core/device_pipeline.py",
     "core/faults.py",
     "core/exchange.py",
+    # Heavy-hitters eviction order and hash-range ownership must be
+    # pure functions of the arrival stream: a wall-clock (or unseeded
+    # random) tiebreak in the sketch would make bounded-state merges
+    # and kill/restore replays diverge run-to-run.
+    "core/sketch.py",
     "kernels/sample_attr/*",
     # Serving-seam replayability: deadlines, budgets, admission order
     # and snapshot/restore are all keyed on the engine step clock — a

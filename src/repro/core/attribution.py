@@ -27,6 +27,20 @@ class AttributionReport:
             return []
         return [f"COVERAGE (partial fleet): {cov.get('summary', cov)}"]
 
+    def _tail_lines(self) -> list[str]:
+        """Bounded-state disclosure (mirrors COVERAGE): a top-k + 'other'
+        combination table coarsened tail identity, and every human
+        rendering must say so — per-region totals stay exact, but the
+        per-combination rows no longer enumerate the full key space."""
+        tail = self.estimates.tail
+        if not tail:
+            return []
+        return [f"TAIL (bounded combinations, k={tail.get('k')}): "
+                f"{tail.get('tail_folds', 0)} fold event(s), "
+                f"{tail.get('evictions', 0)} eviction(s) into "
+                f"{tail.get('other_rows', 0)} per-region 'other' row(s); "
+                f"per-region totals exact, tail identity coarsened"]
+
     def table(self, top: int | None = None) -> str:
         rows = sorted(self.estimates.regions, key=lambda r: -r.e_hat)
         if top:
@@ -44,6 +58,7 @@ class AttributionReport:
                      f"{self.estimates.total_time:10.4f} {'':8s} {'':9s} "
                      f"{self.estimates.total_energy:11.2f}")
         lines.extend(self._coverage_lines())
+        lines.extend(self._tail_lines())
         return "\n".join(lines)
 
     def csv(self) -> str:
@@ -90,6 +105,7 @@ class AttributionReport:
             tot += f" {totals[d]:14.2f} {share:5.1f}"
         lines.append(tot)
         lines.extend(self._coverage_lines())
+        lines.extend(self._tail_lines())
         return "\n".join(lines)
 
     def domain_csv(self) -> str:

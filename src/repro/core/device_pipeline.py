@@ -83,6 +83,7 @@ from jax.experimental import enable_x64
 
 from repro.core.sensors import (DEFAULT_IDLE_POWER, SensorSpec,
                                 _TraceSensorBase, idle_channel)
+from repro.core.sketch import SketchConfigError, other_row
 from repro.core.streaming import (CombinationInterner,
                                   StreamingCombinationAggregator,
                                   channels_for)
@@ -738,6 +739,7 @@ def _build_table(interner: CombinationInterner, cap: int, width: int,
 def run_combo_pipeline(dtl: DeviceTimeline, spec: SensorSpec, *,
                        period: float, jitter: float = 200e-6, seed: int = 0,
                        chunk_size: int = DEFAULT_CHUNK,
+                       max_combinations: int | None = None,
                        stats: dict | None = None
                        ) -> tuple[StreamingCombinationAggregator, int]:
     """Fused multi-worker (§4.4) combination attribution.
@@ -751,16 +753,41 @@ def run_combo_pipeline(dtl: DeviceTimeline, spec: SensorSpec, *,
     which the rebuilt table is re-uploaded; with a stable combination set
     that happens O(distinct combos / chunk) times total.
 
+    ``max_combinations`` bounds the attribution state (heavy-hitters
+    tier, see :mod:`repro.core.sketch`): the miss path *admits* new
+    combinations while fewer than ``max_combinations`` identified rows
+    exist, and *folds* later arrivals into their region's ``other``
+    sentinel row — the device table, carry and final aggregator stay
+    O(max_combinations + regions) instead of growing with the distinct
+    count. Per-region sample counts stay exact; tail identity coarsens.
+    Folded (non-admitted) combinations never enter the device table, so
+    chunks carrying tail traffic keep taking the host fold path —
+    bounded memory trades away the tail's zero-transfer steady state,
+    never correctness. With ``max_combinations >= distinct`` nothing
+    folds and the result is bit-exact to the unbounded run.
+
     Returns ``(aggregator, n_samples)`` — the aggregator is a regular
     :class:`StreamingCombinationAggregator`, so merge/exchange/estimates
     compose exactly as with the host path. ``stats``, if given, records
     ``chunks`` and ``miss_chunks`` (host-fallback count — the
-    steady-state zero-transfer claim is ``miss_chunks ≪ chunks``).
+    steady-state zero-transfer claim is ``miss_chunks ≪ chunks``) plus,
+    in bounded mode, ``tail_folds``.
     """
     _check_sampling_args(spec, period, jitter)
     _check_spec_domains(spec, dtl)
     W = dtl.num_workers
+    if max_combinations is not None:
+        if max_combinations < 1:
+            raise ValueError(f"max_combinations must be >= 1; "
+                             f"got {max_combinations}")
+        if W < 2:
+            raise SketchConfigError(
+                "bounded combination attribution needs >= 2 workers (the "
+                "region axis plus at least one folded axis); at W=1 use "
+                "the region pipeline")
     miss_chunks = 0
+    tail_folds = 0
+    other_by_region: dict[int, int] = {}
     n_chan = num_channels(dtl.num_domains)
     pack = _pack_spec(dtl.num_regions, W)
     interner = CombinationInterner()
@@ -794,7 +821,35 @@ def run_combo_pipeline(dtl: DeviceTimeline, spec: SensorSpec, *,
                     t_end_j, prev_in)
             valid = np.asarray(valid_dev)
             rows = np.asarray(rid_dev).T[valid]
-            cids = interner.encode(rows.astype(np.int64))
+            if max_combinations is None:
+                cids = interner.encode(rows.astype(np.int64))
+            else:
+                # Admit-or-fold (bounded tier): intern new rows while
+                # fewer than max_combinations identified rows exist;
+                # later arrivals fold into their region's `other`
+                # sentinel row, so the table/carry stop growing. Folded
+                # keys stay out of the device table — their traffic
+                # keeps re-missing — but each miss lands here and folds
+                # exactly once per sample, so nothing is lost.
+                uniq, inverse = np.unique(rows.astype(np.int64), axis=0,
+                                          return_inverse=True)
+                uids = np.empty(len(uniq), np.int64)
+                for i in range(len(uniq)):
+                    key = tuple(int(v) for v in uniq[i])
+                    cid = interner.find_row(uniq[i])
+                    if cid is None:
+                        resident = len(interner) - len(other_by_region)
+                        if resident < max_combinations:
+                            cid = interner.intern(key)
+                        else:
+                            region = key[0]
+                            cid = other_by_region.get(region)
+                            if cid is None:
+                                cid = interner.intern(other_row(region, W))
+                                other_by_region[region] = cid
+                            tail_folds += int(np.sum(inverse == i))
+                    uids[i] = cid
+                cids = uids[inverse.reshape(-1)]
             if len(interner) > cap:
                 new_cap = 1 << (len(interner) - 1).bit_length()
                 pad = new_cap - cap
@@ -824,11 +879,17 @@ def run_combo_pipeline(dtl: DeviceTimeline, spec: SensorSpec, *,
     if stats is not None:
         stats["chunks"] = k_chunks
         stats["miss_chunks"] = miss_chunks
+        if max_combinations is not None:
+            stats["tail_folds"] = tail_folds
     if n == 0:
         raise ValueError("run too short for sampling period")
     agg = StreamingCombinationAggregator.from_table(
         interner.combo_matrix(), counts, psum, psumsq,
-        domains=dtl.domains)
+        domains=dtl.domains, k=max_combinations)
+    if max_combinations is not None:
+        # from_table re-counts nothing; carry the pipeline's fold
+        # provenance so tail_info() discloses what happened on device.
+        agg.tail_folds += tail_folds
     return agg, n
 
 

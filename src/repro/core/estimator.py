@@ -217,6 +217,12 @@ class EstimateSet:
     # quarantined. None means the statistics were not fleet-gathered or
     # the gather was strict (all-or-nothing), i.e. coverage is total.
     coverage: Mapping | None = None
+    # Bounded-state (heavy-hitters) disclosure: when the combination
+    # table ran with a top-k + per-region ``other`` tier, this carries
+    # the fold counters ({"k", "resident", "other_rows", "tail_folds",
+    # "evictions"}) that back the report's TAIL line. None for exact
+    # tables — per-row identity is complete.
+    tail: Mapping | None = None
 
     @classmethod
     def from_regions(cls, regions: Sequence[RegionEstimate], n_total: int,
@@ -288,7 +294,8 @@ def _build_estimates(counts: np.ndarray, psum: np.ndarray, psumsq: np.ndarray,
                      drop_empty: bool, rail_psum: np.ndarray | None = None,
                      rail_psumsq: np.ndarray | None = None,
                      domains: Sequence[str] | None = None,
-                     coverage: Mapping | None = None) -> EstimateSet:
+                     coverage: Mapping | None = None,
+                     tail: Mapping | None = None) -> EstimateSet:
     """Vectorized Eq. 4-16 over the per-region sufficient statistics.
 
     Pure numpy column math — no per-region Python loop — so multi-worker
@@ -368,7 +375,7 @@ def _build_estimates(counts: np.ndarray, psum: np.ndarray, psumsq: np.ndarray,
         **rails,
     )
     return EstimateSet(table=table, n_total=n, t_exec=float(t_exec),
-                       alpha=alpha, coverage=coverage)
+                       alpha=alpha, coverage=coverage, tail=tail)
 
 
 def estimates_from_statistics(counts: np.ndarray, psum: np.ndarray,
@@ -378,7 +385,8 @@ def estimates_from_statistics(counts: np.ndarray, psum: np.ndarray,
                               rail_psum: np.ndarray | None = None,
                               rail_psumsq: np.ndarray | None = None,
                               domains: Sequence[str] | None = None,
-                              coverage: Mapping | None = None
+                              coverage: Mapping | None = None,
+                              tail: Mapping | None = None
                               ) -> EstimateSet:
     """Build estimates directly from pre-aggregated sufficient statistics.
 
@@ -400,7 +408,7 @@ def estimates_from_statistics(counts: np.ndarray, psum: np.ndarray,
                             else np.asarray(rail_psum),
                             rail_psumsq=None if rail_psumsq is None
                             else np.asarray(rail_psumsq), domains=domains,
-                            coverage=coverage)
+                            coverage=coverage, tail=tail)
 
 
 def estimate_regions(region_ids: np.ndarray, powers: np.ndarray,
@@ -450,11 +458,21 @@ def encode_combinations(region_id_matrix: np.ndarray
     return inverse.astype(np.int64), combos
 
 
+def _combo_field_name(r: int, names: Sequence[str], n_names: int) -> str:
+    """One combination field → display name. Negative ids are the
+    bounded-mode tail sentinel (``sketch.OTHER``): render ``other``, never
+    ``names[-1]`` (Python's end-indexing would silently alias the last
+    region)."""
+    if r < 0:
+        return "other"
+    return names[r] if r < n_names else f"r{r}"
+
+
 def combination_names(combos: Sequence[tuple[int, ...]],
                       names: Sequence[str]) -> list[str]:
     """Human names for combination tuples (shared by one-shot + streaming)."""
     n_names = len(names)
-    return ["+".join(names[r] if r < n_names else f"r{r}" for r in c)
+    return ["+".join(_combo_field_name(r, names, n_names) for r in c)
             for c in combos]
 
 
@@ -471,7 +489,7 @@ def combination_names_from_matrix(combo_matrix: np.ndarray,
     if mat.ndim != 2:
         raise ValueError(f"expected [k, workers]; got shape {mat.shape}")
     n_names = len(names)
-    return ["+".join(names[r] if r < n_names else f"r{r}" for r in row)
+    return ["+".join(_combo_field_name(r, names, n_names) for r in row)
             for row in mat.tolist()]
 
 

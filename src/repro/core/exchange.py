@@ -51,6 +51,20 @@ they normalize to the single-domain in-memory form — so pre-rail spill
 directories keep gathering, including mixed with v2 delta-publishing
 hosts; merges refuse mismatched domain axes loudly.
 
+Schema v3 extends v2 for *bounded-state* combination shards
+(:mod:`repro.core.sketch`): meta keys ``k`` (heavy-hitters capacity),
+``hash_range`` (``[lo, hi)`` splitmix64 ownership interval) and
+``other_rows`` (count of per-region tail-bucket sentinel rows in the
+valid prefix) ride along, and ``schema_version`` becomes 3. The v3 keys
+are emitted **only when non-default** — exact, unsharded shards stay
+byte-identical v2, so pre-bounded readers and golden spill fixtures are
+unaffected. Readers normalize v1/v2 epochs to ``(k=None,
+hash_range=None)`` transparently; merging shards whose bounded configs
+differ refuses with a typed
+:class:`~repro.core.faults.SketchConfigError` (mixed-axis discipline,
+same as the domain axis), and delta chains refuse config drift
+mid-chain.
+
 **Incremental (delta) spills.** Republishing the full shard every epoch
 costs O(rows) bandwidth per epoch — O(run length · rows) per host over a
 long-running serving fleet. :class:`ShardSpiller` instead publishes a
@@ -93,11 +107,12 @@ import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.core import faults as faults_mod
+from repro.core import sketch as sketch_mod
 from repro.core.estimator import AggregateFn
 from repro.core.faults import (CorruptShardError, DeltaMismatchError,
                                InjectedCrash, MissingArtifactError,
-                               QuorumError, SpillError, StaleShardError,
-                               TornWriteError, declare_site)
+                               QuorumError, SketchConfigError, SpillError,
+                               StaleShardError, TornWriteError, declare_site)
 from repro.core.streaming import (StreamingAggregator,
                                   StreamingCombinationAggregator,
                                   channels_for)
@@ -137,6 +152,17 @@ class PackedShard:
     :func:`repro.core.streaming.channels_for`). Single-domain shards
     have C = 1, and serialize 1-D exactly like schema v1 — readers
     normalize either layout into this in-memory form.
+
+    Schema v3 (bounded-state combination shards): ``k`` is the source
+    aggregator's heavy-hitters capacity and ``hash_range`` its ``[lo,
+    hi)`` splitmix64 ownership interval (``None``/``None`` = exact,
+    unsharded — the v1/v2 reading). The config is part of shard
+    identity: merges across differing configs refuse with
+    :class:`~repro.core.faults.SketchConfigError` rather than silently
+    blending incompatible tails. ``tail_folds``/``evictions`` carry the
+    source's cumulative fold provenance — without them a restored host
+    would render a TAIL disclosure claiming zero folds while its table
+    holds ``other`` rows.
     """
 
     counts: np.ndarray            # int64 [cap]
@@ -145,6 +171,10 @@ class PackedShard:
     n_rows: int
     combos: np.ndarray | None = None   # int64 [cap, width] or None
     domains: tuple[str, ...] = ("total",)
+    k: int | None = None               # heavy-hitters capacity (None = exact)
+    hash_range: tuple[int, int] | None = None   # [lo, hi) ownership
+    tail_folds: int = 0                # cumulative fold events at pack time
+    evictions: int = 0                 # cumulative evictions at pack time
 
     def __post_init__(self):
         # 1-D statistics are the scalar (v1-layout) form; normalize to
@@ -171,6 +201,19 @@ class PackedShard:
     def num_channels(self) -> int:
         return self.psum.shape[1]
 
+    @property
+    def other_rows(self) -> int:
+        """Tail-bucket sentinel rows in the valid prefix (0 for region
+        shards and exact combination shards)."""
+        if self.combos is None or self.n_rows == 0:
+            return 0
+        return int(sketch_mod.is_other_rows(
+            self.combos[:self.n_rows]).sum())
+
+    @property
+    def bounded(self) -> bool:
+        return self.k is not None or self.hash_range is not None
+
 
 def _pad(arr: np.ndarray, cap: int) -> np.ndarray:
     if len(arr) > cap:
@@ -192,12 +235,15 @@ def pack_shard(agg: StreamingAggregator | StreamingCombinationAggregator,
         combos = agg.interner.combo_matrix()
         n_rows = len(combos)
         cap = n_rows if capacity is None else capacity
+        hr = agg.hash_range
         return PackedShard(
             counts=_pad(agg.agg.counts[:n_rows], cap),
             psum=_pad(agg.agg.chan_psum[:n_rows], cap),
             psumsq=_pad(agg.agg.chan_psumsq[:n_rows], cap),
             n_rows=n_rows, combos=_pad(combos, cap),
-            domains=agg.domains)
+            domains=agg.domains, k=agg.k,
+            hash_range=None if hr is None else hr.as_tuple(),
+            tail_folds=agg.tail_folds, evictions=agg.evictions)
     n_rows = agg.num_regions
     cap = n_rows if capacity is None else capacity
     return PackedShard(counts=_pad(agg.counts, cap),
@@ -216,9 +262,16 @@ def unpack_shard(shard: PackedShard, *,
             shard.counts[:k], shard.psum[:k], shard.psumsq[:k],
             aggregate_fn=aggregate_fn, domains=shard.domains)
     cagg = StreamingCombinationAggregator(aggregate_fn=aggregate_fn,
-                                          domains=shard.domains)
+                                          domains=shard.domains,
+                                          k=shard.k,
+                                          hash_range=shard.hash_range)
     cagg.merge_table(shard.combos[:k], shard.counts[:k],
-                     shard.psum[:k], shard.psumsq[:k])
+                     shard.psum[:k], shard.psumsq[:k],
+                     k=shard.k, hash_range=shard.hash_range)
+    # Reconstruction never folds (resident <= k by construction), so the
+    # packed provenance restores exactly — not additively.
+    cagg.tail_folds = shard.tail_folds
+    cagg.evictions = shard.evictions
     return cagg
 
 
@@ -229,8 +282,14 @@ def _merge_shard_into(agg, shard: PackedShard):
         if shard.combos is None:
             raise ValueError("cannot merge a region shard into a "
                              "combination aggregator")
-        return agg.merge_table(shard.combos[:k], shard.counts[:k],
-                               shard.psum[:k], shard.psumsq[:k])
+        agg.merge_table(shard.combos[:k], shard.counts[:k],
+                        shard.psum[:k], shard.psumsq[:k],
+                        k=shard.k, hash_range=shard.hash_range)
+        # Same tail provenance accounting as merge(): the source's fold
+        # history rides along with its statistics.
+        agg.tail_folds += shard.tail_folds
+        agg.evictions += shard.evictions
+        return agg
     if shard.combos is not None:
         raise ValueError("cannot merge a combination shard into a region "
                          "aggregator")
@@ -339,6 +398,15 @@ def collective_reduce(shards: Sequence[StreamingAggregator |
         packed = [p if p.combos.shape[1] == w else dataclasses.replace(
                       p, combos=np.zeros((p.capacity, w), np.int64))
                   for p in packed]
+        # Bounded-state config is part of shard identity (like the
+        # domain axis). Local shards must agree; remote hosts are
+        # assumed uniform (collectives carry arrays, not manifests).
+        configs = {(p.k, p.hash_range) for p in packed}
+        if len(configs) > 1:
+            raise SketchConfigError(
+                f"mixed bounded-state configs across collective shards: "
+                f"{sorted(configs, key=repr)}")
+        combo_k, combo_hr = configs.pop()
     smap = partial(shard_map, mesh=mesh, in_specs=P(axis), out_specs=P(),
                    check_vma=False)
 
@@ -371,11 +439,14 @@ def collective_reduce(shards: Sequence[StreamingAggregator |
                                            n_rows)
         g_combos, g_counts, g_psum, g_psumsq, g_rows = map(np.asarray, g)
         merged = StreamingCombinationAggregator(aggregate_fn=aggregate_fn,
-                                                domains=domains)
+                                                domains=domains,
+                                                k=combo_k,
+                                                hash_range=combo_hr)
         for h in range(n_hosts):
             k = int(g_rows[h, 0])
             merged.merge_table(g_combos[h, :k], g_counts[h, :k],
-                               g_psum[h, :k], g_psumsq[h, :k])
+                               g_psum[h, :k], g_psumsq[h, :k],
+                               k=combo_k, hash_range=combo_hr)
         return merged
 
 
@@ -419,6 +490,37 @@ def _meta_domains(manifest: dict) -> tuple[str, ...]:
     return tuple(manifest.get("domains", ("total",)))
 
 
+def _meta_bounds(manifest: dict
+                 ) -> tuple[int | None, tuple[int, int] | None, int, int]:
+    """``(k, hash_range, tail_folds, evictions)`` of an epoch dir; v1/v2
+    manifests (no bounded keys) normalize to the exact, unsharded
+    config with zero fold provenance."""
+    k = manifest.get("k")
+    hr = manifest.get("hash_range")
+    return (None if k is None else int(k),
+            None if hr is None else (int(hr[0]), int(hr[1])),
+            int(manifest.get("tail_folds", 0)),
+            int(manifest.get("evictions", 0)))
+
+
+def _bounds_meta(meta: dict, k: int | None,
+                 hash_range: tuple[int, int] | None,
+                 tail_folds: int = 0, evictions: int = 0) -> dict:
+    """Stamp bounded-state keys onto a manifest meta dict — only when
+    non-default, so exact unsharded epochs stay byte-identical schema
+    v2 (pre-bounded readers and golden spill fixtures unaffected)."""
+    if k is None and hash_range is None:
+        return meta
+    meta["schema_version"] = 3
+    if k is not None:
+        meta["k"] = int(k)
+    if hash_range is not None:
+        meta["hash_range"] = [int(hash_range[0]), int(hash_range[1])]
+    meta["tail_folds"] = int(tail_folds)
+    meta["evictions"] = int(evictions)
+    return meta
+
+
 def _spill_packed(path: str, host_id: int, epoch: int, shard: PackedShard,
                   *, extra_meta: dict | None = None) -> str:
     hd = _host_dir(path, host_id)
@@ -429,6 +531,10 @@ def _spill_packed(path: str, host_id: int, epoch: int, shard: PackedShard,
             "n_rows": shard.n_rows,
             "schema": ["counts", "psum", "psumsq"],
             "schema_version": 2, "domains": list(shard.domains)}
+    _bounds_meta(meta, shard.k, shard.hash_range,
+                 shard.tail_folds, shard.evictions)
+    if shard.bounded:
+        meta["other_rows"] = shard.other_rows
     if extra_meta:
         meta["extra"] = dict(extra_meta)
     if shard.combos is not None:
@@ -462,21 +568,25 @@ def spill_shard(path: str, host_id: int, epoch: int,
 def _load_shard(hd: str, epoch: int) -> PackedShard:
     """Load one *full* epoch dir (no chain resolution).
 
-    Accepts both wire schemas: v1 (1-D psum/psumsq, no ``domains`` meta)
-    and v2 ([cap, C] channel matrices + ``domains``) normalize into the
-    same in-memory :class:`PackedShard`.
+    Accepts all wire schemas: v1 (1-D psum/psumsq, no ``domains`` meta),
+    v2 ([cap, C] channel matrices + ``domains``) and v3 (bounded-state
+    ``k``/``hash_range`` keys) normalize into the same in-memory
+    :class:`PackedShard`.
     """
     d = _epoch_dir(hd, epoch)
     arrays, manifest = ckpt.read_manifest_dir(d)
     try:
         named = dict(zip(manifest["schema"], arrays))
         domains = _meta_domains(manifest)
+        k, hash_range, tail_folds, evictions = _meta_bounds(manifest)
         return PackedShard(counts=named["counts"].astype(np.int64),
                            psum=_unwire_stats(named["psum"], domains),
                            psumsq=_unwire_stats(named["psumsq"], domains),
                            n_rows=int(manifest["n_rows"]),
-                           combos=named.get("combos"), domains=domains)
-    except (KeyError, TypeError, ValueError) as e:
+                           combos=named.get("combos"), domains=domains,
+                           k=k, hash_range=hash_range,
+                           tail_folds=tail_folds, evictions=evictions)
+    except (KeyError, TypeError, ValueError, IndexError) as e:
         # The leaves CRC'd clean but the manifest decoded to the wrong
         # structure (a bit flip inside a JSON string still parses):
         # corrupt, not a programming error.
@@ -574,7 +684,8 @@ def tree_reduce(aggs: Sequence):
 
 
 def gather_shards(path: str, *, aggregate_fn: AggregateFn | None = None,
-                  quorum: "QuorumPolicy | None" = None):
+                  quorum: "QuorumPolicy | None" = None,
+                  hash_range=None):
     """Merge every published host shard under ``path`` (reduction tree).
 
     Hosts are taken in id order and merged by :func:`tree_reduce`, so
@@ -591,9 +702,21 @@ def gather_shards(path: str, *, aggregate_fn: AggregateFn | None = None,
     hosts merged at which effective epoch, which were missing, stale or
     quarantined — so downstream reports disclose coverage instead of
     overstating it.
+
+    ``hash_range`` turns the gather into one shard of a per-range
+    shuffle: each restored combination aggregator is projected onto the
+    range (:meth:`~repro.core.streaming.StreamingCombinationAggregator.
+    filter_range`) before the reduction tree, so a caller owning range
+    ``i`` of :meth:`HashRange.split(n) <repro.core.sketch.HashRange.
+    split>` folds only its keys and no host ever materializes the union
+    table. The ``n`` range-gathers partition every (combination, stats)
+    row of the fleet exactly once — same delta-spill + quorum machinery,
+    O(union / n) memory per owner. Region shards have no key hash to
+    shard by, so combining them with ``hash_range`` raises.
     """
     if quorum is not None:
-        return _quorum_gather(path, quorum, aggregate_fn)
+        return _quorum_gather(path, quorum, aggregate_fn,
+                              hash_range=hash_range)
     hosts = list_spilled_hosts(path)
     # Strict mode must not silently shrink the fleet: a host whose LATEST
     # file exists but doesn't parse is corrupt, not "never published"
@@ -609,8 +732,20 @@ def gather_shards(path: str, *, aggregate_fn: AggregateFn | None = None,
     for h in hosts:
         restored = restore_shard(path, h, aggregate_fn=aggregate_fn)
         assert restored is not None       # list_spilled_hosts checked LATEST
-        aggs.append(restored[0])
+        aggs.append(_project_range(restored[0], hash_range))
     return tree_reduce(aggs)
+
+
+def _project_range(agg, hash_range):
+    """Project a restored aggregator onto a gather's owned hash range
+    (identity when no range is requested)."""
+    if hash_range is None:
+        return agg
+    if not isinstance(agg, StreamingCombinationAggregator):
+        raise SketchConfigError(
+            "hash-range gather needs combination shards: region rows "
+            "have no combination key to hash")
+    return agg.filter_range(hash_range)
 
 
 # -- quorum (degraded-mode) gather ---------------------------------------------
@@ -861,7 +996,8 @@ def _scan_last_durable(hd: str):
 
 
 def _quorum_gather(path: str, policy: QuorumPolicy,
-                   aggregate_fn: AggregateFn | None) -> GatherResult:
+                   aggregate_fn: AggregateFn | None,
+                   hash_range=None) -> GatherResult:
     if policy.expected_hosts is not None:
         roster = sorted(set(int(h) for h in policy.expected_hosts))
     else:
@@ -896,7 +1032,9 @@ def _quorum_gather(path: str, policy: QuorumPolicy,
             f"policy requires {policy.min_hosts} ({detail or 'no hosts'})")
     # Host-id order + the order-preserving reduction tree keep merged
     # combination ids deterministic, exactly as in the strict gather.
-    aggs = [unpack_shard(s, aggregate_fn=aggregate_fn) for s in shards]
+    aggs = [_project_range(unpack_shard(s, aggregate_fn=aggregate_fn),
+                           hash_range)
+            for s in shards]
     return GatherResult(agg=tree_reduce(aggs) if aggs else None,
                         hosts=tuple(reports))
 
@@ -926,6 +1064,10 @@ class ShardDelta:
     prev_rows: int                # rows in the state this builds on
     combos_new: np.ndarray | None = None   # int64 [n_rows-prev_rows, width]
     domains: tuple[str, ...] = ("total",)
+    k: int | None = None               # bounded-state config (must be
+    hash_range: tuple[int, int] | None = None   # chain-constant)
+    tail_folds: int = 0                # cumulative provenance at this epoch
+    evictions: int = 0                 # (latest-wins metadata, not summed)
 
     def __post_init__(self):
         if self.psum.ndim == 1:
@@ -951,6 +1093,13 @@ def compute_shard_delta(prev: PackedShard, cur: PackedShard) -> ShardDelta:
         raise DeltaMismatchError("shard kind changed between epochs")
     if prev.domains != cur.domains:
         raise DeltaMismatchError("shard domain axis changed between epochs")
+    if prev.k != cur.k or prev.hash_range != cur.hash_range:
+        # Config drift (a k-shrink, a resharding) rewrites row identity;
+        # a row-sparse overlay can't express it — fresh full base.
+        raise DeltaMismatchError(
+            f"bounded-state config changed between epochs: "
+            f"(k={prev.k}, hash_range={prev.hash_range}) -> "
+            f"(k={cur.k}, hash_range={cur.hash_range})")
     n0, n1 = prev.n_rows, cur.n_rows
     if n1 < n0:
         raise DeltaMismatchError(f"shard shrank: {n1} < {n0} rows")
@@ -973,7 +1122,9 @@ def compute_shard_delta(prev: PackedShard, cur: PackedShard) -> ShardDelta:
                       psum=np.asarray(cur.psum, np.float64)[idx],
                       psumsq=np.asarray(cur.psumsq, np.float64)[idx],
                       n_rows=n1, prev_rows=n0, combos_new=combos_new,
-                      domains=cur.domains)
+                      domains=cur.domains, k=cur.k,
+                      hash_range=cur.hash_range,
+                      tail_folds=cur.tail_folds, evictions=cur.evictions)
 
 
 def _grow_1d(arr: np.ndarray, n: int, dtype) -> np.ndarray:
@@ -1001,6 +1152,11 @@ def apply_shard_delta(shard: PackedShard, delta: ShardDelta) -> PackedShard:
         raise CorruptShardError(
             f"delta chain mismatch: domain axis {delta.domains} "
             f"delta over a {shard.domains} base")
+    if shard.k != delta.k or shard.hash_range != delta.hash_range:
+        raise CorruptShardError(
+            f"delta chain mismatch: bounded-state config "
+            f"(k={delta.k}, hash_range={delta.hash_range}) delta over a "
+            f"(k={shard.k}, hash_range={shard.hash_range}) base")
     n1 = delta.n_rows
     if delta.idx.size and int(delta.idx.max()) >= n1:
         # CRC only covers bytes; a structurally corrupt delta must fail
@@ -1030,7 +1186,10 @@ def apply_shard_delta(shard: PackedShard, delta: ShardDelta) -> PackedShard:
                 raise CorruptShardError("worker width changed mid-chain")
             combos = np.vstack([shard.combos[:shard.n_rows], new])
     return PackedShard(counts=counts, psum=psum, psumsq=psumsq,
-                       n_rows=n1, combos=combos, domains=shard.domains)
+                       n_rows=n1, combos=combos, domains=shard.domains,
+                       k=shard.k, hash_range=shard.hash_range,
+                       tail_folds=delta.tail_folds,
+                       evictions=delta.evictions)
 
 
 def spill_shard_delta(path: str, host_id: int, epoch: int,
@@ -1051,6 +1210,8 @@ def spill_shard_delta(path: str, host_id: int, epoch: int,
             "delta_of": int(delta_of), "base_epoch": int(base_epoch),
             "schema": ["idx", "counts", "psum", "psumsq"],
             "schema_version": 2, "domains": list(delta.domains)}
+    _bounds_meta(meta, delta.k, delta.hash_range,
+                 delta.tail_folds, delta.evictions)
     if extra_meta:
         meta["extra"] = dict(extra_meta)
     if delta.combos_new is not None:
@@ -1069,6 +1230,7 @@ def _load_delta(hd: str, epoch: int) -> ShardDelta:
     try:
         named = dict(zip(manifest["schema"], arrays))
         domains = _meta_domains(manifest)
+        k, hash_range, tail_folds, evictions = _meta_bounds(manifest)
         return ShardDelta(idx=named["idx"].astype(np.int64),
                           counts=named["counts"].astype(np.int64),
                           psum=_unwire_stats(named["psum"], domains),
@@ -1076,8 +1238,9 @@ def _load_delta(hd: str, epoch: int) -> ShardDelta:
                           n_rows=int(manifest["n_rows"]),
                           prev_rows=int(manifest["prev_rows"]),
                           combos_new=named.get("combos_new"),
-                          domains=domains)
-    except (KeyError, TypeError, ValueError) as e:
+                          domains=domains, k=k, hash_range=hash_range,
+                          tail_folds=tail_folds, evictions=evictions)
+    except (KeyError, TypeError, ValueError, IndexError) as e:
         raise CorruptShardError(f"malformed delta manifest in {d}: "
                                 f"{e!r}") from e
 
@@ -1185,7 +1348,8 @@ def _copy_shard(s: PackedShard) -> PackedShard:
         psum=np.array(s.psum, np.float64),
         psumsq=np.array(s.psumsq, np.float64), n_rows=s.n_rows,
         combos=None if s.combos is None else np.array(s.combos, np.int64),
-        domains=s.domains)
+        domains=s.domains, k=s.k, hash_range=s.hash_range,
+        tail_folds=s.tail_folds, evictions=s.evictions)
 
 
 # Injection seam this module owns (see faults.FAULT_SITES): the publish
@@ -1298,7 +1462,10 @@ class ShardSpiller:
                           psum=np.asarray(cur.psum, np.float64)[idx],
                           psumsq=np.asarray(cur.psumsq, np.float64)[idx],
                           n_rows=n1, prev_rows=n0,
-                          combos_new=combos_new, domains=cur.domains)
+                          combos_new=combos_new, domains=cur.domains,
+                          k=cur.k, hash_range=cur.hash_range,
+                          tail_folds=cur.tail_folds,
+                          evictions=cur.evictions)
 
     def spill(self, agg, epoch: int, extra_meta: dict | None = None) -> str:
         """Publish ``agg``'s state as ``epoch`` (delta when profitable)."""
@@ -1322,7 +1489,14 @@ class ShardSpiller:
                 # state stops advancing (the stale-shard failure mode).
                 return _epoch_dir(self._hd, self.epoch)
         cur = pack_shard(agg)
-        trackable = hasattr(agg, "rows_touched_since")
+        # Touch tracking assumes append-only row identity: a bounded
+        # aggregator that has evicted (or shrunk) rewrote combo rows in
+        # place, and a dirty-index overlay against the *old* identity
+        # would silently corrupt the chain. Such aggregators fall back
+        # to the exact snapshot diff, which detects rewrites
+        # (DeltaMismatchError) and publishes a fresh full base.
+        trackable = (hasattr(agg, "rows_touched_since")
+                     and getattr(agg, "append_only", True))
         tracked = (trackable and self._agg_ref is not None
                    and self._agg_ref() is agg)
         full = (self.mode == "full" or not self._published

@@ -44,7 +44,8 @@ import numpy as np
 
 __all__ = [
     "SpillError", "CorruptShardError", "TornWriteError", "StaleShardError",
-    "DeltaMismatchError", "QuorumError", "MissingArtifactError",
+    "DeltaMismatchError", "SketchConfigError", "QuorumError",
+    "MissingArtifactError",
     "InjectedCrash", "ChannelDropout", "LeafFault", "FaultPlan",
     "install", "active_plan", "resolve_plan",
     "FAULT_SITES", "declare_site", "declared_sites",
@@ -83,6 +84,15 @@ class DeltaMismatchError(SpillError, ValueError):
     rows), so no delta can express the epoch. Also a ``ValueError`` so
     the spiller's pre-existing fall-back-to-full-base handler catches it
     unchanged."""
+
+
+class SketchConfigError(SpillError, ValueError):
+    """Bounded-attribution configuration mismatch at a merge/gather seam:
+    two combination tables disagree on top-k capacity, ``other``-bucket
+    layout (sentinel tail rows merged into an exact table), or hash-range
+    ownership. Folding them would silently blend incompatible tails, so
+    the merge refuses. Also a ``ValueError`` (API-misuse flavor), same
+    pattern as :class:`DeltaMismatchError`."""
 
 
 class QuorumError(SpillError):

@@ -43,9 +43,12 @@ from typing import Iterable, Sequence
 import numpy as np
 
 from repro.core import estimator as estimator_mod
+from repro.core import sketch as sketch_mod
 from repro.core.estimator import (AggregateFn, EstimateSet,
                                   combination_names_from_matrix,
                                   estimates_from_statistics)
+from repro.core.faults import SketchConfigError
+from repro.core.sketch import HashRange, combo_hashes
 
 __all__ = [
     "DEFAULT_CHUNK",
@@ -57,6 +60,16 @@ __all__ = [
 ]
 
 DEFAULT_CHUNK = 65536
+
+_I64MAX = np.iinfo(np.int64).max
+
+
+def _as_hash_range(hr) -> HashRange | None:
+    """Normalize a hash-range argument (HashRange, (lo, hi) pair, None)."""
+    if hr is None or isinstance(hr, HashRange):
+        return hr
+    lo, hi = hr
+    return HashRange(int(lo), int(hi))
 
 
 def _as_channels(arr, c: int) -> np.ndarray:
@@ -334,11 +347,13 @@ class StreamingAggregator:
 
     def estimates(self, t_exec: float, names: Sequence[str], *,
                   alpha: float = 0.05, drop_empty: bool = True,
-                  coverage=None) -> EstimateSet:
+                  coverage=None, tail=None) -> EstimateSet:
         """Finalize into an EstimateSet (vectorized Eq. 4-16).
 
         ``coverage`` attaches degraded-gather provenance (see
-        ``exchange.GatherResult``) so reports disclose partial fleets.
+        ``exchange.GatherResult``) so reports disclose partial fleets;
+        ``tail`` attaches bounded-mode fold disclosure (the combination
+        aggregator passes its :meth:`tail_info`).
         """
         d = self.num_domains
         return estimates_from_statistics(
@@ -346,7 +361,8 @@ class StreamingAggregator:
             drop_empty=drop_empty,
             rail_psum=self.rail_psum if d > 1 else None,
             rail_psumsq=self.rail_psumsq if d > 1 else None,
-            domains=self.domains if d > 1 else None, coverage=coverage)
+            domains=self.domains if d > 1 else None, coverage=coverage,
+            tail=tail)
 
 
 class CombinationInterner:
@@ -358,15 +374,38 @@ class CombinationInterner:
     Combination ids are assigned in first-appearance order, so ids are
     stream-order dependent but the (id → tuple) table always maps every
     sample to the same combination tuple as the one-shot path.
+
+    The interner also keeps first-class *pressure counters* so operators
+    can see when the exact path is about to blow up: ``distinct`` (live
+    table size), ``intern_misses`` (total insert-on-miss events — in
+    exact mode equal to ``distinct``, diverging once bounded mode
+    recycles slots) and ``growth_events`` (crossings of the next
+    power-of-two capacity — a proxy for device-table recompiles, which
+    grow the packed key table by doubling). They flow to
+    ``EstimateSet.coverage`` and ``ServeReport.coverage()``.
     """
 
     def __init__(self):
         self._table: dict[bytes, int] = {}
         self._combos: list[tuple[int, ...]] = []
         self._width: int | None = None
+        self.intern_misses = 0
+        self.growth_events = 0
+        self._pow2_cap = 0
 
     def __len__(self) -> int:
         return len(self._combos)
+
+    @property
+    def distinct(self) -> int:
+        """Live table size (id-space width), a pressure counter."""
+        return len(self._combos)
+
+    def _note_miss(self) -> None:
+        self.intern_misses += 1
+        while len(self._combos) > self._pow2_cap:
+            self._pow2_cap = max(1, self._pow2_cap * 2)
+            self.growth_events += 1
 
     @property
     def combos(self) -> list[tuple[int, ...]]:
@@ -411,6 +450,7 @@ class CombinationInterner:
                 cid = len(combos)
                 table[key] = cid
                 combos.append(tuple(int(v) for v in mat[k]))
+                self._note_miss()
             ids[k] = cid
         return ids
 
@@ -422,6 +462,31 @@ class CombinationInterner:
             cid = len(self._combos)
             self._table[key] = cid
             self._combos.append(tuple(int(v) for v in combo))
+            if self._width is None:
+                self._width = len(self._combos[-1])
+            self._note_miss()
+        return cid
+
+    def find_row(self, row: np.ndarray) -> int | None:
+        """Id of an int64 combination row, or None if never interned."""
+        key = np.ascontiguousarray(row, dtype=np.int64).tobytes()
+        return self._table.get(key)
+
+    def replace(self, cid: int, combo: tuple[int, ...]) -> int:
+        """Recycle slot ``cid`` for a new combination (bounded-mode
+        eviction). The old key is forgotten; the slot keeps its id. The
+        caller owns the statistics handoff (fold-then-zero) — this only
+        rewrites identity. Counts as an intern miss (the new key missed),
+        but not as table growth (the id space is unchanged)."""
+        new = tuple(int(v) for v in combo)
+        new_key = np.asarray(new, dtype=np.int64).tobytes()
+        if new_key in self._table:
+            raise ValueError("replacement combination is already interned")
+        old_key = np.asarray(self._combos[cid], dtype=np.int64).tobytes()
+        del self._table[old_key]
+        self._table[new_key] = cid
+        self._combos[cid] = new
+        self.intern_misses += 1
         return cid
 
     def encode(self, region_id_matrix: np.ndarray) -> np.ndarray:
@@ -453,26 +518,63 @@ class StreamingCombinationAggregator:
     appear. ``merge()`` remaps the other shard's combination ids through
     this shard's interner, so multi-host reductions agree with a single
     stream over the concatenated data.
+
+    **Bounded mode** (``k=``): a space-saving-style heavy-hitters tier
+    caps the table at ``k`` identified rows plus one ``other`` row per
+    region (``(region, -1, ..., -1)`` — :data:`repro.core.sketch.OTHER`).
+    A new combination admitted against a full table either evicts the
+    lowest-count resident row (when its chunk weight exceeds that count)
+    — folding the victim's full (counts, Σpow, Σpow²) triple into its
+    region's ``other`` row first, so *per-region totals stay bit-exact*
+    and only tail identity coarsens — or folds straight into ``other``.
+    All decisions derive from the deterministic fold counters (never wall
+    clock), and rows already carrying samples in the current chunk are
+    never its eviction victims (their pending weight isn't folded yet).
+    With ``k >= distinct`` the policy never fires and the bounded path is
+    bit-exact to exact mode (the pinned oracle). Exact mode (``k=None``)
+    stays the default and is completely unchanged.
+
+    **Hash-range ownership** (``hash_range=``): the aggregator declares
+    the splitmix64 hash interval of combination keys it owns; merges
+    refuse rows outside it (and refuse peers declaring a different
+    range), so a per-range shuffle over spilled shards can't
+    double-count. See :meth:`filter_range`.
     """
 
     def __init__(self, *, aggregate_fn: AggregateFn | None = None,
-                 domains: Sequence[str] = ("total",)):
+                 domains: Sequence[str] = ("total",),
+                 k: int | None = None, hash_range=None):
+        if k is not None and k < 1:
+            raise ValueError(f"k must be >= 1 (or None for exact); got {k}")
         self.interner = CombinationInterner()
         self.agg = StreamingAggregator(0, aggregate_fn=aggregate_fn,
                                        domains=domains)
+        self.k = None if k is None else int(k)
+        self.hash_range = _as_hash_range(hash_range)
+        self._other_by_region: dict[int, int] = {}
+        self._other_rows: set[int] = set()
+        self.tail_folds = 0      # fold events (evictions + tail routings)
+        self.evictions = 0       # identified rows evicted (slot recycled)
+        self._recycles = 0       # identity rewrites (breaks append-only)
+        self._min_floor = 0      # lower bound of resident counts (cache)
 
     @classmethod
     def from_table(cls, combo_matrix: np.ndarray, counts: np.ndarray,
                    psum: np.ndarray, psumsq: np.ndarray, *,
                    aggregate_fn: AggregateFn | None = None,
-                   domains: Sequence[str] = ("total",)
+                   domains: Sequence[str] = ("total",),
+                   k: int | None = None, hash_range=None
                    ) -> "StreamingCombinationAggregator":
         """Build from a key table + statistics (device-pipeline results,
         deserialized shards): ids are assigned in the table's row order,
         so a table in interner order round-trips exactly. ``psum``/
-        ``psumsq`` are 1-D (single-domain) or [k, C] channel matrices."""
-        agg = cls(aggregate_fn=aggregate_fn, domains=domains)
-        agg.merge_table(combo_matrix, counts, psum, psumsq)
+        ``psumsq`` are 1-D (single-domain) or [k, C] channel matrices.
+        ``k``/``hash_range`` reconstruct a bounded/sharded table (its
+        ``other`` rows are recognized by their sentinel fields)."""
+        agg = cls(aggregate_fn=aggregate_fn, domains=domains, k=k,
+                  hash_range=hash_range)
+        agg.merge_table(combo_matrix, counts, psum, psumsq, k=k,
+                        hash_range=hash_range)
         return agg
 
     @property
@@ -483,20 +585,172 @@ class StreamingCombinationAggregator:
     def domains(self) -> tuple[str, ...]:
         return self.agg.domains
 
+    @property
+    def other_rows(self) -> int:
+        """Number of per-region ``other`` (tail bucket) rows."""
+        return len(self._other_rows)
+
+    @property
+    def resident(self) -> int:
+        """Identified (non-``other``) rows currently holding identity."""
+        return len(self.interner) - len(self._other_rows)
+
+    @property
+    def append_only(self) -> bool:
+        """True while no slot has ever been recycled — the structural
+        precondition for the spiller's cheap touched-row delta path.
+        Once an eviction (or a :meth:`shrink_k` rebuild) rewrites row
+        identity, dirty-row deltas would silently misattribute recycled
+        slots, so the spiller must fall back to exact diffing."""
+        return self._recycles == 0
+
     def touch_generation(self) -> int:
         """Delegates the spiller's touched-row contract to the inner
-        statistics aggregator (combination rows only ever append)."""
+        statistics aggregator. Only valid for structural-append-only
+        histories — consumers must check :attr:`append_only` (bounded
+        mode recycles slots on eviction, rewriting row identity)."""
         return self.agg.touch_generation()
 
     def rows_touched_since(self, gen: int) -> np.ndarray:
         return self.agg.rows_touched_since(gen)
 
-    def update(self, region_id_matrix: np.ndarray,
-               powers: np.ndarray) -> "StreamingCombinationAggregator":
-        cids = self.interner.encode(region_id_matrix)
+    # -- bounded-mode internals ----------------------------------------------
+
+    def _sync_rows(self) -> None:
         if len(self.interner) > self.agg.num_regions:
             self.agg.grow(len(self.interner))
-        self.agg.update(cids, powers)
+
+    def _other_id(self, region: int) -> int:
+        """Id of ``region``'s tail bucket row, interning it on demand."""
+        oid = self._other_by_region.get(region)
+        if oid is None:
+            width = self.interner._width
+            oid = self.interner.intern(sketch_mod.other_row(region, width))
+            self._other_by_region[region] = oid
+            self._other_rows.add(oid)
+            self._sync_rows()
+        return oid
+
+    def _register_other(self, cid: int, region: int) -> None:
+        """Record an already-interned sentinel row as a tail bucket."""
+        self._other_by_region.setdefault(region, cid)
+        self._other_rows.add(cid)
+
+    def _fold_stats(self, src: int, dst: int) -> None:
+        """Move row ``src``'s full statistics triple onto ``dst`` and zero
+        ``src`` — addition, so totals are preserved exactly."""
+        a = self.agg
+        a.counts[dst] += a.counts[src]
+        a.chan_psum[dst] += a.chan_psum[src]
+        a.chan_psumsq[dst] += a.chan_psumsq[src]
+        a.counts[src] = 0
+        a.chan_psum[src] = 0.0
+        a.chan_psumsq[src] = 0.0
+        a._touch_gen[src] = a._gen
+        a._touch_gen[dst] = a._gen
+
+    def _find_victim(self, pending: dict[int, int],
+                     protected: set[int]) -> tuple[int, int]:
+        """Lowest-count evictable row (ties → lowest id): never an
+        ``other`` row, never a row carrying unfolded weight from the
+        chunk in flight. Returns (id, effective count); the count is
+        ``_I64MAX`` when nothing is evictable."""
+        n = len(self.interner)
+        eff = self.agg.counts[:n].copy()
+        for cid, w in pending.items():
+            eff[cid] += w
+        masked = self._other_rows | protected
+        if masked:
+            eff[np.fromiter(masked, np.int64, len(masked))] = _I64MAX
+        vid = int(np.argmin(eff))
+        return vid, int(eff[vid])
+
+    def _admit_or_fold(self, row: np.ndarray, weight: int,
+                       pending: dict[int, int],
+                       protected: set[int],
+                       exhausted: list[bool]) -> int:
+        """Admission decision for one *new* combination carrying
+        ``weight`` samples: intern while room, else evict the min-count
+        resident (when ``weight`` beats it) or fold into the region's
+        ``other`` row. Deterministic — counts and ids only."""
+        if self.resident < self.k:
+            cid = self.interner.intern(tuple(int(v) for v in row))
+            self._sync_rows()
+            pending[cid] = pending.get(cid, 0) + weight
+            protected.add(cid)
+            return cid
+        if weight > self._min_floor and not exhausted[0]:
+            vid, vcount = self._find_victim(pending, protected)
+            if vcount != _I64MAX:
+                # Counts only ever grow, so the scanned min stays a valid
+                # lower bound — later light arrivals skip the scan.
+                self._min_floor = vcount
+            else:
+                # Every resident is masked (chunk-protected or an
+                # ``other`` row). The masked set only grows within a
+                # chunk, so no victim can appear before the next chunk:
+                # skip further scans instead of re-walking the table
+                # for every tail arrival.
+                exhausted[0] = True
+            if weight > vcount:
+                # The victim folds into *its own* region's tail bucket
+                # (not the arriving row's — regions must never bleed).
+                oid = self._other_id(int(self.interner._combos[vid][0]))
+                self._fold_stats(vid, oid)
+                self.interner.replace(vid, tuple(int(v) for v in row))
+                self._recycles += 1
+                self.evictions += 1
+                self.tail_folds += 1
+                pending[vid] = weight
+                protected.add(vid)
+                return vid
+        self.tail_folds += 1
+        return self._other_id(int(row[0]))
+
+    # -- ingest ---------------------------------------------------------------
+
+    def update(self, region_id_matrix: np.ndarray,
+               powers: np.ndarray) -> "StreamingCombinationAggregator":
+        if self.k is None:
+            cids = self.interner.encode(region_id_matrix)
+            self._sync_rows()
+            self.agg.update(cids, powers)
+            return self
+        mat = np.ascontiguousarray(np.asarray(region_id_matrix),
+                                   dtype=np.int64)
+        if mat.ndim != 2:
+            raise ValueError(f"expected [n, workers]; got shape {mat.shape}")
+        if len(mat) and mat.shape[1] < 2:
+            raise SketchConfigError(
+                "bounded combination tables need width >= 2 (the region "
+                "axis plus at least one folded axis); at width 1 use the "
+                "plain StreamingAggregator")
+        if len(mat) == 0:
+            return self
+        if self.interner._width is None:
+            self.interner._width = mat.shape[1]
+        elif mat.shape[1] != self.interner._width:
+            raise ValueError(f"worker count changed mid-stream: "
+                             f"{mat.shape[1]} != {self.interner._width}")
+        uniq, inverse = np.unique(mat, axis=0, return_inverse=True)
+        weights = np.bincount(inverse.reshape(-1), minlength=len(uniq))
+        ids = np.empty(len(uniq), dtype=np.int64)
+        pending: dict[int, int] = {}
+        protected: set[int] = set()
+        exhausted = [False]
+        missing: list[int] = []
+        for i in range(len(uniq)):
+            cid = self.interner.find_row(uniq[i])
+            if cid is None:
+                missing.append(i)
+            else:
+                ids[i] = cid
+                protected.add(cid)
+        for i in missing:
+            ids[i] = self._admit_or_fold(uniq[i], int(weights[i]),
+                                         pending, protected, exhausted)
+        self._sync_rows()
+        self.agg.update(ids[inverse.reshape(-1)], powers)
         return self
 
     def update_stream(self, chunks: Iterable[tuple[np.ndarray, np.ndarray]]
@@ -505,8 +759,11 @@ class StreamingCombinationAggregator:
             self.update(mat, pows)
         return self
 
+    # -- merge ----------------------------------------------------------------
+
     def merge_table(self, combo_matrix: np.ndarray, counts: np.ndarray,
-                    psum: np.ndarray, psumsq: np.ndarray
+                    psum: np.ndarray, psumsq: np.ndarray, *,
+                    k: int | None = None, hash_range=None
                     ) -> "StreamingCombinationAggregator":
         """Fold a shard given by its raw key table + statistics.
 
@@ -517,16 +774,91 @@ class StreamingCombinationAggregator:
         :meth:`merge` routes through it. Unseen rows are appended in the
         shard's local order, so any left-to-right reduction tree assigns
         the same union ids as one aggregator fed the concatenated stream.
+
+        ``k``/``hash_range`` declare the *source* table's bounded-state
+        config. Mismatched configs refuse with
+        :class:`~repro.core.faults.SketchConfigError` (typed, never a
+        silent union): a source k differing from this aggregator's, a
+        sentinel (``other``) row offered to an exact table, a declared
+        hash range contradicting this aggregator's, or rows hashing
+        outside this aggregator's owned range. In bounded mode, source
+        rows route through the same admission policy as live samples and
+        source ``other`` rows fold into the matching local tail buckets.
         """
-        remap = self.interner.intern_rows(combo_matrix)
-        if len(self.interner) > self.agg.num_regions:
-            self.agg.grow(len(self.interner))
-        if len(remap):
-            c = self.agg.num_channels
-            np.add.at(self.agg.counts, remap, np.asarray(counts, np.int64))
-            np.add.at(self.agg.chan_psum, remap, _as_channels(psum, c))
-            np.add.at(self.agg.chan_psumsq, remap, _as_channels(psumsq, c))
-            self.agg._touch_gen[remap] = self.agg._gen
+        mat = np.ascontiguousarray(np.asarray(combo_matrix), dtype=np.int64)
+        if mat.ndim != 2:
+            raise ValueError(f"expected [k, workers]; got shape {mat.shape}")
+        src_k = None if k is None else int(k)
+        if src_k != self.k:
+            raise SketchConfigError(
+                f"combination-table k mismatch at merge: source "
+                f"k={src_k} vs destination k={self.k}; bounded and exact "
+                f"tails cannot be blended — rebuild one side first")
+        src_hr = _as_hash_range(hash_range)
+        if (src_hr is not None and self.hash_range is not None
+                and src_hr != self.hash_range):
+            raise SketchConfigError(
+                f"hash-range ownership mismatch at merge: source "
+                f"{src_hr.as_tuple()} vs destination "
+                f"{self.hash_range.as_tuple()}")
+        if self.hash_range is not None and len(mat):
+            if not self.hash_range.owns(combo_hashes(mat)).all():
+                raise SketchConfigError(
+                    f"merge offers combination rows outside this "
+                    f"aggregator's owned hash range "
+                    f"{self.hash_range.as_tuple()}; mis-routed shuffle")
+        sentinel = sketch_mod.is_other_rows(mat)
+        if sentinel.any() and self.k is None:
+            raise SketchConfigError(
+                "bounded (top-k + 'other') rows cannot merge into an "
+                "exact aggregator; construct the destination with the "
+                "matching k")
+        if self.k is None:
+            # Exact fast path — unchanged from pre-bounded behavior.
+            remap = self.interner.intern_rows(mat)
+            self._sync_rows()
+            if len(remap):
+                c = self.agg.num_channels
+                np.add.at(self.agg.counts, remap,
+                          np.asarray(counts, np.int64))
+                np.add.at(self.agg.chan_psum, remap, _as_channels(psum, c))
+                np.add.at(self.agg.chan_psumsq, remap,
+                          _as_channels(psumsq, c))
+                self.agg._touch_gen[remap] = self.agg._gen
+            return self
+        if len(mat) and mat.shape[1] < 2:
+            raise SketchConfigError(
+                "bounded combination tables need width >= 2")
+        if len(mat) == 0:
+            return self
+        if self.interner._width is None:
+            self.interner._width = mat.shape[1]
+        c = self.agg.num_channels
+        cnt = np.asarray(counts, dtype=np.int64).reshape(-1)
+        ps = _as_channels(psum, c)
+        psq = _as_channels(psumsq, c)
+        pending: dict[int, int] = {}
+        protected: set[int] = set()
+        exhausted = [False]
+        a = self.agg
+        for i in range(len(mat)):
+            row = mat[i]
+            if sentinel[i]:
+                tid = self._other_id(int(row[0]))
+            else:
+                cid = self.interner.find_row(row)
+                if cid is None:
+                    tid = self._admit_or_fold(row, int(cnt[i]),
+                                              pending, protected,
+                                              exhausted)
+                else:
+                    tid = cid
+                    protected.add(cid)
+            self._sync_rows()
+            a.counts[tid] += cnt[i]
+            a.chan_psum[tid] += ps[i]
+            a.chan_psumsq[tid] += psq[i]
+            a._touch_gen[tid] = a._gen
         return self
 
     def merge(self, other: "StreamingCombinationAggregator"
@@ -534,18 +866,159 @@ class StreamingCombinationAggregator:
         if other.domains != self.domains:
             raise ValueError(f"domain axis mismatch at merge: "
                              f"{other.domains} != {self.domains}")
-        return self.merge_table(other.interner.combo_matrix(),
-                                other.agg.counts, other.agg.chan_psum,
-                                other.agg.chan_psumsq)
+        self.merge_table(other.interner.combo_matrix(),
+                         other.agg.counts, other.agg.chan_psum,
+                         other.agg.chan_psumsq, k=other.k,
+                         hash_range=other.hash_range)
+        # Tail provenance rides along: folds that happened at the source
+        # stay disclosed after the reduction.
+        self.tail_folds += other.tail_folds
+        self.evictions += other.evictions
+        return self
+
+    # -- bounded-state surface -------------------------------------------------
+
+    def shrink_k(self, k: int) -> None:
+        """Lower the heavy-hitters capacity in place (overload response:
+        the serve ladder's ``degraded`` rung calls this). Never widens —
+        eviction is irreversible, so a larger k would only misreport the
+        already-folded tail. When the current resident set exceeds the
+        new k, the lowest-count rows (ties → lowest id) fold into their
+        regions' ``other`` buckets; per-region totals are preserved
+        exactly. Works from exact mode too (adopts bounded mode)."""
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"k must be >= 1; got {k}")
+        if self.k is not None and k >= self.k:
+            return
+        if self.resident <= k:
+            self.k = k
+            return
+        n = len(self.interner)
+        counts = self.agg.counts[:n]
+        # Keep the k highest-count identified rows (other rows keep
+        # their slots for free — they are the fold destinations);
+        # lexsort's last key is primary, so sort by (-count, id).
+        ident = np.asarray([cid for cid in range(n)
+                            if cid not in self._other_rows], np.int64)
+        order = ident[np.lexsort((ident, -counts[ident]))]
+        keep = set(int(v) for v in order[:k])
+        folded = [int(v) for v in order[k:]]
+        self.k = k
+        for cid in folded:
+            oid = self._other_id(int(self.interner._combos[cid][0]))
+            self._fold_stats(cid, oid)
+        # Rewrite identity of the folded slots is impossible in place
+        # (their keys must leave the table so future arrivals re-enter
+        # admission); rebuild the table without them.
+        self._rebuild_without(set(folded))
+        self._recycles += len(folded)
+        self.evictions += len(folded)
+        self.tail_folds += len(folded)
+        self._min_floor = 0
+
+    def _rebuild_without(self, drop: set[int]) -> None:
+        """Re-intern every kept row (original id order) into a fresh
+        table, remapping statistics; dropped rows must already be zeroed."""
+        old = self.interner
+        n = len(old)
+        keep_ids = [cid for cid in range(n) if cid not in drop]
+        fresh = CombinationInterner()
+        fresh._width = old._width
+        fresh._pow2_cap = old._pow2_cap
+        other_by_region: dict[int, int] = {}
+        other_rows: set[int] = set()
+        for cid in keep_ids:
+            nid = fresh.intern(old._combos[cid])
+            if cid in self._other_rows:
+                other_rows.add(nid)
+                other_by_region[int(old._combos[cid][0])] = nid
+        # Pressure counters describe the stream's history, not the
+        # rebuild — carry them over verbatim.
+        fresh.intern_misses = old.intern_misses
+        fresh.growth_events = old.growth_events
+        a = self.agg
+        sel = np.asarray(keep_ids, dtype=np.int64)
+        rebuilt = StreamingAggregator(len(keep_ids), aggregate_fn=a._agg,
+                                      domains=a.domains)
+        rebuilt.counts += a.counts[sel]
+        rebuilt.chan_psum += a.chan_psum[sel]
+        rebuilt.chan_psumsq += a.chan_psumsq[sel]
+        rebuilt._touch_gen[:] = a._touch_gen[sel]
+        rebuilt._gen = a._gen
+        self.interner = fresh
+        self.agg = rebuilt
+        self._other_by_region = other_by_region
+        self._other_rows = other_rows
+
+    def filter_range(self, hash_range) -> "StreamingCombinationAggregator":
+        """Project this table onto a hash range: a new aggregator (same
+        k / domains, owning ``hash_range``) holding exactly the rows —
+        identified and ``other`` alike — whose key hashes fall inside
+        it. The per-range shuffle primitive: ``split(n)`` ranges'
+        projections partition the table, so merging each range on its
+        owner host and unioning the results never double-counts."""
+        hr = _as_hash_range(hash_range)
+        if hr is None:
+            raise ValueError("filter_range needs a hash range")
+        out = StreamingCombinationAggregator(
+            aggregate_fn=self.agg._agg, domains=self.domains, k=self.k,
+            hash_range=hr)
+        mat = self.interner.combo_matrix()
+        if len(mat) == 0:
+            return out
+        keep = hr.owns(combo_hashes(mat))
+        n = len(mat)
+        out.merge_table(mat[keep], self.agg.counts[:n][keep],
+                        self.agg.chan_psum[:n][keep],
+                        self.agg.chan_psumsq[:n][keep], k=self.k,
+                        hash_range=hr)
+        return out
+
+    def interner_pressure(self) -> dict:
+        """First-class pressure counters for operators: how close the
+        exact path is to blowing up, and what bounded mode folded."""
+        out = {
+            "distinct": self.interner.distinct,
+            "intern_misses": self.interner.intern_misses,
+            "growth_events": self.interner.growth_events,
+        }
+        if self.k is not None:
+            out.update(k=self.k, resident=self.resident,
+                       other_rows=self.other_rows,
+                       tail_folds=self.tail_folds,
+                       evictions=self.evictions)
+        return out
+
+    def tail_info(self) -> dict | None:
+        """TAIL disclosure payload (None in exact mode)."""
+        if self.k is None:
+            return None
+        return {"k": self.k, "resident": self.resident,
+                "other_rows": self.other_rows,
+                "tail_folds": self.tail_folds,
+                "evictions": self.evictions}
 
     def estimates(self, t_exec: float, names: Sequence[str], *,
                   alpha: float = 0.05, coverage=None
                   ) -> tuple[EstimateSet, list[tuple[int, ...]]]:
-        """Finalize into (combination EstimateSet, combination tuples)."""
+        """Finalize into (combination EstimateSet, combination tuples).
+
+        Bounded tables disclose themselves: ``EstimateSet.tail`` carries
+        the fold counters (the report's ``TAIL`` line) and the coverage
+        mapping gains an ``"interner"`` pressure block. Exact tables
+        with no gather coverage keep ``coverage=None`` — byte-identical
+        to pre-bounded output."""
         comb_names = combination_names_from_matrix(
             self.interner.combo_matrix(), names)
+        cov = coverage
+        if cov is not None:
+            cov = dict(cov)
+            cov["interner"] = self.interner_pressure()
+        elif self.k is not None:
+            cov = {"complete": True, "interner": self.interner_pressure()}
         est = self.agg.estimates(t_exec, comb_names, alpha=alpha,
-                                 coverage=coverage)
+                                 coverage=cov, tail=self.tail_info())
         return est, self.interner.combos
 
 

@@ -83,6 +83,7 @@ class PhaseEnergyAccountant:
                  spill_mode: str = "delta", compact_every: int = 16,
                  spill_retries: int = 3, faults=None,
                  track_requests: bool = False,
+                 max_combinations: int | None = None,
                  buffer_capacity: int | None = None):
         self.marker = RegionMarker()
         self.sampler = HostSampler(self.marker,
@@ -102,9 +103,16 @@ class PhaseEnergyAccountant:
         # multi-worker attribution uses. A sample taken while k requests
         # are in flight is split 1/k across them, so the combination
         # psums partition the phase psums exactly (no double count).
+        # ``max_combinations`` bounds that table (heavy-hitters tier):
+        # a long-running fleet tracks at most that many identified
+        # (phase, request) rows; the tail folds into per-phase `other`
+        # buckets, so per-phase totals stay exact while memory stays
+        # O(max_combinations) regardless of request count.
         self.track_requests = track_requests
+        self.max_combinations = max_combinations
         self.request_agg = (StreamingCombinationAggregator(
-            domains=self.domains) if track_requests else None)
+            domains=self.domains, k=max_combinations)
+            if track_requests else None)
         self._req_energy: dict[int, float] = {}   # cumulative J / request
         self._req_charges: dict[int, float] = {}  # J since last take
         self.spill_dir = spill_dir
@@ -287,6 +295,27 @@ class PhaseEnergyAccountant:
         """Undo :meth:`scale_period` on ladder de-escalation."""
         self.sampler.period = self._base_period
 
+    def shrink_tracking(self, max_combinations: int) -> None:
+        """Overload-ladder hook: lower (never raise) the per-request
+        combination table's heavy-hitters capacity in place. The
+        lowest-count (phase, request) rows fold into their phase's
+        ``other`` bucket — per-phase totals stay exact, so budgets and
+        phase estimates are unaffected; only cold requests' identity
+        coarsens. Irreversible by design (eviction already folded the
+        tail), so de-escalation does not undo it."""
+        if self.request_agg is None:
+            return
+        self.request_agg.shrink_k(max_combinations)
+        self.max_combinations = self.request_agg.k
+
+    def attribution_pressure(self) -> dict | None:
+        """Interner pressure counters of the per-request combination
+        table (None without ``track_requests``) — the ServeReport's
+        ``attribution`` block."""
+        if self.request_agg is None:
+            return None
+        return self.request_agg.interner_pressure()
+
     @property
     def buffer_overruns(self) -> int:
         """Samples dropped because the bounded ring was full — each one
@@ -312,6 +341,10 @@ class PhaseEnergyAccountant:
         the requests in flight at sample time — summing a phase's cells
         over requests recovers that phase's energy for the sampled
         in-flight intervals (no sample is double-counted).
+
+        Under a bounded table (``max_combinations``) the folded tail
+        appears under request id ``-1`` per phase — the per-phase
+        ``other`` bucket — so the partition property still holds.
         """
         if self.request_agg is None:
             raise RuntimeError("accountant built without track_requests")
@@ -389,6 +422,12 @@ class ServeConfig:
     # under the step clock — measured charges from a track_requests
     # accountant are added on top when one is attached.
     step_energy: float | None = None
+    # Overload response (degraded rung): shrink the accountant's
+    # per-request combination table to this heavy-hitters capacity when
+    # the ladder widens sampling. None leaves the table alone. The
+    # shrink is irreversible (the folded tail is gone), so
+    # de-escalation restores only the sampling period.
+    degraded_max_combinations: int | None = None
 
 
 @dataclasses.dataclass
@@ -548,10 +587,17 @@ class Engine:
             req = self._requests.get(rid)
             if req is not None:
                 self._charge(req, dj)
+        # Pressure counters ride on the report so fleet dashboards see
+        # interner growth (and bounded-mode folds) without touching the
+        # accountant directly.
+        self.report.attribution = self.accountant.attribution_pressure()
 
     def _widen_sampling(self, factor: float) -> None:
         if self.accountant is not None:
             self.accountant.scale_period(factor)
+            if self.scfg.degraded_max_combinations is not None:
+                self.accountant.shrink_tracking(
+                    self.scfg.degraded_max_combinations)
 
     def _restore_sampling(self) -> None:
         if self.accountant is not None:

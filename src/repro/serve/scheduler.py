@@ -272,6 +272,12 @@ class ServeReport:
         self.recovered = 0
         self.admission_faults = 0
         self.buffer_overruns = 0
+        # Interner pressure of the accountant's per-request combination
+        # table (engine-maintained; None without track_requests):
+        # distinct/miss/growth counters plus, in bounded mode, the
+        # k/resident/tail-fold block — how close attribution state is
+        # to its cap, and what the tail cost so far.
+        self.attribution: dict | None = None
 
     # -- records --------------------------------------------------------------
     def open(self, rid: int, *, status: str, step: int,
@@ -343,7 +349,7 @@ class ServeReport:
                       "queued", "admitted"):
             if by.get(label):
                 parts.append(f"{label}: {by[label]}")
-        return {
+        out = {
             "requests": {str(r.rid): r.to_json() for r in self.requests},
             "by_status": by,
             "transitions": [list(t) for t in self.transitions],
@@ -359,10 +365,13 @@ class ServeReport:
             },
             "summary": "; ".join(parts),
         }
+        if self.attribution is not None:
+            out["attribution"] = dict(self.attribution)
+        return out
 
     # -- durable snapshot round-trip ------------------------------------------
     def to_json(self) -> dict:
-        return {
+        out = {
             "records": [r.to_json() for r in self.requests],
             "transitions": [list(t) for t in self.transitions],
             "counters": [self.rejected_full, self.shed,
@@ -370,6 +379,9 @@ class ServeReport:
                          self.completed, self.recovered,
                          self.admission_faults, self.buffer_overruns],
         }
+        if self.attribution is not None:
+            out["attribution"] = dict(self.attribution)
+        return out
 
     @classmethod
     def from_json(cls, d: dict) -> "ServeReport":
@@ -381,6 +393,9 @@ class ServeReport:
         (rep.rejected_full, rep.shed, rep.aborted_deadline,
          rep.aborted_budget, rep.completed, rep.recovered,
          rep.admission_faults, rep.buffer_overruns) = d["counters"]
+        # Pre-bounded snapshots have no attribution key; .get keeps the
+        # round-trip backward compatible.
+        rep.attribution = d.get("attribution")
         return rep
 
 

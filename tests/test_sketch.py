@@ -1,0 +1,505 @@
+"""Bounded-state attribution: heavy-hitters tier + hash-range sharding.
+
+The contract under test (ROADMAP item 4): a ``k``-bounded combination
+table keeps *per-region totals bit-exact* for every k — only tail
+identity coarsens into per-region ``other`` rows — and with
+``k >= distinct`` the bounded path is byte-for-byte the exact
+aggregator (the pinned oracle). Mixed bounded-state configs refuse with
+a typed error everywhere (merge, wire, collective), the v3 wire schema
+only appears when a shard actually is bounded, and eviction + spill +
+restore never double-counts — including under injected crashes.
+
+Power values throughout are dyadic (multiples of 1/64) so float64
+summation is exact in any order: "bit-exact" assertions compare
+fold orders, not rounding luck.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # degrade gracefully: deterministic fixed-seed draws
+    from _hypothesis_fallback import given, settings, st
+
+from repro.checkpoint import ckpt
+from repro.core import device_pipeline as dp
+from repro.core import exchange as ex
+from repro.core import faults
+from repro.core import regions as regions_mod
+from repro.core.attribution import AttributionReport
+from repro.core.faults import FaultPlan, InjectedCrash, SketchConfigError
+from repro.core.sensors import InstantTraceSensor
+from repro.core.sketch import (OTHER, HashRange, combo_hashes, is_other_rows,
+                               mix64, other_row)
+from repro.core.streaming import StreamingCombinationAggregator
+from repro.core.timeline import RegionCost, synthesize
+from repro.launch.mesh import make_exchange_mesh
+from repro.serve.engine import PhaseEnergyAccountant
+from repro.serve.scheduler import ServeReport
+
+R = 5          # regions (combination column 0)
+W = 3          # key width
+
+
+def _stream(seed: int, n: int, r: int = R, w: int = W):
+    """(rows, dyadic powers): combination keys over a small id space so
+    streams collide (heavy hitters exist) while still growing distinct."""
+    rng = np.random.default_rng(seed)
+    mat = rng.integers(0, (r,) + (6,) * (w - 1), (n, w)).astype(np.int64)
+    pows = rng.integers(40 * 64, 260 * 64, n) / 64.0
+    return mat, pows
+
+
+def _region_totals(agg: StreamingCombinationAggregator, r: int = R):
+    """Per-region (counts, Σpow, Σpow²) folded over the table — the
+    quantity the heavy-hitters tier promises to keep bit-exact."""
+    n = len(agg.interner)
+    mat = agg.interner.combo_matrix()
+    counts = np.zeros(r, np.int64)
+    ps = np.zeros(r, np.float64)
+    psq = np.zeros(r, np.float64)
+    if n:
+        reg = mat[:, 0]
+        np.add.at(counts, reg, agg.agg.counts[:n])
+        np.add.at(ps, reg, agg.agg.psum[:n])
+        np.add.at(psq, reg, agg.agg.psumsq[:n])
+    return counts, ps, psq
+
+
+def _assert_bitexact(a: StreamingCombinationAggregator,
+                     b: StreamingCombinationAggregator):
+    assert a.interner.combos == b.interner.combos
+    n = len(a.interner)
+    assert np.array_equal(a.agg.counts[:n], b.agg.counts[:n])
+    assert np.array_equal(a.agg.chan_psum[:n], b.agg.chan_psum[:n])
+    assert np.array_equal(a.agg.chan_psumsq[:n], b.agg.chan_psumsq[:n])
+
+
+# ---------------------------------------------------------------------------
+# Hash primitives: one mixer fleet-wide.
+# ---------------------------------------------------------------------------
+
+def test_combo_hashes_match_scalar_fault_mixer():
+    """Vectorized row hashes == faults._mix64 word-for-word (hosts agree
+    on range ownership with no coordination), including the negative
+    OTHER sentinel absorbing as its two's-complement image."""
+    rng = np.random.default_rng(11)
+    mat = rng.integers(-2, 2 ** 40, (64, 4)).astype(np.int64)
+    mat[0] = other_row(3, 4)
+    got = combo_hashes(mat)
+    for i in range(len(mat)):
+        want = faults._mix64(*(int(v) for v in mat[i]))
+        assert int(got[i]) == want
+    # Single mix64 round == one-word scalar mix (absorb from 0 seed).
+    h = mix64(np.zeros(3, np.uint64),
+              np.array([1, 2, 3], np.int64).view(np.uint64))
+    base = 0x9E3779B97F4A7C15
+    for i, w in enumerate((1, 2, 3)):
+        assert int(h[i]) == faults._mix64(w - base)
+
+
+def test_hash_range_split_owns_and_validates():
+    full = HashRange.full()
+    assert HashRange.split(1) == (full,)
+    parts = HashRange.split(7)
+    assert parts[0].lo == 0 and parts[-1].hi == 1 << 64
+    for a, b in zip(parts, parts[1:]):
+        assert a.hi == b.lo                       # contiguous, no gaps
+    h = combo_hashes(_stream(0, 500)[0])
+    owned = np.stack([p.owns(h) for p in parts])
+    assert np.array_equal(owned.sum(axis=0), np.ones(len(h)))  # partition
+    assert full.owns(h).all()
+    row = np.array([1, 2, 3], np.int64)
+    assert sum(p.owns_row(row) for p in parts) == 1
+    for lo, hi in ((5, 5), (-1, 10), (0, (1 << 64) + 1)):
+        with pytest.raises(ValueError):
+            HashRange(lo, hi)
+    with pytest.raises(ValueError):
+        HashRange.split(0)
+
+
+def test_other_row_sentinel_and_width_guard():
+    assert other_row(3, 4) == (3, OTHER, OTHER, OTHER)
+    mask = is_other_rows(np.array([[1, 2], [1, OTHER], [0, 0]], np.int64))
+    assert mask.tolist() == [False, True, False]
+    with pytest.raises(SketchConfigError):
+        other_row(0, 1)
+    agg = StreamingCombinationAggregator(k=4)
+    with pytest.raises(SketchConfigError):
+        agg.update(np.zeros((3, 1), np.int64), np.ones(3))
+    with pytest.raises(ValueError):
+        StreamingCombinationAggregator(k=0)
+
+
+# ---------------------------------------------------------------------------
+# The tier's core contract, as a property over (seed, k, n).
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10 ** 6),
+       k=st.integers(min_value=1, max_value=48),
+       n=st.integers(min_value=1, max_value=500))
+def test_bounded_region_totals_bitexact_for_every_k(seed, k, n):
+    mat, pows = _stream(seed, n)
+    exact = StreamingCombinationAggregator()
+    bounded = StreamingCombinationAggregator(k=k)
+    for lo in range(0, n, 64):                    # chunked, like real feeds
+        exact.update(mat[lo:lo + 64], pows[lo:lo + 64])
+        bounded.update(mat[lo:lo + 64], pows[lo:lo + 64])
+    ec, eps, epsq = _region_totals(exact)
+    bc, bps, bpsq = _region_totals(bounded)
+    assert np.array_equal(ec, bc)
+    assert np.array_equal(eps, bps)               # dyadic → order-free
+    assert np.array_equal(epsq, bpsq)
+    assert bounded.resident <= k
+    assert bounded.n_total == exact.n_total
+    distinct = len(exact.interner)
+    if k >= distinct:                             # pinned oracle
+        _assert_bitexact(bounded, exact)
+        assert bounded.tail_folds == 0 and bounded.evictions == 0
+    else:
+        assert bounded.tail_folds > 0
+
+
+def test_k_ge_distinct_is_byte_for_byte_including_spill(tmp_path):
+    mat, pows = _stream(3, 800)
+    exact = StreamingCombinationAggregator().update(mat, pows)
+    bounded = StreamingCombinationAggregator(k=4096).update(mat, pows)
+    _assert_bitexact(bounded, exact)
+    # ... and stays the oracle through a spill/restore round trip.
+    ex.spill_shard(str(tmp_path), 0, epoch=1, agg=bounded)
+    back = ex.gather_shards(str(tmp_path))
+    _assert_bitexact(back, exact)
+    assert back.k == 4096
+
+
+# ---------------------------------------------------------------------------
+# Typed refusal of mixed configs.
+# ---------------------------------------------------------------------------
+
+def test_merge_refuses_mixed_bounded_configs():
+    mat, pows = _stream(1, 200)
+    b8 = StreamingCombinationAggregator(k=8).update(mat, pows)
+    n = len(b8.interner)
+    tbl = (b8.interner.combo_matrix(), b8.agg.counts[:n],
+           b8.agg.chan_psum[:n], b8.agg.chan_psumsq[:n])
+    with pytest.raises(SketchConfigError, match="k mismatch"):
+        StreamingCombinationAggregator(k=4).merge_table(*tbl, k=8)
+    with pytest.raises(SketchConfigError, match="k mismatch"):
+        StreamingCombinationAggregator().merge_table(*tbl, k=8)
+    # Sentinel rows offered without declaring k: still refused by the
+    # exact destination (never a silent union with a coarsened tail).
+    with pytest.raises(SketchConfigError, match="exact"):
+        StreamingCombinationAggregator().merge_table(*tbl)
+    lo_half, hi_half = HashRange.split(2)
+    with pytest.raises(SketchConfigError, match="ownership mismatch"):
+        StreamingCombinationAggregator(k=8, hash_range=lo_half).merge_table(
+            *tbl, k=8, hash_range=hi_half)
+    with pytest.raises(SketchConfigError, match="outside"):
+        # The full table can't hash entirely into one half-range.
+        StreamingCombinationAggregator(k=8, hash_range=lo_half).merge_table(
+            *tbl, k=8)
+    with pytest.raises(SketchConfigError, match="k mismatch"):
+        b8.merge(StreamingCombinationAggregator().update(mat, pows))
+
+
+def test_collective_reduce_refuses_mixed_configs():
+    mat, pows = _stream(2, 300)
+    a = StreamingCombinationAggregator().update(mat, pows)
+    b = StreamingCombinationAggregator(k=8).update(mat, pows)
+    # Config identity is checked before any device collective runs, so
+    # a 1-device mesh suffices to pin the refusal.
+    with pytest.raises(SketchConfigError, match="mixed bounded-state"):
+        ex.collective_reduce([a, b], mesh=make_exchange_mesh(1))
+
+
+# ---------------------------------------------------------------------------
+# Wire schema v3: bounded shards disclose, exact shards stay v2.
+# ---------------------------------------------------------------------------
+
+def test_spill_meta_v3_only_when_bounded(tmp_path):
+    mat, pows = _stream(4, 400)
+    exact_dir = tmp_path / "exact"
+    ex.spill_shard(str(exact_dir), 0, epoch=1,
+                   agg=StreamingCombinationAggregator().update(mat, pows))
+    meta = ckpt.read_manifest_meta(
+        os.path.join(str(exact_dir), "host_0000", "epoch_000000001"))
+    # Exact shards must stay byte-compatible with pre-bounded readers:
+    # no v3 keys, schema_version stays 2.
+    assert meta["schema_version"] == 2
+    for key in ("k", "hash_range", "other_rows"):
+        assert key not in meta
+
+    b_dir = tmp_path / "bounded"
+    lo_half = HashRange.split(2)[0]
+    bagg = StreamingCombinationAggregator(k=6).update(mat, pows)
+    bagg = bagg.filter_range(lo_half)
+    ex.spill_shard(str(b_dir), 0, epoch=1, agg=bagg)
+    meta = ckpt.read_manifest_meta(
+        os.path.join(str(b_dir), "host_0000", "epoch_000000001"))
+    assert meta["schema_version"] == 3
+    assert meta["k"] == 6
+    assert meta["hash_range"] == [lo_half.lo, lo_half.hi]
+    assert meta["other_rows"] == bagg.other_rows
+    back = ex.gather_shards(str(b_dir))
+    _assert_bitexact(back, bagg)
+    assert back.k == 6 and back.hash_range == lo_half
+
+
+def test_gather_refuses_mixed_config_shards(tmp_path):
+    mat, pows = _stream(5, 300)
+    ex.spill_shard(str(tmp_path), 0, epoch=1,
+                   agg=StreamingCombinationAggregator().update(mat, pows))
+    ex.spill_shard(str(tmp_path), 1, epoch=1,
+                   agg=StreamingCombinationAggregator(k=8).update(mat, pows))
+    with pytest.raises(SketchConfigError):
+        ex.gather_shards(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# Hash-range shuffle: n range-gathers partition the fleet exactly once.
+# ---------------------------------------------------------------------------
+
+def test_hash_range_shuffle_gather_partitions_union(tmp_path):
+    for h in range(3):
+        mat, pows = _stream(100 + h, 600)
+        ex.spill_shard(str(tmp_path), h, epoch=1,
+                       agg=StreamingCombinationAggregator().update(mat, pows))
+    whole = ex.gather_shards(str(tmp_path))
+    parts = [ex.gather_shards(str(tmp_path), hash_range=r)
+             for r in HashRange.split(3)]
+    assert sum(p.n_total for p in parts) == whole.n_total
+    seen: dict[tuple, tuple] = {}
+    for p in parts:
+        n = len(p.interner)
+        mat = p.interner.combo_matrix()
+        assert p.hash_range.owns(combo_hashes(mat)).all()
+        for i in range(n):
+            key = tuple(int(v) for v in mat[i])
+            assert key not in seen                # no row in two ranges
+            seen[key] = (int(p.agg.counts[i]), float(p.agg.psum[i]),
+                         float(p.agg.psumsq[i]))
+    wmat = whole.interner.combo_matrix()
+    assert len(seen) == len(whole.interner)       # union covers everything
+    for i in range(len(whole.interner)):
+        key = tuple(int(v) for v in wmat[i])
+        assert seen[key] == (int(whole.agg.counts[i]),
+                             float(whole.agg.psum[i]),
+                             float(whole.agg.psumsq[i]))
+
+
+def test_region_shards_have_no_hash_range(tmp_path):
+    from repro.core.streaming import StreamingAggregator
+    agg = StreamingAggregator(4).update(np.array([0, 1, 2, 3]), np.ones(4))
+    ex.spill_shard(str(tmp_path), 0, epoch=1, agg=agg)
+    with pytest.raises(SketchConfigError):
+        ex.gather_shards(str(tmp_path), hash_range=HashRange.full())
+
+
+# ---------------------------------------------------------------------------
+# Eviction + delta spill + restore: never double-counts.
+# ---------------------------------------------------------------------------
+
+def test_shard_spiller_eviction_fallback_restores_bitexact(tmp_path):
+    """Evictions rewrite row identity, killing the append-only dirty
+    overlay; the spiller must fall back to exact snapshot diffs (or a
+    fresh full base) and every restore must equal the live table."""
+    agg = StreamingCombinationAggregator(k=6)
+    sp = ex.ShardSpiller(str(tmp_path), 0, mode="delta", compact_every=4)
+    for e in range(1, 9):
+        mat, pows = _stream(200 + e, 150)
+        agg.update(mat, pows)
+        sp.spill(agg, e)
+        back = ex.gather_shards(str(tmp_path))
+        _assert_bitexact(back, agg)
+        assert back.k == 6 and back.tail_folds == agg.tail_folds
+    assert agg.evictions > 0 and not agg.append_only
+
+
+def test_shrink_k_mid_chain_restores(tmp_path):
+    agg = StreamingCombinationAggregator(k=12)
+    sp = ex.ShardSpiller(str(tmp_path), 0, mode="delta", compact_every=8)
+    for e in range(1, 4):
+        agg.update(*_stream(300 + e, 120))
+        sp.spill(agg, e)
+    agg.shrink_k(5)                               # degraded-ladder rung
+    assert agg.resident <= 5
+    agg.update(*_stream(399, 120))
+    sp.spill(agg, 4)
+    back = ex.gather_shards(str(tmp_path))
+    _assert_bitexact(back, agg)
+    assert back.k == 5
+    with pytest.raises(ValueError):
+        agg.shrink_k(0)
+    agg.shrink_k(9)                               # never widens: no-op
+    assert agg.k == 5
+
+
+def test_chaos_crash_restore_conserves_bounded_totals(tmp_path):
+    """A host dies with an epoch in flight, restarts from its LATEST
+    chain, and replays forward: the result is bit-exact to the host that
+    never crashed — evictions, tail folds and all. (If restore double-
+    counted or lost folded tail weight, region totals would drift.)"""
+    def updates(e):
+        return _stream(7000 + e, 130)
+
+    ref = StreamingCombinationAggregator(k=5)
+    for e in range(1, 9):
+        ref.update(*updates(e))
+    assert ref.evictions > 0                      # the tier actually fired
+
+    plan = FaultPlan(seed=1, crashes=((0, 5),))
+    agg = StreamingCombinationAggregator(k=5)
+    died_at = None
+    with faults.install(plan):
+        sp = ex.ShardSpiller(str(tmp_path), 0, mode="delta",
+                             compact_every=3)
+        for e in range(1, 9):
+            agg.update(*updates(e))
+            try:
+                sp.spill(agg, e)
+            except InjectedCrash:
+                died_at = e                       # epoch e never published
+                break
+    assert died_at == 5
+    # Restart: resume from the durable chain (epochs 1..4) and replay.
+    sp2 = ex.ShardSpiller(str(tmp_path), 0, mode="delta", compact_every=3)
+    agg2 = sp2.resumed
+    assert agg2 is not None and agg2.k == 5
+    for e in range(died_at, 9):
+        agg2.update(*updates(e))
+        sp2.spill(agg2, e)
+    _assert_bitexact(agg2, ref)
+    assert agg2.tail_folds == ref.tail_folds
+    assert agg2.evictions == ref.evictions
+    _assert_bitexact(ex.gather_shards(str(tmp_path)), ref)
+
+
+# ---------------------------------------------------------------------------
+# Device pipeline: admit-or-fold on the miss path.
+# ---------------------------------------------------------------------------
+
+def _pipeline_fixtures(w=2, steps=40):
+    costs = [RegionCost("mem", flops=1e10, hbm_bytes=5e10, invocations=4),
+             RegionCost("alu", flops=6e11, hbm_bytes=2e9, invocations=4),
+             RegionCost("opt", flops=2e10, hbm_bytes=4e10, invocations=1)]
+    tls = [synthesize(costs, steps=steps, seed=s) for s in range(w)]
+    return dp.DeviceTimeline.from_timelines(tls), InstantTraceSensor.make_spec()
+
+
+def test_combo_pipeline_k_ge_distinct_bitexact():
+    dtl, spec = _pipeline_fixtures()
+    kw = dict(period=10e-3, jitter=200e-6, seed=7, chunk_size=512)
+    exact, n0 = dp.run_combo_pipeline(dtl, spec, **kw)
+    stats: dict = {}
+    bounded, n1 = dp.run_combo_pipeline(dtl, spec, max_combinations=4096,
+                                        stats=stats, **kw)
+    assert n0 == n1
+    _assert_bitexact(bounded, exact)
+    assert stats["tail_folds"] == 0 and bounded.tail_folds == 0
+    assert bounded.k == 4096
+
+
+def test_combo_pipeline_bounded_folds_tail_exactly():
+    dtl, spec = _pipeline_fixtures()
+    kw = dict(period=10e-3, jitter=200e-6, seed=7, chunk_size=512)
+    exact, n0 = dp.run_combo_pipeline(dtl, spec, **kw)
+    distinct = len(exact.interner)
+    k = max(2, distinct // 3)
+    stats: dict = {}
+    bounded, n1 = dp.run_combo_pipeline(dtl, spec, max_combinations=k,
+                                        stats=stats, **kw)
+    assert n0 == n1
+    assert bounded.resident <= k
+    assert stats["tail_folds"] > 0
+    assert stats["tail_folds"] == bounded.tail_folds
+    r = dtl.num_regions
+    ec, eps, epsq = _region_totals(exact, r)
+    bc, bps, bpsq = _region_totals(bounded, r)
+    assert np.array_equal(ec, bc)                 # counts: bit-exact
+    np.testing.assert_allclose(bps, eps, rtol=1e-9)
+    np.testing.assert_allclose(bpsq, epsq, rtol=1e-9)
+    with pytest.raises(ValueError):
+        dp.run_combo_pipeline(dtl, spec, max_combinations=0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Surfaces: TAIL disclosure, serve accountant, ServeReport.
+# ---------------------------------------------------------------------------
+
+def test_tail_disclosure_line_in_report():
+    mat, pows = _stream(6, 400)
+    names = [f"r{i}" for i in range(R)]
+    bounded = StreamingCombinationAggregator(k=3).update(mat, pows)
+    est, combos = bounded.estimates(1.0, names)
+    assert est.tail is not None and est.tail["k"] == 3
+    assert est.coverage["interner"]["resident"] <= 3
+    txt = AttributionReport(est).table()
+    assert "TAIL (bounded combinations, k=3)" in txt
+    assert "per-region totals exact" in txt
+    assert any("other" in str(name) for name in est.table.names)
+
+    exact = StreamingCombinationAggregator().update(mat, pows)
+    est2, _ = exact.estimates(1.0, names)
+    assert est2.tail is None and est2.coverage is None
+    assert "TAIL" not in AttributionReport(est2).table()
+
+
+class _FakeSampler:
+    def __init__(self):
+        self.period = 2e-3
+        self.elapsed = 0.0
+        self.buffer_overruns = 0
+        self.queue = []
+
+    def drain(self):
+        if self.queue:
+            return self.queue.pop(0)
+        return np.empty(0, np.int64), np.empty(0)
+
+
+def test_accountant_max_combinations_bounds_request_table():
+    rid = regions_mod.registry.intern("serve/decode")
+    acct = PhaseEnergyAccountant(track_requests=True, max_combinations=3)
+    acct.sampler = _FakeSampler()
+    for i, req in enumerate(range(100, 108)):
+        acct.sampler.queue.append((np.asarray([rid] * 4),
+                                   np.asarray([float(64 + i)] * 4)))
+        acct.sampler.elapsed = float(i + 1)
+        acct.drain(active_requests=(req,))
+    assert acct.request_agg.resident <= 3
+    pressure = acct.attribution_pressure()
+    assert pressure["k"] == 3 and pressure["tail_folds"] > 0
+    per_phase = acct.request_phase_energy()
+    assert -1 in per_phase                        # the folded tail bucket
+    # The (identified + tail) request cells still partition the phase
+    # total: bounding never loses or double-counts energy.
+    est = acct.estimates()
+    name = regions_mod.registry.names[rid]
+    phase_total = float(est.table.e_hat[list(est.table.names).index(name)])
+    split = sum(sum(d.values()) for d in per_phase.values())
+    assert split == pytest.approx(phase_total)
+    acct.shrink_tracking(2)
+    assert acct.max_combinations == 2 and acct.request_agg.resident <= 2
+    assert sum(sum(d.values())
+               for d in acct.request_phase_energy().values()) == (
+        pytest.approx(phase_total))
+
+
+def test_serve_report_attribution_roundtrip():
+    rep = ServeReport()
+    assert "attribution" not in rep.coverage()
+    rep.attribution = {"distinct": 9, "k": 4, "resident": 4,
+                       "tail_folds": 5, "evictions": 2, "other_rows": 2,
+                       "intern_misses": 9, "growth_events": 1}
+    cov = rep.coverage()
+    assert cov["attribution"]["k"] == 4
+    back = ServeReport.from_json(json.loads(json.dumps(rep.to_json())))
+    assert back.attribution == rep.attribution
+    legacy = rep.to_json()
+    del legacy["attribution"]
+    assert ServeReport.from_json(legacy).attribution is None
