@@ -535,10 +535,14 @@ class StreamingCombinationAggregator:
     stays the default and is completely unchanged.
 
     **Hash-range ownership** (``hash_range=``): the aggregator declares
-    the splitmix64 hash interval of combination keys it owns; merges
-    refuse rows outside it (and refuse peers declaring a different
-    range), so a per-range shuffle over spilled shards can't
-    double-count. See :meth:`filter_range`.
+    the splitmix64 hash interval of combination keys it owns; ingests
+    and merges refuse *identified* rows outside it (and merges refuse
+    peers declaring a different range), so a per-range shuffle over
+    spilled shards can't double-count. Per-region ``other`` rows are
+    exempt from ownership: a bounded shard mints them locally at fold
+    time, so a sentinel key's own hash is arbitrary — it lives wherever
+    its folds happened, and spilling / re-merging a folded sharded
+    table must round-trip. See :meth:`filter_range`.
     """
 
     def __init__(self, *, aggregate_fn: AggregateFn | None = None,
@@ -556,7 +560,6 @@ class StreamingCombinationAggregator:
         self.tail_folds = 0      # fold events (evictions + tail routings)
         self.evictions = 0       # identified rows evicted (slot recycled)
         self._recycles = 0       # identity rewrites (breaks append-only)
-        self._min_floor = 0      # lower bound of resident counts (cache)
 
     @classmethod
     def from_table(cls, combo_matrix: np.ndarray, counts: np.ndarray,
@@ -649,16 +652,14 @@ class StreamingCombinationAggregator:
         a._touch_gen[src] = a._gen
         a._touch_gen[dst] = a._gen
 
-    def _find_victim(self, pending: dict[int, int],
-                     protected: set[int]) -> tuple[int, int]:
+    def _find_victim(self, protected: set[int]) -> tuple[int, int]:
         """Lowest-count evictable row (ties → lowest id): never an
         ``other`` row, never a row carrying unfolded weight from the
-        chunk in flight. Returns (id, effective count); the count is
-        ``_I64MAX`` when nothing is evictable."""
+        chunk in flight (``protected`` — its count is not current yet).
+        Returns (id, effective count); the count is ``_I64MAX`` when
+        nothing is evictable."""
         n = len(self.interner)
         eff = self.agg.counts[:n].copy()
-        for cid, w in pending.items():
-            eff[cid] += w
         masked = self._other_rows | protected
         if masked:
             eff[np.fromiter(masked, np.int64, len(masked))] = _I64MAX
@@ -666,25 +667,33 @@ class StreamingCombinationAggregator:
         return vid, int(eff[vid])
 
     def _admit_or_fold(self, row: np.ndarray, weight: int,
-                       pending: dict[int, int],
                        protected: set[int],
-                       exhausted: list[bool]) -> int:
+                       exhausted: list[bool],
+                       floor: list[int]) -> int:
         """Admission decision for one *new* combination carrying
         ``weight`` samples: intern while room, else evict the min-count
         resident (when ``weight`` beats it) or fold into the region's
-        ``other`` row. Deterministic — counts and ids only."""
+        ``other`` row. Deterministic — counts and ids only.
+
+        ``exhausted`` and ``floor`` are single-cell scan caches scoped
+        to ONE ingest call: both are only valid while the masked
+        (chunk-protected) set keeps growing, so a fresh ``[False]`` /
+        ``[0]`` pair must be passed per update()/merge_table(). A
+        cached floor that outlived its chunk would mask rows protected
+        *then* but evictable *now*, permanently inflating the admission
+        bar past the true minimum."""
         if self.resident < self.k:
             cid = self.interner.intern(tuple(int(v) for v in row))
             self._sync_rows()
-            pending[cid] = pending.get(cid, 0) + weight
             protected.add(cid)
             return cid
-        if weight > self._min_floor and not exhausted[0]:
-            vid, vcount = self._find_victim(pending, protected)
+        if weight > floor[0] and not exhausted[0]:
+            vid, vcount = self._find_victim(protected)
             if vcount != _I64MAX:
-                # Counts only ever grow, so the scanned min stays a valid
+                # Within this ingest, counts only grow and the masked
+                # set only widens, so the scanned min stays a valid
                 # lower bound — later light arrivals skip the scan.
-                self._min_floor = vcount
+                floor[0] = vcount
             else:
                 # Every resident is masked (chunk-protected or an
                 # ``other`` row). The masked set only grows within a
@@ -701,17 +710,40 @@ class StreamingCombinationAggregator:
                 self._recycles += 1
                 self.evictions += 1
                 self.tail_folds += 1
-                pending[vid] = weight
                 protected.add(vid)
                 return vid
         self.tail_folds += 1
         return self._other_id(int(row[0]))
+
+    def _check_owned(self, mat: np.ndarray, verb: str) -> None:
+        """Refuse identified rows whose key hash falls outside the owned
+        range — a live sharded aggregator fails at the mis-routed ingest
+        or merge, never by silently accumulating unowned keys that only
+        surface at a downstream merge/restore. Sentinel (``other``) rows
+        are exempt: folds mint them locally, wherever eviction happens,
+        so their placement derives from the fold site, not their hash."""
+        if self.hash_range is None or len(mat) == 0:
+            return
+        ident = ~sketch_mod.is_other_rows(mat)
+        if ident.any() and not self.hash_range.owns(
+                combo_hashes(mat[ident])).all():
+            kind = "shuffle" if verb == "merge" else "ingest"
+            raise SketchConfigError(
+                f"{verb} offers combination rows outside this "
+                f"aggregator's owned hash range "
+                f"{self.hash_range.as_tuple()}; mis-routed {kind} — "
+                f"route rows to their range owner first")
 
     # -- ingest ---------------------------------------------------------------
 
     def update(self, region_id_matrix: np.ndarray,
                powers: np.ndarray) -> "StreamingCombinationAggregator":
         if self.k is None:
+            if self.hash_range is not None:
+                m = np.ascontiguousarray(np.asarray(region_id_matrix),
+                                         dtype=np.int64)
+                if m.ndim == 2:
+                    self._check_owned(m, "update")
             cids = self.interner.encode(region_id_matrix)
             self._sync_rows()
             self.agg.update(cids, powers)
@@ -733,11 +765,12 @@ class StreamingCombinationAggregator:
             raise ValueError(f"worker count changed mid-stream: "
                              f"{mat.shape[1]} != {self.interner._width}")
         uniq, inverse = np.unique(mat, axis=0, return_inverse=True)
+        self._check_owned(uniq, "update")
         weights = np.bincount(inverse.reshape(-1), minlength=len(uniq))
         ids = np.empty(len(uniq), dtype=np.int64)
-        pending: dict[int, int] = {}
         protected: set[int] = set()
         exhausted = [False]
+        floor = [0]
         missing: list[int] = []
         for i in range(len(uniq)):
             cid = self.interner.find_row(uniq[i])
@@ -748,7 +781,7 @@ class StreamingCombinationAggregator:
                 protected.add(cid)
         for i in missing:
             ids[i] = self._admit_or_fold(uniq[i], int(weights[i]),
-                                         pending, protected, exhausted)
+                                         protected, exhausted, floor)
         self._sync_rows()
         self.agg.update(ids[inverse.reshape(-1)], powers)
         return self
@@ -780,10 +813,15 @@ class StreamingCombinationAggregator:
         :class:`~repro.core.faults.SketchConfigError` (typed, never a
         silent union): a source k differing from this aggregator's, a
         sentinel (``other``) row offered to an exact table, a declared
-        hash range contradicting this aggregator's, or rows hashing
-        outside this aggregator's owned range. In bounded mode, source
-        rows route through the same admission policy as live samples and
-        source ``other`` rows fold into the matching local tail buckets.
+        hash range contradicting this aggregator's, or *identified*
+        rows hashing outside this aggregator's owned range. Sentinel
+        rows are exempt from the ownership check — a bounded shard
+        folds its tail locally, so its own (legitimately produced)
+        table carries ``other`` keys whose hashes land anywhere in the
+        space; spill/restore and peer merges must accept them. In
+        bounded mode, source rows route through the same admission
+        policy as live samples and source ``other`` rows fold into the
+        matching local tail buckets.
         """
         mat = np.ascontiguousarray(np.asarray(combo_matrix), dtype=np.int64)
         if mat.ndim != 2:
@@ -801,13 +839,8 @@ class StreamingCombinationAggregator:
                 f"hash-range ownership mismatch at merge: source "
                 f"{src_hr.as_tuple()} vs destination "
                 f"{self.hash_range.as_tuple()}")
-        if self.hash_range is not None and len(mat):
-            if not self.hash_range.owns(combo_hashes(mat)).all():
-                raise SketchConfigError(
-                    f"merge offers combination rows outside this "
-                    f"aggregator's owned hash range "
-                    f"{self.hash_range.as_tuple()}; mis-routed shuffle")
         sentinel = sketch_mod.is_other_rows(mat)
+        self._check_owned(mat, "merge")
         if sentinel.any() and self.k is None:
             raise SketchConfigError(
                 "bounded (top-k + 'other') rows cannot merge into an "
@@ -837,9 +870,9 @@ class StreamingCombinationAggregator:
         cnt = np.asarray(counts, dtype=np.int64).reshape(-1)
         ps = _as_channels(psum, c)
         psq = _as_channels(psumsq, c)
-        pending: dict[int, int] = {}
         protected: set[int] = set()
         exhausted = [False]
+        floor = [0]
         a = self.agg
         for i in range(len(mat)):
             row = mat[i]
@@ -849,8 +882,8 @@ class StreamingCombinationAggregator:
                 cid = self.interner.find_row(row)
                 if cid is None:
                     tid = self._admit_or_fold(row, int(cnt[i]),
-                                              pending, protected,
-                                              exhausted)
+                                              protected, exhausted,
+                                              floor)
                 else:
                     tid = cid
                     protected.add(cid)
@@ -915,7 +948,6 @@ class StreamingCombinationAggregator:
         self._recycles += len(folded)
         self.evictions += len(folded)
         self.tail_folds += len(folded)
-        self._min_floor = 0
 
     def _rebuild_without(self, drop: set[int]) -> None:
         """Re-intern every kept row (original id order) into a fresh

@@ -177,6 +177,38 @@ def test_k_ge_distinct_is_byte_for_byte_including_spill(tmp_path):
     assert back.k == 4096
 
 
+def test_min_floor_resets_between_chunks():
+    """The victim-scan floor is per-ingest state: a chunk-protected
+    light row inflates the scanned minimum for THAT chunk only. If the
+    floor leaked across chunks (regression), later arrivals would skip
+    the victim scan and fold to the tail even though the light row is
+    evictable again — silently deviating from the space-saving policy."""
+    agg = StreamingCombinationAggregator(k=2)
+
+    def chunk(rows_weights):
+        rows = []
+        for row, w in rows_weights:
+            rows += [row] * w
+        m = np.asarray(rows, np.int64)
+        agg.update(m, np.full(len(m), 64.0))
+
+    chunk([((0, 0), 1), ((0, 1), 10)])     # residents: A light, B heavy
+    # A is touched (chunk-protected), so C's victim scan sees only B
+    # (count 10): the floor inflates to 10 and C (weight 5) folds.
+    chunk([((0, 0), 1), ((0, 2), 5)])
+    assert agg.tail_folds == 1 and agg.evictions == 0
+    # Next chunk: A (count 2) is unprotected and evictable again. D's
+    # weight 3 beats it, so D must evict A — not skip the scan against
+    # a stale floor of 10 and fold.
+    chunk([((0, 3), 3)])
+    assert agg.evictions == 1
+    combos = set(agg.interner.combos)
+    assert (0, 3) in combos and (0, 0) not in combos
+    # Per-region totals stay exact through it all.
+    counts, ps, _ = _region_totals(agg, 1)
+    assert counts[0] == 20 and ps[0] == 20 * 64.0
+
+
 # ---------------------------------------------------------------------------
 # Typed refusal of mixed configs.
 # ---------------------------------------------------------------------------
@@ -290,6 +322,59 @@ def test_hash_range_shuffle_gather_partitions_union(tmp_path):
         assert seen[key] == (int(whole.agg.counts[i]),
                              float(whole.agg.psum[i]),
                              float(whole.agg.psumsq[i]))
+
+
+def test_sharded_bounded_spill_restore_after_folds(tmp_path):
+    """A bounded + sharded aggregator folds its tail locally, minting
+    per-region sentinel keys whose hashes land anywhere in [0, 2**64).
+    Ownership applies to identified rows only, so the aggregator's own
+    table must round-trip through spill -> gather and peer merges even
+    when a sentinel hashes outside the owned range (regression: the
+    unpack-side owns() check rejected its own legitimate state as a
+    'mis-routed shuffle', breaking crash recovery)."""
+    lo_half = HashRange.split(2)[0]
+    mat, pows = _stream(42, 2000)
+    own = lo_half.owns(combo_hashes(mat))
+    mat, pows = mat[own], pows[own]
+    agg = StreamingCombinationAggregator(k=3, hash_range=lo_half)
+    for lo in range(0, len(mat), 64):
+        agg.update(mat[lo:lo + 64], pows[lo:lo + 64])
+    assert agg.tail_folds > 0 and agg.other_rows > 0
+    smat = agg.interner.combo_matrix()
+    sent = is_other_rows(smat)
+    # Regression precondition: at least one locally-minted sentinel
+    # hashes OUTSIDE the owned range (regions 2/3 at width 3 do).
+    assert not lo_half.owns(combo_hashes(smat[sent])).all()
+    ex.spill_shard(str(tmp_path), 0, epoch=1, agg=agg)
+    back = ex.gather_shards(str(tmp_path))
+    _assert_bitexact(back, agg)
+    assert back.k == 3 and back.hash_range == lo_half
+    # Peer merge of two legitimately-produced sharded tables (the
+    # tree_reduce shape) must accept the sentinels too.
+    peer = StreamingCombinationAggregator(k=3, hash_range=lo_half)
+    for lo in range(0, len(mat), 64):
+        peer.update(mat[lo:lo + 64], pows[lo:lo + 64])
+    merged = StreamingCombinationAggregator(k=3, hash_range=lo_half)
+    merged.merge(agg).merge(peer)
+    counts, ps, psq = _region_totals(merged)
+    ac, aps, apsq = _region_totals(agg)
+    assert np.array_equal(counts, 2 * ac)
+    assert np.array_equal(ps, 2 * aps) and np.array_equal(psq, 2 * apsq)
+
+
+def test_sharded_update_refuses_unowned_rows():
+    """Live ingest enforces ownership (the class docstring's contract):
+    a mis-routed sample stream fails at update(), not as a confusing
+    downstream merge/restore error. Sentinel-free, both modes."""
+    lo_half = HashRange.split(2)[0]
+    mat, pows = _stream(9, 400)
+    own = lo_half.owns(combo_hashes(mat))
+    assert own.any() and not own.all()
+    for k in (None, 8):
+        agg = StreamingCombinationAggregator(k=k, hash_range=lo_half)
+        agg.update(mat[own], pows[own])            # owned rows: fine
+        with pytest.raises(SketchConfigError, match="outside"):
+            agg.update(mat[~own], pows[~own])
 
 
 def test_region_shards_have_no_hash_range(tmp_path):
