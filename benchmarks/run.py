@@ -14,7 +14,7 @@ def main() -> None:
     from benchmarks import (aggregation, domains, exchange, kernels,
                             kmeans_hotspot, memory_power, ocean_finegrain,
                             pipeline, sampling_period, serve_recovery,
-                            sketch, spill, validation)
+                            serve_spec, sketch, spill, validation)
     mods = [
         ("sampling_period (Fig 4/5)", sampling_period),
         ("validation (Fig 6 / §5)", validation),
@@ -30,6 +30,8 @@ def main() -> None:
         ("domains (multi-rail attribution, D=1 vs D=3)", domains),
         ("serve_recovery (shed rate, snapshot + restore cost)",
          serve_recovery),
+        ("serve_spec (speculative accepted-tokens-per-joule sweep)",
+         serve_spec),
     ]
     all_rows = ["name,us_per_call,derived"]
     for title, mod in mods:

@@ -1,0 +1,141 @@
+"""Self-speculative serving Pareto sweep: accepted-tokens-per-joule.
+
+The speculative hot path trades (L-1) cheap windowed draft steps plus
+one L-wide verify sweep for up to L emitted tokens per window, against
+the baseline's one full step per token. Under the deterministic
+``step_energy`` proxy the trade is exact arithmetic, so this benchmark
+is a *gate*, not a timing estimate:
+
+* per window a slot is charged ``draft_energy * (L-1) + step_energy``
+  (draft_energy defaults to ``step_energy * (window + sinks) / max_len``
+  — the one-cache-sweep verify cost model), and emits between 1 and L
+  tokens depending on acceptance;
+* the baseline (L=0) charges ``step_energy`` per emitted token.
+
+The headline cell — L=4, B=32 — must clear **1.2x** the baseline's
+tokens-per-proxy-joule or the run fails loudly (RuntimeError after the
+JSON is written, so the failing numbers are inspectable). Wall-clock
+tokens/sec rides along unguarded: CPU-backend timings are indicative
+only, the energy-proxy ratio is the contract.
+
+Sweeps L in {0, 2, 4, 8} x B in {8, 32}; emits CSV rows plus
+``BENCH_serve_spec.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+
+_JSON_PATH = pathlib.Path(__file__).with_name("BENCH_serve_spec.json")
+
+SPEC_LENS = (0, 2, 4, 8)
+BATCHES = (8, 32)
+MAX_NEW = 16
+PROMPT_LEN = 5
+MAX_LEN = 128
+WINDOW = 32
+SINKS = 4
+STEP_ENERGY = 1.0
+
+GATE_CELL = (4, 32)          # (L, B) headline cell
+GATE_BASELINE = (0, 32)
+GATE_MIN_RATIO = 1.2
+
+
+def _requests(cfg, n, seed=0):
+    from repro.serve.engine import Request
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(1, cfg.vocab_size, PROMPT_LEN)
+                    .astype(np.int32), max_new_tokens=MAX_NEW)
+            for i in range(n)]
+
+
+def _bench_cell(cfg, params, L, B):
+    from repro.serve.engine import Engine, ServeConfig
+
+    scfg = ServeConfig(max_batch=B, max_len=MAX_LEN, eos_token=-1,
+                       step_energy=STEP_ENERGY, spec_len=L,
+                       spec_window=WINDOW, spec_sinks=SINKS)
+    eng = Engine(cfg, params, scfg)
+    reqs = _requests(cfg, B)
+    t0 = time.perf_counter()
+    done = eng.run_until_drained(reqs)
+    wall_s = time.perf_counter() - t0
+    assert len(done) == B and all(r.done for r in done)
+
+    tokens = sum(len(r.out_tokens) for r in done)
+    total_j = sum(r.energy_j for r in done)
+    # Prefill is charged identically in every cell; subtract it so the
+    # ratio compares the decode hot path only.
+    decode_units = (total_j - B * PROMPT_LEN * STEP_ENERGY) / STEP_ENERGY
+    rep = eng.report
+    out = {
+        "tokens": tokens,
+        "steps": eng.step_count,
+        "decode_energy_units": decode_units,
+        "tokens_per_unit": tokens / decode_units,
+        "units_per_token": decode_units / tokens,
+        "wall_s": wall_s,
+        "tokens_per_s": tokens / wall_s,
+    }
+    if L:
+        out["drafted"] = rep.drafted
+        out["accepted"] = rep.accepted
+        out["acceptance"] = rep.accepted / max(rep.drafted, 1)
+        out["rollbacks"] = rep.rollbacks
+    return out
+
+
+def run(verbose: bool = True) -> list[str]:
+    import jax
+    from repro.configs.registry import get_config
+    from repro.models import model as M
+
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    rows: list[str] = []
+    results: dict[str, dict] = {}
+    for B in BATCHES:
+        for L in SPEC_LENS:
+            r = _bench_cell(cfg, params, L, B)
+            results[f"L{L}_B{B}"] = r
+            acc = (f" acc={r['acceptance']:.3f}" if L else "")
+            rows.append(csv_row(
+                f"serve_spec_L{L}_B{B}", r["wall_s"] * 1e6,
+                f"tok_per_unit={r['tokens_per_unit']:.3f} "
+                f"steps={r['steps']}{acc}"))
+
+    gl, gb = GATE_CELL, GATE_BASELINE
+    ratio = (results[f"L{gl[0]}_B{gl[1]}"]["tokens_per_unit"]
+             / results[f"L{gb[0]}_B{gb[1]}"]["tokens_per_unit"])
+    gate = {"cell": f"L{gl[0]}_B{gl[1]}", "baseline": f"L{gb[0]}_B{gb[1]}",
+            "min_ratio": GATE_MIN_RATIO, "ratio": ratio,
+            "met": ratio >= GATE_MIN_RATIO}
+    rows.append(csv_row(
+        "serve_spec_gate", 0.0,
+        f"ratio={ratio:.3f}_min={GATE_MIN_RATIO}_met={gate['met']}"))
+    _JSON_PATH.write_text(json.dumps(
+        {"spec_lens": list(SPEC_LENS), "batches": list(BATCHES),
+         "max_new_tokens": MAX_NEW, "prompt_len": PROMPT_LEN,
+         "max_len": MAX_LEN, "window": WINDOW, "sinks": SINKS,
+         "step_energy": STEP_ENERGY, "results": results, "gate": gate},
+        indent=2))
+    if verbose:
+        print("\n".join(rows))
+    if not gate["met"]:
+        raise RuntimeError(
+            f"speculative energy gate FAILED: tokens-per-proxy-joule "
+            f"ratio {ratio:.3f} < {GATE_MIN_RATIO} "
+            f"({gate['cell']} vs {gate['baseline']}; see {_JSON_PATH})")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -434,6 +434,57 @@ for _family, _cfg in _CACHE_FAMILIES.items():
     _make_decode_path(_family, _cfg)
 
 
+def _spec_audit(cfg_name: str, which: str) -> JaxprStats:
+    """Self-speculative serving steps: the windowed draft (single token,
+    StreamingLLM mask) and the multi-position verify. Shape-only, like
+    the decode audit; L=4 matches the benchmark's headline cell. Neither
+    step donates its cache (the window-start buffers are the rollback
+    checkpoint — see ``serve.engine._jitted_spec_fns``), so their budget
+    rows pin donation at 0/0, same as serve/decode."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import get_config
+    from repro.models import model as M
+
+    cfg = get_config(cfg_name).reduced()
+    B, T, L = 2, 16, 4
+    params = jax.eval_shape(
+        lambda k: M.init_params(k, cfg), jax.random.PRNGKey(0))
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, B, T, dtype=jnp.bfloat16))
+    cur_len = jax.ShapeDtypeStruct((B,), jnp.int32)
+    mask = jax.ShapeDtypeStruct((B,), jnp.bool_)
+
+    if which == "draft":
+        tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+
+        def fn(p, t, c, l, m):
+            return M.decode_step(p, cfg, t, c, l, write_mask=m,
+                                 window=8, sinks=2)
+    else:
+        tokens = jax.ShapeDtypeStruct((B, L), jnp.int32)
+
+        def fn(p, t, c, l, m):
+            return M.decode_verify(p, cfg, t, c, l, write_mask=m)
+
+    jaxpr = jax.make_jaxpr(fn)(params, tokens, cache, cur_len, mask)
+    return audit_jaxpr(jaxpr)
+
+
+def _make_spec_path(which: str, family: str, cfg_name: str):
+    @_hot_path(f"serve/{which}/{family}")
+    def _build() -> PathReport:
+        return PathReport.from_stats(f"serve/{which}/{family}",
+                                     _spec_audit(cfg_name, which))
+    return _build
+
+
+for _which in ("draft", "verify"):
+    for _family, _cfg in _CACHE_FAMILIES.items():
+        _make_spec_path(_which, _family, _cfg)
+
+
 def _collective_audit(kind: str) -> JaxprStats:
     """Trace the shard_map'd exchange collective on a 1-host mesh."""
     import jax

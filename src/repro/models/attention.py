@@ -192,9 +192,13 @@ def attention_prefill(p: Params, cfg: ModelConfig, x: jnp.ndarray,
 
 def attention_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
                      cache_k: jnp.ndarray, cache_v: jnp.ndarray,
-                     cur_len: jnp.ndarray):
-    """One-token decode. x: [B,1,d]; cache_k/v: [B,KV,T,dh]; cur_len: [] or
-    [B] int32 = number of valid positions already in the cache, per row.
+                     cur_len: jnp.ndarray, *, window: int | None = None,
+                     sinks: int = 0):
+    """Cached decode over S >= 1 fresh positions. x: [B,S,d]; cache_k/v:
+    [B,KV,T,dh]; cur_len: [] or [B] int32 = number of valid positions
+    already in the cache, per row. Query j of row b lands at cache
+    position ``cur_len[b] + j``; S=1 is the classic one-token step, S=L
+    scores a whole self-speculation window in one sweep.
 
     A scalar ``cur_len`` broadcasts to the whole batch (all rows at the
     same depth — the dryrun/benchmark path). Continuous-batching callers
@@ -202,12 +206,17 @@ def attention_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
     and attends under its own causal mask, so slots at different depths
     share one decode step without corrupting each other's cache.
 
-    Returns (y [B,1,d], new_cache_k, new_cache_v).
+    ``window`` switches on the sliding-window draft mask (StreamingLLM):
+    each query attends only to the last ``window`` cache positions plus
+    the first ``sinks`` attention-sink positions. ``None`` keeps the full
+    causal mask over the valid prefix — the target/verify semantics.
+
+    Returns (y [B,S,d], new_cache_k, new_cache_v).
     """
-    B, _, _ = x.shape
+    B, S, _ = x.shape
     T = cache_k.shape[2]
     cl = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
-    positions = cl[:, None]
+    positions = cl[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
     q, k, v = _project_qkv(p, cfg, x, positions)
 
     # Write each row's new K/V at that row's own position (a single
@@ -221,22 +230,30 @@ def attention_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray,
     cache_v = constrain(cache_v, "batch", "kv_heads", "kv_seq", "head_dim")
 
     with region("attn_decode"):
-        valid = (jnp.arange(T)[None, None, None, :]
-                 <= cl[:, None, None, None])
+        t_idx = jnp.arange(T)[None, None, None, :]
+        pos_q = positions[:, None, :, None]
+        valid = t_idx <= pos_q
+        if window is not None:
+            # Sliding-window + sinks: StreamingLLM draft mask. The sink
+            # prefix anchors softmax mass so narrow windows stay stable.
+            keep = t_idx > pos_q - jnp.int32(window)
+            if sinks:
+                keep = keep | (t_idx < sinks)
+            valid = valid & keep
         if cfg.decode_grouped and cfg.q_per_kv > 1:
             # Grouped form: contract q-groups directly against the raw
             # [B,KV,T,dh] cache — no head-repetition, so the cache is read
             # once instead of q_per_kv times (§Perf: memory-bound decode).
             # Only safe when heads aren't TP-sharded (kv_seq decode mode).
             KV, G, dh = cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim
-            qg = q.reshape(B, KV, G, 1, dh).astype(jnp.float32)
+            qg = q.reshape(B, KV, G, S, dh).astype(jnp.float32)
             kc = cache_k.astype(jnp.float32)
             scores = jnp.einsum("bkgqd,bktd->bkgqt", qg, kc) * dh ** -0.5
             scores = jnp.where(valid[:, :, None], scores, NEG_INF)
             probs = jax.nn.softmax(scores, axis=-1)
             out = jnp.einsum("bkgqt,bktd->bkgqd", probs,
                              cache_v.astype(jnp.float32))
-            out = out.reshape(B, KV * G, 1, dh).astype(q.dtype)
+            out = out.reshape(B, KV * G, S, dh).astype(q.dtype)
         else:
             kr = _repeat_kv(cache_k.astype(q.dtype), cfg, seq_axis="kv_seq")
             vr = _repeat_kv(cache_v.astype(q.dtype), cfg, seq_axis="kv_seq")

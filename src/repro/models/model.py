@@ -22,7 +22,7 @@ from repro.models.layers import (Params, embed_init, norm, norm_init,
 from repro.sharding.rules import constrain
 
 __all__ = ["init_params", "forward", "loss_fn", "init_cache",
-           "decode_step", "reset_cache_slots"]
+           "decode_step", "decode_verify", "reset_cache_slots"]
 
 
 def _compute_dtype(cfg: ModelConfig):
@@ -428,16 +428,24 @@ def reset_cache_slots(cfg: ModelConfig, cache: Params,
 
 def decode_step(p: Params, cfg: ModelConfig, tokens: jax.Array,
                 cache: Params, cur_len: jax.Array, *,
-                write_mask: jax.Array | None = None, unroll: bool = False):
-    """One decode step. tokens: [B,1] int32 (or embeds [B,1,d] for audio).
+                write_mask: jax.Array | None = None, unroll: bool = False,
+                window: int | None = None, sinks: int = 0):
+    """One decode step. tokens: [B,S] int32 (or embeds [B,S,d] for audio);
+    S=1 is the classic single-token step. S>1 (the self-speculative
+    verify sweep) is only meaningful for KV-attention families — the
+    recurrent families advance state once per *call*, not per position,
+    so multi-position scoring for them goes through ``decode_verify``.
 
     ``cur_len`` is [] or [B] int32 — per-row cache depth (scalar = every
-    row at the same depth). ``write_mask`` [B] bool, when given, confines
+    row at the same depth); position j of row b lands at cache position
+    ``cur_len[b] + j``. ``write_mask`` [B] bool, when given, confines
     cache mutation to True rows (False rows' cache state — KV entries and
     recurrent state — passes through untouched); logits are still
-    computed for every row.
+    computed for every row. ``window``/``sinks`` select the StreamingLLM
+    sliding-window attention mask used by the speculative draft pass
+    (KV-attention layers only; recurrent layers are unaffected).
 
-    Returns (logits [B,1,V], new_cache).
+    Returns (logits [B,S,V], new_cache).
     """
     dt = _compute_dtype(cfg)
     if cfg.embed_inputs:
@@ -450,7 +458,8 @@ def decode_step(p: Params, cfg: ModelConfig, tokens: jax.Array,
     if cfg.family in ("dense", "moe", "audio", "vlm"):
         def body(h, inp):
             pl, cl = inp
-            h, ncl = tb.tblock_decode(pl, cfg, h, cl, cur_len)
+            h, ncl = tb.tblock_decode(pl, cfg, h, cl, cur_len,
+                                      window=window, sinks=sinks)
             return h, _mask_cache(ncl, cl, write_mask)
         x, nc = _scan(body, x, (p["blocks"], cache["blocks"]), unroll)
         new_cache = {"blocks": nc}
@@ -467,7 +476,8 @@ def decode_step(p: Params, cfg: ModelConfig, tokens: jax.Array,
         def body(h, inp):
             pg, cg, ca = inp
             h, ncg = tb.zamba_group_decode(pg, cfg, h, cg)
-            h, nca = tb.shared_attn_decode(shared, cfg, h, ca, cur_len)
+            h, nca = tb.shared_attn_decode(shared, cfg, h, ca, cur_len,
+                                           window=window, sinks=sinks)
             # group caches stack layers ahead of batch: [gs, B, ...]
             return h, (_mask_cache(ncg, cg, write_mask, batch_axis=1),
                        _mask_cache(nca, ca, write_mask))
@@ -485,3 +495,51 @@ def decode_step(p: Params, cfg: ModelConfig, tokens: jax.Array,
         logits = x @ p["lm_head"].astype(x.dtype)
         logits = constrain(logits, "batch", None, "vocab")
     return logits, new_cache
+
+
+def decode_verify(p: Params, cfg: ModelConfig, tokens: jax.Array,
+                  cache: Params, cur_len: jax.Array, *,
+                  write_mask: jax.Array | None = None,
+                  unroll: bool = False):
+    """Self-speculative verify: score L >= 1 positions in one jitted step.
+
+    ``tokens`` [B,L] int32; position j of row b is the model input at
+    cache position ``cur_len[b] + j`` — row layout is the draft matrix
+    ``[t_0, d_1, .., d_{L-1}]`` where t_0 is the pending baseline token
+    and d_j are draft proposals. Returns ``(logits [B,L,V], new_cache)``
+    with logits[:, j] scoring the successor of position cur_len+j — the
+    greedy accept-prefix compares argmax(logits[:, j]) against d_{j+1}.
+
+    KV-attention families run the batched multi-position ``decode_step``
+    directly: each query row attends over the full cache under its own
+    causal mask — the same reduction the single-token step performs, so
+    accepted positions are token-exact to sequential decoding.
+
+    Recurrent families (ssm/hybrid) advance state once per call, so the
+    batched form would be wrong; they scan the single-token step over
+    the position axis instead — bit-exact to sequential decoding by
+    construction, still one compile key per (config, L).
+    """
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        return decode_step(p, cfg, tokens, cache, cur_len,
+                           write_mask=write_mask, unroll=unroll)
+
+    B, L = tokens.shape
+    cl = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
+
+    def body(c, inp):
+        tok_j, off = inp
+        logits_j, c = decode_step(p, cfg, tok_j[:, None], c, cl + off,
+                                  write_mask=write_mask, unroll=unroll)
+        return c, logits_j[:, 0]
+
+    xs = (jnp.moveaxis(tokens, 1, 0), jnp.arange(L, dtype=jnp.int32))
+    if unroll:
+        ls = []
+        c = cache
+        for j in range(L):
+            c, lj = body(c, jax.tree.map(lambda t: t[j], xs))
+            ls.append(lj)
+        return jnp.stack(ls, axis=1), c
+    cache, ls = jax.lax.scan(body, cache, xs)
+    return jnp.moveaxis(ls, 0, 1), cache

@@ -64,11 +64,12 @@ def tblock_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray,
 
 
 def tblock_decode(p: Params, cfg: ModelConfig, x: jnp.ndarray, cache: Params,
-                  cur_len: jnp.ndarray):
+                  cur_len: jnp.ndarray, *, window: int | None = None,
+                  sinks: int = 0):
     h, ck, cv = attn_mod.attention_decode(
         p["attn"], cfg, norm(p["ln1"], x, kind=cfg.norm_kind,
                              eps=cfg.norm_eps),
-        cache["k"], cache["v"], cur_len)
+        cache["k"], cache["v"], cur_len, window=window, sinks=sinks)
     x = x + h
     if cfg.family == "moe":
         # Dropless at decode: capacity drops are batch-composition
@@ -182,11 +183,12 @@ def shared_attn_forward(p: Params, cfg: ModelConfig, x, positions, *,
     return x
 
 
-def shared_attn_decode(p: Params, cfg: ModelConfig, x, cache, cur_len):
+def shared_attn_decode(p: Params, cfg: ModelConfig, x, cache, cur_len, *,
+                       window: int | None = None, sinks: int = 0):
     h, ck, cv = attn_mod.attention_decode(
         p["attn"], cfg, norm(p["ln1"], x, kind=cfg.norm_kind,
                              eps=cfg.norm_eps),
-        cache["k"], cache["v"], cur_len)
+        cache["k"], cache["v"], cur_len, window=window, sinks=sinks)
     x = x + h
     x = x + mlp(p["mlp"], norm(p["ln2"], x, kind=cfg.norm_kind,
                                eps=cfg.norm_eps),

@@ -31,10 +31,12 @@ from repro.core.sensors import available_host_sensor
 from repro.core.streaming import (StreamingAggregator,
                                   StreamingCombinationAggregator)
 from repro.models import model as M
-from repro.serve.scheduler import ServeScheduler, ServeTimeoutError
+from repro.serve.scheduler import (PriceSignalUnavailableError,
+                                   ServeScheduler, ServeTimeoutError)
 
 __all__ = ["ServeConfig", "Request", "Engine", "PhaseEnergyAccountant",
-           "ServeTimeoutError"]
+           "ServeTimeoutError", "PriceSignalUnavailableError",
+           "JoulesPerToken"]
 
 # Injection seam this module owns (see faults.FAULT_SITES): the engine
 # step loop can be killed at a chosen step-clock value, before any state
@@ -411,6 +413,30 @@ def _jitted_fns(cfg: ModelConfig):
     return decode, reset
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_spec_fns(cfg: ModelConfig, window: int, sinks: int):
+    """(windowed draft step, multi-position verify step) for
+    self-speculative decoding, shared across Engines.
+
+    Keyed on (config, window, sinks); within each jitted function the
+    compile-key set is bounded by the token shapes fed to it — [B,1] for
+    draft, [B,L] per speculation length L for verify — which the
+    recompile guard pins (see tests/test_recompile_guard.py).
+
+    Neither function donates its cache argument: the speculative step
+    holds the window-start cache as the recurrent families' rollback
+    checkpoint (and the KV families' verify input), so the buffers the
+    jitted call consumes must stay alive after it returns.
+    """
+    draft = jax.jit(
+        lambda p, t, c, l, m: M.decode_step(p, cfg, t, c, l, write_mask=m,
+                                            window=window, sinks=sinks))
+    verify = jax.jit(
+        lambda p, t, c, l, m: M.decode_verify(p, cfg, t, c, l,
+                                              write_mask=m))
+    return draft, verify
+
+
 @dataclasses.dataclass
 class ServeConfig:
     max_batch: int = 8
@@ -426,8 +452,28 @@ class ServeConfig:
     # per-request combination table to this heavy-hitters capacity when
     # the ladder widens sampling. None leaves the table alone. The
     # shrink is irreversible (the folded tail is gone), so
-    # de-escalation restores only the sampling period.
+    # de-escalation restores the sampling period and the speculation
+    # length but not the table capacity.
     degraded_max_combinations: int | None = None
+    # -- self-speculative decoding (MagicDec-style, same weights) ----------
+    # spec_len L >= 2 turns speculation on: each engine step drafts L-1
+    # tokens per active slot with sliding-window attention, then one
+    # batched verify scores all L positions; the greedy accept-prefix
+    # keeps output token-exact to spec_len=0. 0 disables.
+    spec_len: int = 0
+    # StreamingLLM draft mask geometry: last `spec_window` positions plus
+    # the first `spec_sinks` attention-sink positions.
+    spec_window: int = 16
+    spec_sinks: int = 4
+    # Effective speculation length while the overload ladder is widened
+    # (the degraded rung's L knob). None = speculation off under
+    # overload; de-escalation restores spec_len through the same
+    # unwiden edge that restores the sampling period.
+    degraded_spec_len: int | None = None
+    # Proxy J charged per drafted token (the windowed pass reads
+    # O(window+sinks) cache rows instead of O(max_len)). Defaults to
+    # step_energy * (spec_window + spec_sinks) / max_len.
+    draft_energy: float | None = None
 
 
 @dataclasses.dataclass
@@ -446,8 +492,44 @@ class Request:
     submit_step: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class JoulesPerToken:
+    """A quotable live J/token price signal (satellite of ROADMAP item 1).
+
+    ``j_per_token`` is total decode-phase energy (serve/decode +
+    serve/draft + serve/verify) divided by tokens emitted this session;
+    ``lo``/``hi`` carry the same ratio through the phases' summed Wald
+    interval bounds (estimator Eq. 16), so the CI reflects sampling
+    uncertainty in the energy numerator (the token count is exact).
+    """
+    j_per_token: float
+    lo: float
+    hi: float
+    alpha: float
+    tokens: int
+    energy_j: float
+    phases: tuple[str, ...]
+    domain: str | None = None
+
+
+# Phases that count toward the J/token quote: the decode hot path in all
+# its forms. serve/prefill is admission-side work (priced separately by
+# the per-prompt-token proxy) and serve/replay is recovery/rollback
+# bookkeeping — charging either to the per-emitted-token price would
+# make the quote depend on restore history.
+_JPT_PHASES = ("serve/decode", "serve/draft", "serve/verify")
+
+
 class Engine:
-    """Slot-based continuous batching over the pure decode step."""
+    """Slot-based continuous batching over the pure decode step.
+
+    With ``ServeConfig.spec_len`` set, the engine runs self-speculative
+    decoding: each step drafts ``L-1`` tokens per slot with a cheap
+    sliding-window pass over the *same* weights, then verifies all L
+    positions in one batched target step and emits the greedy-accepted
+    prefix plus the verify's bonus token — token-exact to the
+    non-speculative engine by construction (see :meth:`step`).
+    """
 
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig,
                  *, sample: Callable | None = None,
@@ -472,6 +554,35 @@ class Engine:
         self.slot_req: list[Request | None] = [None] * B
         self.slot_len = np.zeros(B, np.int32)
         self.sample = sample or (lambda logits: jnp.argmax(logits, -1))
+        # Session-local emitted-token counter for the J/token quote
+        # (serve/replay work after a restore re-derives cache state for
+        # tokens a previous session already emitted and charged, so
+        # neither its energy nor its tokens enter the price).
+        self._tokens_emitted = 0
+
+        self._draft_step = self._verify_step = None
+        if serve_cfg.spec_len:
+            if serve_cfg.spec_len < 2:
+                raise ValueError(
+                    f"spec_len={serve_cfg.spec_len}: speculation needs a "
+                    "verify width of at least 2 (1 draft + 1 bonus); use "
+                    "0 to disable")
+            if serve_cfg.degraded_spec_len is not None and not (
+                    2 <= serve_cfg.degraded_spec_len <= serve_cfg.spec_len):
+                raise ValueError(
+                    f"degraded_spec_len={serve_cfg.degraded_spec_len} must "
+                    f"be in [2, spec_len={serve_cfg.spec_len}] or None "
+                    "(None = speculation off under overload)")
+            if sample is not None:
+                # The accept rule compares draft tokens against the
+                # verify argmax; a non-greedy sampler would make
+                # "token-exact to the baseline" ill-defined.
+                raise ValueError(
+                    "speculative decoding is token-exact only under the "
+                    "default greedy sampler; pass sample=None with "
+                    "spec_len > 0")
+            self._draft_step, self._verify_step = _jitted_spec_fns(
+                cfg, serve_cfg.spec_window, serve_cfg.spec_sinks)
 
         # Cache-position contract: every decode step takes a [B] per-slot
         # position vector — each slot's K/V is written at its OWN length
@@ -600,15 +711,41 @@ class Engine:
                     self.scfg.degraded_max_combinations)
 
     def _restore_sampling(self) -> None:
+        # The single de-escalation reset path: the scheduler's unwiden
+        # edge clears its widened flag (restoring the effective
+        # speculation length, which is derived from that flag — see
+        # _spec_len_now) and lands here to restore the sampling period.
         if self.accountant is not None:
             self.accountant.reset_period()
 
+    def _spec_len_now(self) -> int:
+        """Effective speculation length this step: the configured L,
+        shrunk to ``degraded_spec_len`` (or off, when that is None)
+        while the overload ladder is widened. A pure function of
+        snapshot-carried scheduler state, so restored engines speculate
+        identically to the uninterrupted run."""
+        L = self.scfg.spec_len
+        if not L or not self.scheduler.widened:
+            return L
+        d = self.scfg.degraded_spec_len
+        return 0 if d is None else min(d, L)
+
+    def _draft_energy(self) -> float:
+        de = self.scfg.draft_energy
+        if de is not None:
+            return de
+        frac = (self.scfg.spec_window + self.scfg.spec_sinks) / max(
+            self.scfg.max_len, 1)
+        return self.scfg.step_energy * min(frac, 1.0)
+
     def step(self) -> list[Request]:
         """One engine step: admit queued requests into free slots, run
-        the overload ladder, decode every active slot one token, charge
-        energy, and enforce deadlines/budgets. Returns requests that
-        left their slot this step — completed (``done=True``) or aborted
-        (typed status, partial ``out_tokens``, ``done=False``)."""
+        the overload ladder, decode every active slot (one token
+        baseline, or one speculation window of up to ``spec_len`` tokens
+        — see :meth:`_step_speculative`), charge energy, and enforce
+        deadlines/budgets. Returns requests that left their slot this
+        step — completed (``done=True``) or aborted (typed status,
+        partial ``out_tokens``, ``done=False``)."""
         step = self.step_count
         plan = resolve_plan(self._faults)
         if plan is not None and plan.serve_crash_at(step):
@@ -628,31 +765,16 @@ class Engine:
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         finished: list[Request] = []
         if active:
-            # Mask writes to active slots: free slots must not advance
-            # their recurrent state on the garbage tokens in their rows.
-            mask = np.asarray([r is not None for r in self.slot_req])
-            with regions_mod.region("serve/decode"):
-                # Fresh host buffers (see prefill loop): the scheduler
-                # mutates self.tokens/slot_len right after this dispatch.
-                logits, self.cache = self._decode_masked(
-                    self.params, jnp.asarray(self.tokens.copy()),
-                    self.cache,
-                    jnp.asarray(self.slot_len.astype(np.int32)),
-                    jnp.asarray(mask))
-            nxt = np.asarray(self.sample(logits[:, -1, :]))
-            for s in active:
-                r = self.slot_req[s]
-                r.out_tokens.append(int(self.tokens[s, 0]))
-                self.slot_len[s] += 1
-                self.tokens[s, 0] = int(nxt[s])
-                if self.scfg.step_energy is not None:
-                    self._charge(r, self.scfg.step_energy)
-                hit_eos = int(nxt[s]) == self.scfg.eos_token
-                if (len(r.out_tokens) >= r.max_new_tokens or hit_eos
-                        or self.slot_len[s] >= self.scfg.max_len - 1):
-                    r.done = True
-                    self._release(s, "completed", step)
-                    finished.append(r)
+            L = self._spec_len_now()
+            # Speculation needs room for all L cache writes in every
+            # active slot; near the ring's end this window falls back to
+            # the baseline single-token step (same compile key as
+            # prefill, so the key set stays bounded).
+            if L and max(int(self.slot_len[s]) for s in active
+                         ) + L <= self.scfg.max_len - 1:
+                finished = self._step_speculative(step, active, L)
+            else:
+                finished = self._step_baseline(step, active)
         if self.accountant is not None:
             # Fold freshly sampled (phase, power) pairs into the
             # streaming accumulators; the raw stream never accumulates.
@@ -681,6 +803,253 @@ class Engine:
                 finished.append(r)
         self.step_count = step + 1
         return finished
+
+    def _step_baseline(self, step: int, active: list[int]) -> list[Request]:
+        """Advance every active slot one token (the non-speculative hot
+        path, and the speculative engine's fallback near the cache
+        ring's end)."""
+        finished: list[Request] = []
+        # Mask writes to active slots: free slots must not advance
+        # their recurrent state on the garbage tokens in their rows.
+        mask = np.asarray([r is not None for r in self.slot_req])
+        with regions_mod.region("serve/decode"):
+            # Fresh host buffers (see prefill loop): the scheduler
+            # mutates self.tokens/slot_len right after this dispatch.
+            logits, self.cache = self._decode_masked(
+                self.params, jnp.asarray(self.tokens.copy()),
+                self.cache,
+                jnp.asarray(self.slot_len.astype(np.int32)),
+                jnp.asarray(mask))
+        nxt = np.asarray(self.sample(logits[:, -1, :]))
+        for s in active:
+            r = self.slot_req[s]
+            r.out_tokens.append(int(self.tokens[s, 0]))
+            self.slot_len[s] += 1
+            self._tokens_emitted += 1
+            self.tokens[s, 0] = int(nxt[s])
+            if self.scfg.step_energy is not None:
+                self._charge(r, self.scfg.step_energy)
+            hit_eos = int(nxt[s]) == self.scfg.eos_token
+            if (len(r.out_tokens) >= r.max_new_tokens or hit_eos
+                    or self.slot_len[s] >= self.scfg.max_len - 1):
+                r.done = True
+                self._release(s, "completed", step)
+                finished.append(r)
+        return finished
+
+    def _step_speculative(self, step: int, active: list[int],
+                          L: int) -> list[Request]:
+        """One speculation window: draft L-1 tokens per slot with the
+        windowed pass, verify all L positions in one batched target
+        step, emit the greedy-accepted prefix plus the verify's bonus
+        token.
+
+        Token-exactness argument, per cache family:
+
+        * The verify step writes each slot's L fresh K/V rows and then
+          attends over the full cache under per-position causal masks —
+          the same reduction the single-token step performs — so its
+          logits are the baseline's logits wherever the input prefix
+          matches, which the accept rule guarantees position by
+          position (accepted token j+1 must equal argmax of verify
+          position j; the first mismatch truncates the window and the
+          verify argmax itself is emitted, exactly the token the
+          baseline would have produced).
+        * KV families (dense/moe) roll back rejected positions by slot
+          length alone: rows past ``slot_len`` are invisible to every
+          mask and are rewritten by the next window before they can be
+          read.
+        * Recurrent families (ssm/hybrid) advance state once per call,
+          so rejected drafts would leave wrong state behind. The
+          window-start cache (immutable jax arrays — holding the
+          reference IS the checkpoint) is the verify input and the
+          rollback target: after acceptance the emitted tokens are
+          replayed from the checkpoint through the baseline masked
+          single-token step (bit-exact by construction, no new compile
+          key) under the ``serve/replay`` phase.
+
+        The window is atomic on the step clock: the injected-crash site
+        fires before any mutation, so snapshots only ever observe
+        window boundaries and mid-window kill-and-restore is bit-exact.
+        """
+        scfg = self.scfg
+        rep = self.report
+        recurrent = self.cfg.family in ("ssm", "hybrid")
+        mask = np.asarray([r is not None for r in self.slot_req])
+        checkpoint = self.cache        # window-start state (see docstring)
+        n0 = self.slot_len.astype(np.int32).copy()
+
+        # Draft matrix row s: [t0, d1, .., d_{L-1}] — the pending token
+        # followed by L-1 windowed-greedy proposals.
+        draft = np.zeros((len(self.slot_req), L), np.int32)
+        draft[:, 0] = self.tokens[:, 0]
+        cur = n0.copy()
+        toks = self.tokens.copy()
+        with regions_mod.region("serve/draft"):
+            for j in range(1, L):
+                logits, self.cache = self._draft_step(
+                    self.params, jnp.asarray(toks.copy()), self.cache,
+                    jnp.asarray(cur.copy()), jnp.asarray(mask))
+                prop = np.asarray(jnp.argmax(logits[:, -1, :], -1))
+                draft[:, j] = prop
+                toks[:, 0] = prop
+                cur += 1
+
+        # One batched target step scores all L positions. KV families
+        # verify on the post-draft cache (the draft already wrote rows
+        # n0..n0+L-2; verify rewrites n0..n0+L-1 with its own K/V);
+        # recurrent families verify from the checkpoint.
+        vin = checkpoint if recurrent else self.cache
+        with regions_mod.region("serve/verify"):
+            vlogits, vcache = self._verify_step(
+                self.params, jnp.asarray(draft), vin,
+                jnp.asarray(n0.copy()), jnp.asarray(mask))
+        v = np.asarray(jnp.argmax(vlogits, -1))        # [B, L]
+        if not recurrent:
+            self.cache = vcache
+
+        # Proxy charges: the windowed draft reads O(window) cache rows
+        # per token; the verify is one full-cache sweep per slot
+        # regardless of L (the MagicDec bandwidth model — that is the
+        # whole win).
+        if scfg.step_energy is not None:
+            de = self._draft_energy()
+            for s in active:
+                self._charge(self.slot_req[s],
+                             de * (L - 1) + scfg.step_energy)
+
+        # Greedy accept-prefix, mirroring the baseline's per-token
+        # emit/finish semantics exactly.
+        finished: list[Request] = []
+        emitted: dict[int, list[int]] = {}
+        for s in active:
+            r = self.slot_req[s]
+            rec = rep.request(r.rid)
+            rep.drafted += L - 1
+            rec.spec_drafted += L - 1
+            accepted = 0
+            seq: list[int] = []
+            pend = int(draft[s, 0])
+            released = False
+            for j in range(L):
+                r.out_tokens.append(pend)
+                seq.append(pend)
+                self.slot_len[s] += 1
+                self._tokens_emitted += 1
+                nxt = int(v[s, j])
+                hit_eos = nxt == scfg.eos_token
+                if (len(r.out_tokens) >= r.max_new_tokens or hit_eos
+                        or self.slot_len[s] >= scfg.max_len - 1):
+                    r.done = True
+                    self._release(s, "completed", step)
+                    finished.append(r)
+                    released = True
+                    break
+                if j + 1 < L and int(draft[s, j + 1]) == nxt:
+                    accepted += 1
+                    pend = nxt
+                    continue
+                pend = nxt          # first mismatch (or bonus token)
+                break
+            if not released:
+                self.tokens[s, 0] = pend
+                emitted[s] = seq
+            rep.accepted += accepted
+            rep.rejected += (L - 1) - accepted
+            rec.spec_accepted += accepted
+            if accepted < L - 1:
+                rep.rollbacks += 1
+
+        if recurrent:
+            # Roll back to the window-start checkpoint and replay each
+            # surviving slot's emitted tokens through the baseline
+            # masked step. Released slots skip replay: admission resets
+            # their state before reuse.
+            self.cache = checkpoint
+            depth = max((len(t) for t in emitted.values()), default=0)
+            rcur = n0.copy()
+            rtoks = self.tokens.copy()
+            with regions_mod.region("serve/replay"):
+                for k in range(depth):
+                    wmask = np.zeros(len(self.slot_req), bool)
+                    for s, t in emitted.items():
+                        if k < len(t):
+                            wmask[s] = True
+                            rtoks[s, 0] = t[k]
+                    _, self.cache = self._decode_masked(
+                        self.params, jnp.asarray(rtoks.copy()), self.cache,
+                        jnp.asarray(rcur.copy()), jnp.asarray(wmask))
+                    rcur += wmask
+        return finished
+
+    def current_joules_per_token(self, *, alpha: float = 0.05,
+                                 max_rel_halfwidth: float = 0.5,
+                                 domain: str | None = None
+                                 ) -> JoulesPerToken:
+        """Live J/token over the decode phases (serve/decode +
+        serve/draft + serve/verify), with the streaming Wald CI carried
+        through — the admission price-tier signal from ROADMAP item 1.
+
+        Raises :class:`PriceSignalUnavailableError` (typed, never a
+        silent bad quote) when no accountant is attached, nothing has
+        been emitted or drained yet, any decode phase's CI is invalid
+        (estimator Eq. 16 normality guard), or the summed CI halfwidth
+        exceeds ``max_rel_halfwidth`` of the estimate. ``domain``
+        selects one rail of a multi-channel sensor bank (e.g. "hbm" for
+        the accepted-tokens-per-HBM-joule headline).
+        """
+        if self.accountant is None:
+            raise PriceSignalUnavailableError(
+                "no accountant attached: the J/token quote needs "
+                "measured phase energy, not the step_energy proxy")
+        if self._tokens_emitted <= 0:
+            raise PriceSignalUnavailableError(
+                "no tokens emitted this session yet")
+        try:
+            est = self.accountant.estimates(alpha)
+        except RuntimeError as e:
+            raise PriceSignalUnavailableError(
+                f"no samples drained yet: {e}") from e
+        tbl = est.table
+        # Only phases that have actually been sampled participate: a
+        # zero-sample row (e.g. serve/draft interned but speculation
+        # off) contributes no energy and its Wald guard is vacuously
+        # invalid — it must not block the quote.
+        idx = [i for i in range(len(tbl)) if tbl.names[i] in _JPT_PHASES
+               and int(tbl.n_samples[i]) > 0]
+        if not idx:
+            raise PriceSignalUnavailableError(
+                "no decode-phase samples yet (phases "
+                f"{_JPT_PHASES} absent from the estimate table)")
+        invalid = [tbl.names[i] for i in idx if not bool(tbl.ci_valid[i])]
+        if invalid:
+            raise PriceSignalUnavailableError(
+                f"Wald CI not yet valid for phase(s) {invalid} "
+                "(normality guard n*p>5 — keep serving and re-quote)")
+        if domain is None:
+            e = float(sum(tbl.e_hat[i] for i in idx))
+            lo = float(sum(tbl.e_lo[i] for i in idx))
+            hi = float(sum(tbl.e_hi[i] for i in idx))
+        else:
+            if tbl.domains is None or domain not in tbl.domains:
+                raise PriceSignalUnavailableError(
+                    f"domain {domain!r} not measured (sensor rails: "
+                    f"{tbl.domains})")
+            j = tbl.domains.index(domain)
+            e = float(sum(tbl.e_rails[i, j] for i in idx))
+            lo = float(sum(tbl.e_rails_lo[i, j] for i in idx))
+            hi = float(sum(tbl.e_rails_hi[i, j] for i in idx))
+        half = 0.5 * (hi - lo)
+        if e <= 0.0 or half > max_rel_halfwidth * e:
+            raise PriceSignalUnavailableError(
+                f"CI too wide to quote: halfwidth {half:.3g} J on "
+                f"{e:.3g} J exceeds {max_rel_halfwidth:.0%} "
+                "(keep serving and re-quote)")
+        t = self._tokens_emitted
+        return JoulesPerToken(
+            j_per_token=e / t, lo=lo / t, hi=hi / t, alpha=alpha,
+            tokens=t, energy_j=e,
+            phases=tuple(tbl.names[i] for i in idx), domain=domain)
 
     def _release(self, s: int, status: str, step: int,
                  error: str | None = None) -> None:

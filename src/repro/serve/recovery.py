@@ -21,6 +21,22 @@ restored from its last durable snapshot with
   overload-ladder state ride in the snapshot; every restored request is
   marked ``recovered`` in the :class:`~repro.serve.scheduler.ServeReport`.
 
+Self-speculative decoding (``ServeConfig.spec_len``) needs no snapshot
+schema of its own: a speculation window is **atomic on the step clock**
+(the injected-crash site fires before any mutation, so a killed step
+leaves the engine exactly as the previous window published it), which
+means snapshots only ever observe window boundaries — the emitted
+prefix, pending token and slot lengths the baseline contract already
+serializes. The replay path below is the baseline single-token
+teacher-forced step, valid for every cache family regardless of how the
+tokens were originally produced, so "kill mid-speculation-window and
+restore" reduces to the established bit-exact replay; the effective
+speculation length after restore is derived from the snapshotted
+scheduler ``widened`` flag, so a degraded engine resumes degraded.
+Replay energy lands in the ``serve/replay`` phase (as for rollback),
+never in the per-token price phases, and the spill-epoch fence above
+keeps pre-crash speculation energy from being double-charged.
+
 Snapshots use the shared ``ckpt`` manifest+CRC+rename protocol
 (``snap_%09d`` directories plus an atomically-replaced ``LATEST``
 pointer), so torn writes are invisible to readers and corruption

@@ -43,8 +43,9 @@ from repro.core.faults import FaultPlan, declare_site, resolve_plan
 __all__ = [
     "ServeError", "AdmissionError", "QueueFullError",
     "DeadlineExceededError", "EnergyBudgetExceededError",
-    "ServeTimeoutError", "OverloadPolicy", "AdmissionQueue",
-    "RequestRecord", "ServeReport", "ServeScheduler", "LADDER",
+    "ServeTimeoutError", "PriceSignalUnavailableError", "OverloadPolicy",
+    "AdmissionQueue", "RequestRecord", "ServeReport", "ServeScheduler",
+    "LADDER",
 ]
 
 # Injection seam this module owns (see faults.FAULT_SITES): transient
@@ -88,6 +89,15 @@ class ServeTimeoutError(ServeError):
     def __init__(self, msg: str, undrained: Iterable[int] = ()):
         super().__init__(msg)
         self.undrained = tuple(undrained)
+
+
+class PriceSignalUnavailableError(ServeError):
+    """``Engine.current_joules_per_token`` cannot quote yet: no
+    accountant / no tokens / no drained decode-phase samples, the Wald
+    CI is invalid (estimator normality guard), or the CI is wider than
+    the caller's quoting threshold. Admission price tiers must treat
+    this as "no signal", never as a free tier — a silent zero-J quote
+    would price overload exactly backwards."""
 
 
 # -- policy -------------------------------------------------------------------
@@ -237,12 +247,28 @@ class RequestRecord:
     recovered: bool = False
     reason: str | None = None
     error: str | None = None
+    # Self-speculative decoding provenance: draft tokens proposed for /
+    # accepted by this request's slot (0/0 when speculation is off).
+    spec_drafted: int = 0
+    spec_accepted: int = 0
+
+    @property
+    def acceptance_rate(self) -> float | None:
+        """Accepted / drafted for this request, or None when no window
+        ever covered it (speculation off, or only fallback steps)."""
+        if self.spec_drafted == 0:
+            return None
+        return self.spec_accepted / self.spec_drafted
 
     def to_json(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["acceptance_rate"] = self.acceptance_rate
+        return d
 
     @classmethod
     def from_json(cls, d: dict) -> "RequestRecord":
+        d = dict(d)
+        d.pop("acceptance_rate", None)   # derived, not a field
         return cls(**d)
 
 
@@ -272,6 +298,14 @@ class ServeReport:
         self.recovered = 0
         self.admission_faults = 0
         self.buffer_overruns = 0
+        # Self-speculative decoding counters. Conservation per window:
+        # drafted = accepted + rejected for every slot; `rollbacks`
+        # counts windows that discarded at least one draft (the
+        # KV-rewind / checkpoint-replay events).
+        self.drafted = 0
+        self.accepted = 0
+        self.rejected = 0
+        self.rollbacks = 0
         # Interner pressure of the accountant's per-request combination
         # table (engine-maintained; None without track_requests):
         # distinct/miss/growth counters plus, in bounded mode, the
@@ -349,6 +383,15 @@ class ServeReport:
                       "queued", "admitted"):
             if by.get(label):
                 parts.append(f"{label}: {by[label]}")
+        if self.drafted:
+            # ACCEPTANCE disclosure (mirrors COVERAGE/TAIL): speculation
+            # quality is reported whenever any window ran, so a
+            # regression to 0% acceptance is visible, not silent.
+            rate = 100.0 * self.accepted / self.drafted
+            parts.append(
+                f"ACCEPTANCE {self.accepted}/{self.drafted} drafted "
+                f"tokens accepted ({rate:.1f}%), "
+                f"{self.rollbacks} rollbacks")
         out = {
             "requests": {str(r.rid): r.to_json() for r in self.requests},
             "by_status": by,
@@ -362,6 +405,10 @@ class ServeReport:
                 "recovered": self.recovered,
                 "admission_faults": self.admission_faults,
                 "buffer_overruns": self.buffer_overruns,
+                "drafted": self.drafted,
+                "accepted": self.accepted,
+                "rejected": self.rejected,
+                "rollbacks": self.rollbacks,
             },
             "summary": "; ".join(parts),
         }
@@ -377,7 +424,9 @@ class ServeReport:
             "counters": [self.rejected_full, self.shed,
                          self.aborted_deadline, self.aborted_budget,
                          self.completed, self.recovered,
-                         self.admission_faults, self.buffer_overruns],
+                         self.admission_faults, self.buffer_overruns,
+                         self.drafted, self.accepted, self.rejected,
+                         self.rollbacks],
         }
         if self.attribution is not None:
             out["attribution"] = dict(self.attribution)
@@ -390,9 +439,15 @@ class ServeReport:
             rec = RequestRecord.from_json(rj)
             rep._records[rec.rid] = rec
         rep.transitions = [tuple(t) for t in d["transitions"]]
+        # Pre-speculation snapshots carry 8 counters; pad with zeros so
+        # old snapshots restore cleanly (same discipline as the
+        # attribution key below).
+        counters = list(d["counters"]) + [0] * (12 - len(d["counters"]))
         (rep.rejected_full, rep.shed, rep.aborted_deadline,
          rep.aborted_budget, rep.completed, rep.recovered,
-         rep.admission_faults, rep.buffer_overruns) = d["counters"]
+         rep.admission_faults, rep.buffer_overruns,
+         rep.drafted, rep.accepted, rep.rejected,
+         rep.rollbacks) = counters
         # Pre-bounded snapshots have no attribution key; .get keeps the
         # round-trip backward compatible.
         rep.attribution = d.get("attribution")
@@ -430,6 +485,16 @@ class ServeScheduler:
         submitters should slow down (the signal is advisory; the shed
         rung is the enforcement)."""
         return self.level >= 1
+
+    @property
+    def widened(self) -> bool:
+        """True while the degraded rung's widen hook is engaged. The
+        engine derives its effective speculation length from this flag
+        (``degraded_spec_len`` while True), so de-escalation restores L
+        through the same single unwiden edge that restores the sampling
+        period — the flag rides in :meth:`state_json`, making the
+        derived knobs snapshot-consistent for free."""
+        return self._widened
 
     def submit(self, req, step: int) -> None:
         """Enqueue ``req`` at engine step ``step``.
@@ -511,19 +576,29 @@ class ServeScheduler:
                 if victim is None:
                     break
                 self._shed(victim, step, "load_shed")
+        hooks = ""
         if target >= 3 and not self._widened:
             if widen_fn is not None:
                 widen_fn(self.policy.widen_factor)
             self._widened = True
+            hooks = ("; degraded hooks engaged (sampling widened, "
+                     "speculation shrunk)")
         elif target < 3 and self._widened:
+            # The single de-escalation reset edge: one unwiden call
+            # restores the sampling period, and clearing the flag
+            # restores the effective speculation length (derived from
+            # it) — recorded on the same transition below so neither
+            # knob can stay degraded silently.
             if unwiden_fn is not None:
                 unwiden_fn()
             self._widened = False
+            hooks = ("; degraded hooks reset (sampling period and "
+                     "speculation length restored)")
         if target != self.level:
             self.report.transition(
                 step, LADDER[self.level], LADDER[target],
                 f"queue depth {len(self.queue)}"
-                + (" after shedding" if target >= 2 else ""))
+                + (" after shedding" if target >= 2 else "") + hooks)
             self.level = target
 
     def _shed(self, req, step: int, reason: str) -> None:

@@ -16,7 +16,8 @@ from repro.core import device_pipeline as dp
 from repro.core.sensors import InstantTraceSensor
 from repro.core.timeline import RegionCost, synthesize
 from repro.models import model as M
-from repro.serve.engine import Engine, Request, ServeConfig, _jitted_fns
+from repro.serve.engine import (Engine, Request, ServeConfig, _jitted_fns,
+                                _jitted_spec_fns)
 
 
 def _fresh_cfg():
@@ -103,6 +104,56 @@ def test_snapshot_restore_and_aborts_add_no_compile_keys(tmp_path):
     assert jit_cache_size(decode) == 1, \
         "snapshot/restore or abort path introduced a new compile key"
     assert jit_cache_size(reset) == 1
+
+
+def test_speculative_draft_and_verify_compile_once():
+    # The speculative hot loop adds exactly two traces per
+    # (config, window, sinks) key — one windowed draft step and one
+    # L-wide verify step — reused across windows, slots and engines.
+    # Rollback replay rides the baseline masked-decode trace, so a full
+    # speculative run must not grow any cache beyond those.
+    cfg = dataclasses.replace(_fresh_cfg(), vocab_size=_fresh_cfg()
+                              .vocab_size + 9)   # own key for this test
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(max_batch=2, max_len=64, eos_token=-1,
+                       spec_len=4, spec_window=8, spec_sinks=2)
+    draft, verify = _jitted_spec_fns(cfg, scfg.spec_window, scfg.spec_sinks)
+    decode, reset = _jitted_fns(cfg)
+    assert jit_cache_size(draft) == 0 and jit_cache_size(verify) == 0
+
+    rng = np.random.default_rng(5)
+    eng = Engine(cfg, params, scfg)
+    assert eng._draft_step is draft and eng._verify_step is verify
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, n)
+                    .astype(np.int32),
+                    max_new_tokens=8)
+            for i, n in enumerate((6, 3))]
+    eng.add_request(reqs[0])
+    eng.step()
+    eng.add_request(reqs[1])                    # ragged speculative decode
+    for _ in range(40):
+        eng.step()
+        if all(r is None for r in eng.slot_req):
+            break
+    assert all(r.done for r in reqs)
+    assert eng.report.drafted > 0
+
+    assert jit_cache_size(draft) == 1, \
+        "draft step recompiled within one (config, window, sinks) key"
+    assert jit_cache_size(verify) == 1, \
+        "verify step recompiled within one (config, L) key"
+    assert jit_cache_size(decode) == 1          # prefill + rollback replay
+    assert jit_cache_size(reset) == 1
+
+    # A second speculative engine over the same config reuses all traces.
+    eng2 = Engine(cfg, params, scfg)
+    eng2.run_until_drained([Request(rid=9,
+                                    prompt=np.array([1, 2, 3], np.int32),
+                                    max_new_tokens=6)])
+    assert jit_cache_size(draft) == 1
+    assert jit_cache_size(verify) == 1
+    assert jit_cache_size(decode) == 1
 
 
 _GUARD_CHUNK = 333        # unique chunk size => this module owns the key

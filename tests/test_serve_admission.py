@@ -13,7 +13,8 @@ from repro.configs.registry import get_config
 from repro.core import regions as regions_mod
 from repro.core.sampler import SampleBuffer
 from repro.models import model as M
-from repro.serve.engine import (Engine, PhaseEnergyAccountant, Request,
+from repro.serve.engine import (Engine, PhaseEnergyAccountant,
+                                PriceSignalUnavailableError, Request,
                                 ServeConfig, ServeTimeoutError)
 
 ARCH = "qwen3-1.7b"
@@ -152,6 +153,95 @@ def test_scale_period_is_idempotent_from_base():
     assert acct.sampler.period == pytest.approx(base * 4.0)
     acct.reset_period()
     assert acct.sampler.period == pytest.approx(base)
+
+
+# -- live J/token price signal (typed-error quote path; stubbed sampler) ------
+
+def _jpt_engine(arch_setup, acct=None, max_new=4):
+    """Engine that has emitted tokens (so only the sample-side ladder of
+    the quote's typed errors remains)."""
+    cfg, params = arch_setup
+    eng = Engine(cfg, params, ServeConfig(max_batch=1, max_len=48),
+                 accountant=acct)
+    eng.run_until_drained(
+        [Request(0, _prompt(cfg), max_new_tokens=max_new)])
+    assert eng._tokens_emitted > 0
+    return eng
+
+
+def _drain_mix(acct, n_decode=30, n_other=30, elapsed=2.0):
+    """Drain a deterministic sample mix: n_decode serve/decode samples
+    at 100 W against n_other elsewhere, over `elapsed` seconds."""
+    rid = regions_mod.registry.intern("serve/decode")
+    other = regions_mod.registry.intern("serve/prefill")
+    rids = np.asarray([rid] * n_decode + [other] * n_other)
+    acct.sampler.queue.append((rids, np.full(len(rids), 100.0)))
+    acct.sampler.elapsed = elapsed
+    acct.drain()
+
+
+def test_jpt_requires_accountant(arch_setup):
+    cfg, params = arch_setup
+    eng = Engine(cfg, params, ServeConfig(max_batch=1, max_len=48))
+    with pytest.raises(PriceSignalUnavailableError, match="accountant"):
+        eng.current_joules_per_token()
+
+
+def test_jpt_requires_emitted_tokens(arch_setup):
+    cfg, params = arch_setup
+    eng = Engine(cfg, params, ServeConfig(max_batch=1, max_len=48),
+                 accountant=_acct_with_fake())
+    with pytest.raises(PriceSignalUnavailableError, match="no tokens"):
+        eng.current_joules_per_token()
+
+
+def test_jpt_requires_drained_samples(arch_setup):
+    eng = _jpt_engine(arch_setup, _acct_with_fake())
+    with pytest.raises(PriceSignalUnavailableError, match="no samples"):
+        eng.current_joules_per_token()
+
+
+def test_jpt_requires_decode_phase_samples(arch_setup):
+    eng = _jpt_engine(arch_setup, _acct_with_fake())
+    _drain_mix(eng.accountant, n_decode=0, n_other=30)
+    with pytest.raises(PriceSignalUnavailableError, match="decode-phase"):
+        eng.current_joules_per_token()
+
+
+def test_jpt_wald_normality_guard_blocks_quote(arch_setup):
+    # Only serve/decode samples: p-hat == 1 so n*(1-p) == 0 — the Wald
+    # guard fails and the quote is a typed reject, not a degenerate CI.
+    eng = _jpt_engine(arch_setup, _acct_with_fake())
+    _drain_mix(eng.accountant, n_decode=30, n_other=0)
+    with pytest.raises(PriceSignalUnavailableError, match="normality"):
+        eng.current_joules_per_token()
+
+
+def test_jpt_ci_width_gate(arch_setup):
+    eng = _jpt_engine(arch_setup, _acct_with_fake())
+    _drain_mix(eng.accountant)
+    with pytest.raises(PriceSignalUnavailableError, match="too wide"):
+        eng.current_joules_per_token(max_rel_halfwidth=0.0)
+
+
+def test_jpt_quote_brackets_estimate(arch_setup):
+    eng = _jpt_engine(arch_setup, _acct_with_fake())
+    _drain_mix(eng.accountant)
+    q = eng.current_joules_per_token()
+    assert q.tokens == eng._tokens_emitted > 0
+    assert q.lo <= q.j_per_token <= q.hi
+    assert q.energy_j > 0.0
+    assert set(q.phases) <= {"serve/decode", "serve/draft", "serve/verify"}
+    assert q.j_per_token == pytest.approx(q.energy_j / q.tokens)
+    # p-hat = 0.5 of 2 s at a constant 100 W: 100 J in the decode phase.
+    assert q.energy_j == pytest.approx(100.0)
+
+
+def test_jpt_domain_must_be_measured(arch_setup):
+    eng = _jpt_engine(arch_setup, _acct_with_fake())
+    _drain_mix(eng.accountant)
+    with pytest.raises(PriceSignalUnavailableError, match="not measured"):
+        eng.current_joules_per_token(domain="hbm")
 
 
 # -- bounded sample ring (satellite: overruns counted, never silent) ----------

@@ -148,6 +148,84 @@ def test_slot_reuse_does_not_inherit_previous_state(arch_setup):
     assert rb.out_tokens == solo_b, "reused slot leaked previous state"
 
 
+def _scfg_spec(spec_len=4, **kw):
+    return ServeConfig(max_batch=3, max_len=64, eos_token=-1,
+                       spec_len=spec_len, spec_window=8, spec_sinks=2, **kw)
+
+
+def _run_staggered(cfg, params, scfg, prompts, max_new=8):
+    """The staggered-admission pattern from the acceptance test above:
+    each new request prefills while earlier ones are mid-decode."""
+    eng = Engine(cfg, params, scfg)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    eng.add_request(reqs[0])
+    for _ in range(2):
+        eng.step()
+    eng.add_request(reqs[1])
+    for _ in range(2):
+        eng.step()
+    eng.add_request(reqs[2])
+    for _ in range(40):
+        eng.step()
+        if all(r is None for r in eng.slot_req):
+            break
+    assert all(r.done for r in reqs)
+    return [r.out_tokens for r in reqs], eng
+
+
+def test_speculative_staggered_token_exact(arch_setup):
+    """Tentpole oracle: the self-speculative engine's streams are
+    token-exact to the non-speculative engine under staggered ragged
+    admission — KV families rewind by slot length, recurrent families
+    checkpoint-and-replay, and neither may leak into the output."""
+    cfg, params = arch_setup
+    prompts = _prompts(cfg)
+    base, _ = _run_staggered(cfg, params, _scfg(), prompts)
+    spec, eng = _run_staggered(cfg, params, _scfg_spec(), prompts)
+    assert spec == base
+    rep = eng.report
+    assert rep.drafted > 0
+    # Window conservation: every drafted token is accepted or rejected.
+    assert rep.accepted + rep.rejected == rep.drafted
+    # Per-request provenance sums to the report counters.
+    assert sum(r.spec_drafted for r in rep.requests) == rep.drafted
+    assert sum(r.spec_accepted for r in rep.requests) == rep.accepted
+    for rec in rep.requests:
+        if rec.spec_drafted:
+            assert rec.acceptance_rate == pytest.approx(
+                rec.spec_accepted / rec.spec_drafted)
+    cov = rep.coverage()
+    assert "ACCEPTANCE" in cov["summary"]
+    assert cov["counters"]["drafted"] == rep.drafted
+
+
+def test_speculative_narrow_window_rolls_back_token_exact(arch_setup):
+    """A draft window too narrow to predict well exercises the
+    rejection/rollback path hard; the output must still be token-exact
+    (rejected drafts must leave no trace in cache state)."""
+    cfg, params = arch_setup
+    prompts = _prompts(cfg, lengths=(13, 4, 9), seed=3)
+    base, _ = _run_staggered(cfg, params, _scfg(), prompts, max_new=10)
+    spec, eng = _run_staggered(
+        cfg, params,
+        ServeConfig(max_batch=3, max_len=64, eos_token=-1,
+                    spec_len=3, spec_window=2, spec_sinks=0),
+        prompts, max_new=10)
+    assert spec == base
+    assert eng.report.drafted > 0
+
+
+def test_speculative_requires_greedy_sampler():
+    cfg = get_config("qwen3-1.7b").reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="greedy"):
+        Engine(cfg, params, _scfg_spec(),
+               sample=lambda logits: logits.argmax(-1))
+    with pytest.raises(ValueError, match="spec_len"):
+        Engine(cfg, params, ServeConfig(max_batch=2, spec_len=1))
+
+
 def test_prompt_too_long_rejected():
     cfg = get_config("qwen3-1.7b").reduced()
     params = M.init_params(jax.random.PRNGKey(0), cfg)

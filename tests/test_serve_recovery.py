@@ -222,6 +222,134 @@ def test_overload_ladder_sheds_and_widens(arch_setup):
 
 
 # ---------------------------------------------------------------------------
+# Self-speculative decoding chaos: kill mid-speculation (windows in
+# flight), restore, and the merged streams must equal both the
+# uninterrupted speculative run AND the non-speculative baseline — per
+# cache family, since KV rewind and recurrent checkpoint/replay are
+# different rollback mechanisms.
+# ---------------------------------------------------------------------------
+
+SPEC_ARCHS = ("qwen3-1.7b", "qwen3-moe-30b-a3b", "xlstm-125m",
+              "zamba2-1.2b")
+
+
+@pytest.mark.parametrize("arch", SPEC_ARCHS)
+def test_kill_restore_mid_speculation_bit_exact(arch, tmp_path):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(max_batch=2, max_len=64, eos_token=-1,
+                       step_energy=1.0, spec_len=4, spec_window=8,
+                       spec_sinks=2)
+    base_scfg = ServeConfig(max_batch=2, max_len=64, eos_token=-1,
+                            step_energy=1.0)
+    prompts = _prompts(cfg, 3, seed=9)
+
+    def mk():
+        return [Request(i, prompts[i].copy(), max_new_tokens=9)
+                for i in range(3)]
+
+    def run(scfg_, faults_=None, snap_dir=None):
+        eng = Engine(cfg, params, scfg_, faults=faults_)
+        reqs = mk()
+        for r in reqs:
+            eng.submit(r)
+        for _ in range(500):
+            if snap_dir is not None and eng.step_count % 2 == 0:
+                eng.snapshot(snap_dir)
+            eng.step()
+            if (not any(s is not None for s in eng.slot_req)
+                    and not len(eng.scheduler.queue)):
+                break
+        return {r.rid: list(r.out_tokens) for r in reqs}, eng
+
+    baseline, _ = run(base_scfg)
+    ref, ref_eng = run(scfg)
+    assert ref == baseline                     # the correctness oracle
+    assert ref_eng.report.drafted > 0          # speculation actually ran
+
+    # Crash at step 3: snapshots exist at steps 0 and 2, so the restore
+    # resumes from a window boundary with speculation still mid-stream
+    # for every slot (windows are atomic on the step clock — see
+    # serve/recovery.py).
+    snap = str(tmp_path / "snaps")
+    with pytest.raises(InjectedCrash):
+        run(scfg, faults_=FaultPlan(seed=7, serve_crashes=(3,)),
+            snap_dir=snap)
+    eng2 = restore_engine(cfg, params, scfg, snap)
+    assert eng2.step_count <= 3
+    done2 = []
+    _drive(eng2, done2)
+    got = {rid: list(eng2._requests[rid].out_tokens) for rid in baseline}
+    assert got == baseline, "restored speculative run diverged"
+    # Counter sanity survives the restore: conservation still holds for
+    # windows run after the snapshot.
+    rep = eng2.report
+    assert rep.accepted + rep.rejected == rep.drafted
+
+
+def test_deescalation_restores_speculation_length(arch_setup):
+    """Satellite fix: the degraded rung shrinks L (and widens sampling);
+    de-escalation must restore BOTH through the single unwiden edge,
+    transition-recorded — never leaving the engine permanently slow."""
+    cfg, params = arch_setup
+    scfg = ServeConfig(max_batch=1, max_len=48, spec_len=4,
+                       spec_window=8, spec_sinks=2, degraded_spec_len=2)
+    acct = PhaseEnergyAccountant(period=2e-3)
+    sched = ServeScheduler(OverloadPolicy(
+        queue_capacity=8, backpressure_at=2, shed_at=4, widen_at=6))
+    eng = Engine(cfg, params, scfg, accountant=acct, scheduler=sched)
+    prompts = _prompts(cfg, 8, seed=11)
+    with acct:
+        for i in range(8):
+            try:
+                eng.submit(Request(i, prompts[i], max_new_tokens=3,
+                                   priority=i % 3))
+            except Exception:
+                pass
+        done = []
+        done += eng.step()
+        assert eng.scheduler.level == 3 and eng.scheduler.widened
+        # Degraded rung: speculation shrunk AND sampling widened, as one
+        # ladder decision.
+        assert eng._spec_len_now() == 2
+        assert acct.sampling_period == pytest.approx(
+            2e-3 * sched.policy.widen_factor)
+        _drive(eng, done)
+    # One reset path: both knobs restored together on de-escalation.
+    assert not eng.scheduler.widened
+    assert eng._spec_len_now() == 4
+    assert acct.sampling_period == pytest.approx(2e-3)
+    reasons = [t[3] for t in eng.report.transitions]
+    assert any("speculation shrunk" in r for r in reasons)
+    assert any("speculation length restored" in r for r in reasons)
+
+
+def test_degraded_spec_len_none_disables_speculation(arch_setup):
+    """degraded_spec_len=None means the overload response is to stop
+    speculating entirely (drafting is extra work precisely when the
+    host is drowning)."""
+    cfg, params = arch_setup
+    scfg = ServeConfig(max_batch=1, max_len=48, spec_len=4,
+                       spec_window=8, spec_sinks=2)
+    sched = ServeScheduler(OverloadPolicy(
+        queue_capacity=8, backpressure_at=2, shed_at=4, widen_at=6))
+    eng = Engine(cfg, params, scfg, scheduler=sched)
+    prompts = _prompts(cfg, 8, seed=11)
+    for i in range(8):
+        try:
+            eng.submit(Request(i, prompts[i], max_new_tokens=3,
+                               priority=i % 3))
+        except Exception:
+            pass
+    eng.step()
+    assert eng.scheduler.widened
+    assert eng._spec_len_now() == 0
+    done = []
+    _drive(eng, done)
+    assert eng._spec_len_now() == 4
+
+
+# ---------------------------------------------------------------------------
 # Energy fence: a restored accountant resumes behind the spill-epoch
 # fence — re-publishing pre-crash epochs is refused, never doubled.
 # ---------------------------------------------------------------------------
